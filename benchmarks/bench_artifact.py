@@ -1,0 +1,70 @@
+"""Paper Fig. 18/20/21: the 27 artifact pipelines p_i+c_j+m_k — peak load
+under EA / Laius / Camelot, Camelot's allocation detail, and low-load
+resource usage."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core import PipelinePredictor, RTX_2080TI
+from repro.sim import (PipelineSimulator, SimConfig, artifact_pipelines,
+                       camelot, camelot_min_resource, even_allocation,
+                       find_peak_load, laius)
+
+N_DEVICES = 2
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    pipes = artifact_pipelines()
+    names = list(pipes)
+    if quick:
+        names = ["p1+c1+m1", "p2+c2+m2", "p3+c3+m3"]
+    scfg = SimConfig(duration=5.0 if quick else 8.0, warmup=1.0, seed=0)
+    batch = 16
+    gains_ea, gains_la, savings = [], [], []
+    for name in names:
+        pipe = pipes[name]
+        pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI)
+        peaks = {}
+        for policy in ("ea", "laius", "camelot"):
+            if policy == "ea":
+                alloc, comm = even_allocation(pipe, RTX_2080TI, N_DEVICES,
+                                              batch)
+            elif policy == "laius":
+                alloc, comm = laius(pipe, pred, RTX_2080TI, N_DEVICES, batch)
+            else:
+                alloc, comm, res = camelot(pipe, pred, RTX_2080TI, N_DEVICES,
+                                           batch)
+                if not res.feasible or alloc.placement is None:
+                    rows.append((f"fig18/{name}/camelot", 0.0, "infeasible"))
+                    peaks[policy] = 0.0
+                    continue
+                rows.append((f"fig20/{name}", 0.0, ";".join(
+                    f"N={s.n_instances},p={s.quota:.2f}"
+                    for s in alloc.stages)))
+            mk = lambda a=alloc, c=comm: PipelineSimulator(
+                pipe, a, RTX_2080TI, c, scfg)
+            peak, _ = find_peak_load(mk, pipe.qos_target)
+            peaks[policy] = peak
+        rows.append((f"fig18/{name}/camelot", peaks["camelot"],
+                     f"ea={peaks['ea']:.0f} laius={peaks['laius']:.0f}"))
+        gains_ea.append(peaks["camelot"] / max(peaks["ea"], 1e-9) - 1)
+        gains_la.append(peaks["camelot"] / max(peaks["laius"], 1e-9) - 1)
+        # Fig. 21: resource usage at 30% load
+        low = 0.3 * peaks["camelot"]
+        a_mr, c_mr, res = camelot_min_resource(pipe, pred, RTX_2080TI,
+                                               N_DEVICES, batch, load=low)
+        if res.feasible:
+            q = a_mr.total_quota()
+            savings.append(1 - q / pipe.n_stages)
+            rows.append((f"fig21/{name}/quota", q,
+                         f"saving={(savings[-1]) * 100:.0f}%"))
+    n = len(names)
+    rows.append(("fig18/mean_gain_vs_ea",
+                 sum(gains_ea) / n * 100, "percent (paper:44.91)"))
+    rows.append(("fig18/mean_gain_vs_laius",
+                 sum(gains_la) / n * 100, "percent (paper:39.72)"))
+    if savings:
+        rows.append(("fig21/mean_saving",
+                     sum(savings) / len(savings) * 100,
+                     "percent (paper:61.6)"))
+    return rows

@@ -1,0 +1,36 @@
+"""Paper Fig. 11: host-staged vs global-memory communication time vs size,
+both modelled (GPU-scale) and measured live on real arrays (CPU-scale)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core import CommModel, DeviceHandoff, HostStagedChannel, RTX_2080TI
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    cm = CommModel(RTX_2080TI)
+    sizes = [2, 2e3, 2e4, 2e5, 2e6, 2e7, 2e8]
+    for nbytes in sizes:
+        th = cm.host_staged_time(nbytes) * 1e6
+        tg = cm.global_memory_time(nbytes) * 1e6
+        winner = "global-mem" if tg < th else "host"
+        rows.append((f"fig11/model/host/{int(nbytes)}B", th, "modelled"))
+        rows.append((f"fig11/model/globalmem/{int(nbytes)}B", tg,
+                     f"winner={winner}"))
+    rows.append(("fig11/crossover_bytes", cm.crossover_bytes(),
+                 "paper~2e4B"))
+
+    # live: real jax arrays through both mechanisms
+    import jax.numpy as jnp
+    for n in ([1 << 16, 1 << 22] if quick else [1 << 16, 1 << 20, 1 << 24]):
+        arr = jnp.ones((n // 4,), jnp.float32)
+        host = HostStagedChannel()
+        dev = DeviceHandoff()
+        t_host = timeit(lambda: host.send(arr), repeats=5)
+        t_dev = timeit(lambda: dev.send(arr), repeats=5)
+        rows.append((f"fig11/live/host/{n}B", t_host, "D2H+H2D copies"))
+        rows.append((f"fig11/live/globalmem/{n}B", t_dev,
+                     f"speedup={t_host / max(t_dev, 1e-9):.0f}x"))
+    return rows

@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks: XLA impl wall time on CPU (the Pallas twins are
+interpret-mode only here — TPU is the target; this tracks the XLA path that
+the dry-run costs are derived from)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timeit
+from repro.kernels import ops
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+
+    for (b, s, h, kvh, hd) in ([(1, 512, 8, 2, 64)] if quick
+                               else [(1, 512, 8, 2, 64), (2, 1024, 8, 8, 64)]):
+        q = jax.random.normal(ks[0], (b, s, h, hd), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (b, s, kvh, hd), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (b, s, kvh, hd), jnp.bfloat16)
+        f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="xla"))
+        f(q, k, v).block_until_ready()
+        us = timeit(lambda: f(q, k, v).block_until_ready(), repeats=3)
+        flops = 4 * b * s * s * h * hd
+        rows.append((f"kernel/flash_xla/b{b}s{s}h{h}", us,
+                     f"{flops / us * 1e6 / 1e9:.1f}GFLOP/s-cpu"))
+
+    sc = 4096
+    q1 = jax.random.normal(ks[0], (4, 1, 8, 64), jnp.bfloat16)
+    kc = jax.random.normal(ks[1], (4, sc, 2, 64), jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (4, sc, 2, 64), jnp.bfloat16)
+    g = jax.jit(lambda q, k, v: ops.decode_attention(
+        q, k, v, jnp.asarray(sc, jnp.int32), impl="xla"))
+    g(q1, kc, vc).block_until_ready()
+    us = timeit(lambda: g(q1, kc, vc).block_until_ready(), repeats=3)
+    rows.append((f"kernel/decode_xla/sc{sc}", us, "1 token vs 4k cache"))
+
+    da = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 256, 512, 16)))
+    dbx = jax.random.normal(ks[1], (2, 256, 512, 16)) * 0.1
+    h_fn = jax.jit(lambda a, b: ops.ssm_scan(a, b, impl="xla"))
+    h_fn(da, dbx).block_until_ready()
+    us = timeit(lambda: h_fn(da, dbx).block_until_ready(), repeats=3)
+    rows.append(("kernel/ssm_scan_xla/L256d512", us, "chunked assoc scan"))
+
+    bh, l, hd2 = 8, 256, 64
+    qm = jax.random.normal(ks[0], (bh, l, hd2))
+    km = jax.random.normal(ks[1], (bh, l, hd2)) / 8.0
+    vm = jax.random.normal(ks[2], (bh, l, hd2))
+    im = jax.random.normal(ks[0], (bh, l))
+    fm = jax.random.normal(ks[1], (bh, l)) + 2.0
+    c0 = jnp.zeros((bh, hd2, hd2)); n0 = jnp.zeros((bh, hd2))
+    m0 = jnp.full((bh,), -1e30)
+    mf = jax.jit(lambda *a: ops.mlstm_chunk(*a, impl="xla"))
+    mf(qm, km, vm, im, fm, c0, n0, m0)[0].block_until_ready()
+    us = timeit(lambda: mf(qm, km, vm, im, fm, c0, n0, m0)[0]
+                .block_until_ready(), repeats=3)
+    rows.append(("kernel/mlstm_chunk_xla/L256", us, "chunkwise parallel"))
+    return rows

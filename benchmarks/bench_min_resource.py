@@ -1,0 +1,62 @@
+"""Paper Fig. 16 + 17: GPU resource usage at low load (30% of peak) with
+Camelot vs Laius vs per-stage-GPU, and load adaptation across 4 load levels
+including the Camelot-NC ablation (§VIII-D)."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core import PipelinePredictor, RTX_2080TI
+from repro.sim import (PipelineSimulator, SimConfig, camelot,
+                       camelot_min_resource, camelot_suite, find_peak_load,
+                       laius)
+
+N_DEVICES = 2
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    suite = camelot_suite()
+    scfg = SimConfig(duration=6.0 if quick else 10.0, warmup=1.0, seed=0)
+    names = ("img-to-img",) if quick else tuple(suite)
+    batch = 16
+    for pname in names:
+        pipe = suite[pname]
+        pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI)
+        a_cm, c_cm, res_peak = camelot(pipe, pred, RTX_2080TI, N_DEVICES,
+                                       batch)
+        peak = res_peak.objective
+
+        # Fig. 16: resource usage at 30% load; naive = 1 GPU per stage
+        naive_quota = float(pipe.n_stages)
+        low = 0.3 * peak
+        a_mr, c_mr, res_mr = camelot_min_resource(
+            pipe, pred, RTX_2080TI, N_DEVICES, batch, load=low)
+        used = a_mr.total_quota()
+        r = PipelineSimulator(pipe, a_mr, RTX_2080TI, c_mr, scfg).run(low)
+        rows.append((f"fig16/{pname}/camelot_quota", used,
+                     f"saving={(1 - used / naive_quota) * 100:.0f}% "
+                     f"(paper:46.5) p99norm={r.p99 / pipe.qos_target:.2f}"))
+        # laius comparison point: balanced quotas, no instance tuning
+        a_la, c_la = laius(pipe, pred, RTX_2080TI, N_DEVICES, batch)
+        rows.append((f"fig16/{pname}/laius_quota",
+                     a_la.total_quota(), "no per-load scaling"))
+
+        # Fig. 17: four load levels + Camelot-NC p99
+        if not quick:
+            for i, frac in enumerate((0.15, 0.3, 0.5, 0.7), start=1):
+                load = frac * peak
+                a_l, c_l, res_l = camelot_min_resource(
+                    pipe, pred, RTX_2080TI, N_DEVICES, batch, load=load)
+                r = PipelineSimulator(pipe, a_l, RTX_2080TI, c_l,
+                                      scfg).run(load)
+                rows.append((f"fig17/{pname}/L{i}/quota",
+                             a_l.total_quota(),
+                             f"p99norm={r.p99 / pipe.qos_target:.2f}"))
+                a_nc, c_nc, _ = camelot_min_resource(
+                    pipe, pred, RTX_2080TI, N_DEVICES, batch, load=load,
+                    bandwidth_constraint=False)
+                rnc = PipelineSimulator(pipe, a_nc, RTX_2080TI, c_nc,
+                                        scfg).run(load)
+                rows.append((f"fig17/{pname}/L{i}/nc_p99norm",
+                             rnc.p99 / pipe.qos_target * 100,
+                             "percent of QoS (NC ablation)"))
+    return rows

@@ -1,0 +1,39 @@
+"""Paper §VIII-G: Camelot's runtime overheads — SA solve time (paper: ~5 ms),
+per-prediction time (<1 ms), comm-channel setup (~1 ms), offline profiling."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Row, timeit
+from repro.core import (CamelotAllocator, DeviceHandoff, PipelinePredictor,
+                        RTX_2080TI, SAConfig, collect_samples)
+from repro.sim.workloads import camelot_suite
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    pipe = camelot_suite()["img-to-img"]
+    pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI)
+
+    alloc = CamelotAllocator(pipe, pred, RTX_2080TI, 2,
+                             sa=SAConfig(iterations=2000, seed=0))
+    res = alloc.solve_max_load(16)
+    rows.append(("overhead/sa_solve", res.solve_time * 1e6,
+                 f"{res.iterations}iter (paper:~5ms)"))
+
+    us = timeit(lambda: pred.stages[0].duration(16, 0.5), repeats=20)
+    rows.append(("overhead/dt_predict", us, "paper:<1ms"))
+
+    dh = DeviceHandoff()
+    t0 = time.perf_counter()
+    dh.setup()
+    rows.append(("overhead/comm_setup",
+                 (time.perf_counter() - t0) * 1e6, "paper:~1ms on GPU"))
+
+    t0 = time.perf_counter()
+    collect_samples(pipe.stages[0], RTX_2080TI, batches=(1, 4, 16),
+                    repeats=1)
+    rows.append(("overhead/profiling_3batches",
+                 (time.perf_counter() - t0) * 1e6,
+                 "offline, paper: <1 day full suite"))
+    return rows

@@ -1,0 +1,18 @@
+"""Paper Fig. 9: PCIe transfer time vs number of concurrent PCIe-intensive
+instances — saturation beyond ⌊12160/3150⌋ = 3 streams."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core import CommModel, RTX_2080TI
+
+
+def run(quick: bool = False) -> list[Row]:
+    cm = CommModel(RTX_2080TI)
+    nbytes = 5e9          # the paper's 5 GB copy benchmark
+    rows: list[Row] = []
+    base = cm.host_staged_time(nbytes, concurrent=1)
+    for n in range(1, 9):
+        t = cm.host_staged_time(nbytes, concurrent=n)
+        rows.append((f"fig9/streams={n}", t * 1e6,
+                     f"slowdown={t / base:.2f}x"))
+    return rows

@@ -1,0 +1,60 @@
+"""Paper Fig. 14 (+15): supported peak load of the four suite benchmarks
+under EA / Laius / Camelot across batch sizes, with the 99%-ile latency held
+at the QoS target; also emits Camelot's chosen allocation (Fig. 15)."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core import PipelinePredictor, RTX_2080TI
+from repro.sim import (PipelineSimulator, SimConfig, camelot,
+                       camelot_suite, even_allocation, find_peak_load, laius)
+
+N_DEVICES = 2
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    suite = camelot_suite()
+    scfg = SimConfig(duration=6.0 if quick else 12.0, warmup=1.0, seed=0)
+    batches = (16,) if quick else (4, 8, 16, 32)
+    names = ("img-to-img", "text-to-text") if quick else tuple(suite)
+    for pname in names:
+        pipe = suite[pname]
+        pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI)
+        for batch in batches:
+            peaks = {}
+            for policy in ("ea", "laius", "camelot"):
+                if policy == "ea":
+                    alloc, comm = even_allocation(pipe, RTX_2080TI,
+                                                  N_DEVICES, batch)
+                elif policy == "laius":
+                    alloc, comm = laius(pipe, pred, RTX_2080TI, N_DEVICES,
+                                        batch)
+                else:
+                    alloc, comm, res = camelot(pipe, pred, RTX_2080TI,
+                                               N_DEVICES, batch)
+                    if not res.feasible or alloc.placement is None:
+                        # batch too large for the QoS budget: report 0
+                        rows.append((f"fig14/{pname}/b{batch}/camelot", 0.0,
+                                     "infeasible at this batch size"))
+                        peaks[policy] = 0.0
+                        continue
+                mk = lambda a=alloc, c=comm: PipelineSimulator(
+                    pipe, a, RTX_2080TI, c, scfg)
+                peak, res = find_peak_load(mk, pipe.qos_target)
+                peaks[policy] = peak
+                rows.append((f"fig14/{pname}/b{batch}/{policy}", peak,
+                             f"p99norm={res.normalized_p99:.2f}"))
+                if policy == "camelot":
+                    detail = ";".join(
+                        f"N={s.n_instances} p={s.quota:.2f}"
+                        for s in alloc.stages)
+                    rows.append((f"fig15/{pname}/b{batch}", 0.0, detail))
+            rows.append((
+                f"fig14/{pname}/b{batch}/gain_vs_ea",
+                (peaks["camelot"] / max(peaks["ea"], 1e-9) - 1) * 100,
+                "percent (paper:12-73.9)"))
+            rows.append((
+                f"fig14/{pname}/b{batch}/gain_vs_laius",
+                (peaks["camelot"] / max(peaks["laius"], 1e-9) - 1) * 100,
+                "percent (paper:10-64.5)"))
+    return rows

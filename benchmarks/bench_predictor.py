@@ -1,0 +1,34 @@
+"""Paper Fig. 12: LR vs DT vs RF prediction error for duration / bandwidth /
+throughput per microservice, plus prediction latency (paper: DT < 1 ms)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Row
+from repro.core import PipelinePredictor, RTX_2080TI
+from repro.sim.workloads import camelot_suite
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    suite = camelot_suite()
+    names = ["img-to-img"] if quick else list(suite)
+    for pname in names:
+        pipe = suite[pname]
+        for kind in ("lr", "dt", "rf"):
+            pred = PipelinePredictor.from_profiles(
+                pipe.stages, RTX_2080TI, model_kind=kind, seed=0)
+            for sp in pred.stages:
+                for key, err in sp.fit_errors.items():
+                    rows.append((f"fig12/{pname}/{sp.name}/{kind}/{key}",
+                                 err * 100, "MAPE%"))
+        # prediction latency of the chosen model (DT)
+        pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI,
+                                               model_kind="dt")
+        t0 = time.perf_counter()
+        for _ in range(100):
+            pred.stages[0].duration(16, 0.5)
+        us = (time.perf_counter() - t0) / 100 * 1e6
+        rows.append((f"fig12/{pname}/dt_predict_latency", us,
+                     "paper:<1ms"))
+    return rows

@@ -1,0 +1,44 @@
+"""Roofline table: reads the dry-run artifacts (experiments/dryrun/*.json)
+and emits the three terms + dominant bottleneck per (arch × shape × mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    base = os.path.join(os.path.dirname(__file__), "..", "experiments")
+    any_files = False
+    for variant, sub in (("baseline", "dryrun"), ("optimized", "dryrun_opt")):
+        files = sorted(glob.glob(os.path.join(base, sub, "*.json")))
+        n_ok = 0
+        for path in files:
+            any_files = True
+            rec = json.load(open(path))
+            tag = f"{variant}/{rec['arch']}/{rec['shape']}/{rec.get('mesh', '?')}"
+            if rec.get("status") != "ok":
+                rows.append((f"roofline/{tag}", 0.0,
+                             f"status={rec.get('status')}"))
+                continue
+            n_ok += 1
+            r = rec["roofline"]
+            mem = rec["memory_per_device"]["total_bytes"] / 1e9
+            rows.append((
+                f"roofline/{tag}",
+                r["bound_s"] * 1e6,
+                f"dom={r['dominant']} comp={r['compute_s']:.3f}s "
+                f"mem={r['memory_s']:.3f}s coll={r['collective_s']:.3f}s "
+                f"mfu_ub={r['mfu_upper_bound']:.2f} "
+                f"useful={r['model_flops_ratio']:.2f} memGB={mem:.1f} "
+                f"fits={rec.get('fits_hbm_resident', '?')}"))
+        if files:
+            rows.append((f"roofline/{variant}/combos_ok", float(n_ok),
+                         "of 80 (40×2 meshes)"))
+    if not any_files:
+        return [("roofline/NO_ARTIFACTS", 0.0,
+                 "run: python -m repro.launch.dryrun --all")]
+    return rows

@@ -1,0 +1,33 @@
+"""Paper Fig. 19: large-scale evaluation (DGX-2, 16 V100s) — peak load under
+EA vs Camelot on the 16-device machine."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core import PipelinePredictor, V100
+from repro.sim import (PipelineSimulator, SimConfig, camelot, camelot_suite,
+                       even_allocation, find_peak_load)
+
+N_DEVICES = 16
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    suite = camelot_suite()
+    names = ("img-to-img",) if quick else tuple(suite)
+    scfg = SimConfig(duration=6.0 if quick else 10.0, warmup=1.0, seed=0,
+                     max_queries=120_000)
+    batch = 16
+    for pname in names:
+        pipe = suite[pname]
+        pred = PipelinePredictor.from_profiles(pipe.stages, V100)
+        a_ea, c_ea = even_allocation(pipe, V100, N_DEVICES, batch)
+        a_cm, c_cm, _ = camelot(pipe, pred, V100, N_DEVICES, batch)
+        p_ea, _ = find_peak_load(lambda: PipelineSimulator(
+            pipe, a_ea, V100, c_ea, scfg), pipe.qos_target, hi=65536)
+        p_cm, r = find_peak_load(lambda: PipelineSimulator(
+            pipe, a_cm, V100, c_cm, scfg), pipe.qos_target, hi=65536)
+        rows.append((f"fig19/{pname}/ea", p_ea, "16xV100"))
+        rows.append((f"fig19/{pname}/camelot", p_cm,
+                     f"gain={(p_cm / max(p_ea, 1e-9) - 1) * 100:.0f}% "
+                     f"(paper:50.1 avg) p99norm={r.normalized_p99:.2f}"))
+    return rows

@@ -1,0 +1,26 @@
+"""Shared benchmark plumbing.  Each bench module exposes
+``run(quick: bool) -> list[tuple[name, us_per_call, derived]]``."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def timeit(fn: Callable, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall time of fn() in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,63 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` runs a reduced
+sweep; default runs everything (matches the paper's evaluation section).
+
+  fig9   — PCIe stream contention            (§VI-A, Fig. 9)
+  fig11  — comm mechanism comparison         (§VI-B, Fig. 11)
+  fig12  — predictor accuracy LR/DT/RF       (§VII-A, Fig. 12)
+  fig14  — peak load EA/Laius/Camelot (+15)  (§VIII-A, Figs. 14-15)
+  fig16  — min-resource at low load (+17/NC) (§VIII-B/C/D, Figs. 16-17)
+  fig18  — 27 artifact pipelines (+20/21)    (§VIII-E, Figs. 18/20/21)
+  fig19  — large scale, 16 devices           (§VIII-F, Fig. 19)
+  overhead — SA/predict/comm-setup costs     (§VIII-G)
+  diurnal — online load-tracking runtime     (beyond paper)
+  roofline — dry-run roofline table          (deliverable g)
+  kernel — model-kernel microbenchmarks
+"""
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_artifact, bench_comm, bench_diurnal,
+                        bench_kernels, bench_min_resource,
+                        bench_overhead, bench_pcie, bench_peak_load,
+                        bench_predictor, bench_roofline, bench_scale)
+from benchmarks.common import emit
+
+MODULES = {
+    "fig9": bench_pcie,
+    "fig11": bench_comm,
+    "fig12": bench_predictor,
+    "fig14": bench_peak_load,
+    "fig16": bench_min_resource,
+    "fig18": bench_artifact,
+    "fig19": bench_scale,
+    "overhead": bench_overhead,
+    "diurnal": bench_diurnal,
+    "roofline": bench_roofline,
+    "kernel": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", choices=list(MODULES), default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        try:
+            rows = MODULES[name].run(quick=args.quick)
+        except Exception as e:   # noqa: BLE001 — report, keep going
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            continue
+        emit(rows)
+        print(f"{name}/_elapsed,{(time.time() - t0) * 1e6:.0f},seconds="
+              f"{time.time() - t0:.1f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Artifact-benchmark study (paper §VIII-E): build p_i+c_j+m_k pipelines,
+allocate with Camelot vs EA, and report simulated peak loads.
+
+Run:  PYTHONPATH=src python examples/artifact_suite.py [--full]
+"""
+import argparse
+
+from repro.core import PipelinePredictor, RTX_2080TI
+from repro.sim import (PipelineSimulator, SimConfig, artifact_pipelines,
+                       camelot, even_allocation, find_peak_load)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="all 27 pipelines")
+    args = ap.parse_args()
+
+    pipes = artifact_pipelines()
+    names = list(pipes) if args.full else \
+        ["p1+c1+m1", "p1+c3+m1", "p3+c1+m2", "p2+c2+m2"]
+    scfg = SimConfig(duration=8.0, warmup=1.0, seed=0)
+    print(f"{'pipeline':12s} {'EA qps':>9s} {'Camelot qps':>12s} {'gain':>7s}"
+          f"  allocation")
+    gains = []
+    for name in names:
+        pipe = pipes[name]
+        pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI)
+        a_ea, c_ea = even_allocation(pipe, RTX_2080TI, 2, 16)
+        a_cm, c_cm, res = camelot(pipe, pred, RTX_2080TI, 2, 16)
+        if not res.feasible:
+            print(f"{name:12s}  infeasible")
+            continue
+        p_ea, _ = find_peak_load(lambda: PipelineSimulator(
+            pipe, a_ea, RTX_2080TI, c_ea, scfg), pipe.qos_target)
+        p_cm, _ = find_peak_load(lambda: PipelineSimulator(
+            pipe, a_cm, RTX_2080TI, c_cm, scfg), pipe.qos_target)
+        gain = p_cm / max(p_ea, 1e-9) - 1
+        gains.append(gain)
+        detail = " ".join(f"({s.n_instances}x{s.quota:.2f})"
+                          for s in a_cm.stages)
+        print(f"{name:12s} {p_ea:9.0f} {p_cm:12.0f} {gain * 100:6.0f}%  "
+              f"{detail}")
+    if gains:
+        print(f"\nmean gain vs EA: {sum(gains) / len(gains) * 100:.1f}% "
+              f"(paper: 44.91% over 27 pipelines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: the full Camelot loop in one page.
+
+1. profile two REAL (reduced) models on the live engine,
+2. fit the per-stage performance predictor (decision trees),
+3. solve the two allocation policies (max-load / min-resource),
+4. validate the allocation in the datacenter simulator.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (CamelotAllocator, PipelinePredictor, RTX_2080TI,
+                        SAConfig, profile_from_engine)
+from repro.core.types import Pipeline
+from repro.serving import ModelStageServer
+from repro.sim import PipelineSimulator, SimConfig, find_peak_load
+from repro.sim.baselines import camelot
+
+
+def main():
+    # -- 1. live profiling (paper: nvprof offline profiling) ------------
+    print("== profiling reduced models on the live engine ==")
+    stages = [ModelStageServer("summarize", "qwen3-0.6b", seq_len=16),
+              ModelStageServer("translate", "qwen1.5-0.5b", seq_len=16)]
+    profiles = []
+    for st in stages:
+        timings = st.profile_stage_timings(batches=(1, 2, 4), repeats=2)
+        print(f"  {st.name}: " + ", ".join(
+            f"b={b}:{t * 1e3:.1f}ms" for b, t in timings))
+        profiles.append(profile_from_engine(
+            st.name, timings, weights_bytes=1.2e9, act_bytes_per_query=2e7,
+            device=RTX_2080TI, host_bytes_per_query=2e6))
+    pipeline = Pipeline("quickstart", profiles, qos_target=0.4)
+
+    # -- 2. predictor ----------------------------------------------------
+    pred = PipelinePredictor.from_profiles(profiles, RTX_2080TI)
+    for sp in pred.stages:
+        print(f"  predictor[{sp.name}] holdout MAPE: " + ", ".join(
+            f"{k}={v * 100:.1f}%" for k, v in sp.fit_errors.items()))
+
+    # -- 3. allocation ---------------------------------------------------
+    print("== solving allocations (2 devices) ==")
+    alloc = CamelotAllocator(pipeline, pred, RTX_2080TI, n_devices=2,
+                             sa=SAConfig(iterations=1500, seed=0))
+    peak = alloc.solve_max_load(batch=8)
+    print(f"  max-load: {peak.objective:.0f} qps predicted, alloc="
+          f"{[(s.n_instances, s.quota) for s in peak.allocation.stages]} "
+          f"({peak.solve_time * 1e3:.0f} ms solve)")
+    low = alloc.solve_min_resource(batch=8, load=peak.objective * 0.3)
+    print(f"  min-resource @30% load: total quota "
+          f"{low.allocation.total_quota():.2f} GPUs "
+          f"(peak used {peak.allocation.total_quota():.2f})")
+
+    # -- 4. simulate -----------------------------------------------------
+    print("== validating in the simulator ==")
+    a, comm, _ = camelot(pipeline, pred, RTX_2080TI, 2, 8)
+    mk = lambda: PipelineSimulator(pipeline, a, RTX_2080TI, comm,
+                                   SimConfig(duration=8.0, warmup=1.0))
+    qps, res = find_peak_load(mk, pipeline.qos_target)
+    print(f"  simulated peak {qps:.0f} qps at p99/QoS = "
+          f"{res.normalized_p99:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Train a reduced model for a few hundred steps on CPU with the full
+substrate: synthetic data pipeline, AdamW + cosine schedule, periodic
+checkpointing, resume.
+
+Run:  PYTHONPATH=src python examples/train_small.py --arch qwen3-0.6b \
+          --steps 200 [--resume]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.training import (AdamWConfig, CheckpointManager, DataConfig,
+                            init_adamw, make_batch, make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    print(f"training {cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab_size}")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = init_adamw(params)
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    if args.resume and mgr.latest_step() is not None:
+        start = mgr.latest_step()
+        params, opt = mgr.restore(start, params, opt)
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, AdamWConfig(
+        lr=1e-3, warmup_steps=20, total_steps=args.steps)))
+    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch)
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = make_batch(cfg, dcfg, step)
+        params, opt, metrics = step_fn(params, opt, batch)
+        if step % 20 == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} "
+                  f"({dt / max(step - start, 1):.2f} s/step)")
+        if step > start and step % args.ckpt_every == 0:
+            path = mgr.save(step, params, opt)
+            print(f"  checkpoint -> {path}")
+    mgr.save(args.steps, params, opt)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

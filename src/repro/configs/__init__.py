@@ -1,0 +1,20 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    TPU_V5E,
+    HardwareSpec,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    active_param_count,
+    all_configs,
+    get_config,
+    param_count,
+    register,
+)
+
+__all__ = [
+    "ARCH_IDS", "INPUT_SHAPES", "TPU_V5E", "HardwareSpec", "InputShape",
+    "ModelConfig", "MoEConfig", "active_param_count", "all_configs",
+    "get_config", "param_count", "register",
+]

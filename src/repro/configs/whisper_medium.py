@@ -1,0 +1,30 @@
+"""Whisper-medium — encoder-decoder ASR backbone [arXiv:2212.04356].
+
+Assigned: 24L d_model=1024 16H (kv=16 = MHA) d_ff=4096 vocab=51865.
+Enc-dec: 24 encoder + 24 decoder layers.  The mel-spectrogram + conv
+frontend is a STUB per the assignment — input_specs() provides precomputed
+frame embeddings of shape (batch, 1500, d_model).  Learned positional
+embeddings, no RoPE, pre-LN, dense GELU FFN (modelled with the shared swiglu
+mlp sized to the assigned d_ff).
+"""
+from repro.configs.base import ModelConfig, CROSS, register
+
+register(ModelConfig(
+    name="whisper-medium",
+    arch_type="audio",
+    source="arXiv:2212.04356 (Whisper), medium config",
+    num_layers=24,                  # decoder layers
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    block_pattern=(CROSS,),
+    mlp_pattern=("dense",),
+    rope=False,
+    learned_pos_emb=True,
+    encoder_decoder=True,
+    num_encoder_layers=24,
+    encoder_seq_len=1500,           # 30 s audio -> 1500 frames post-conv
+    max_position_embeddings=524_288,  # window-decode variant for long_500k
+))

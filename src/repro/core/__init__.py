@@ -1,0 +1,30 @@
+# Camelot: the paper's primary contribution — a runtime system that manages
+# microservice pipelines on spatially-shared accelerators.
+#   predictor.py  — per-microservice performance models (LR/DT/RF, §VII-A)
+#   allocator.py  — SA-based contention-aware allocation (Eq. 1-3, §VII-B/C)
+#   deployment.py — multi-device packing, memory-capacity first (§VII-D)
+#   comm.py       — global-memory vs host-staged communication (§VI)
+#   qos.py        — tail-latency tracking
+from repro.core.allocator import CamelotAllocator, SAConfig, SolveResult
+from repro.core.comm import CommModel, DeviceHandoff, HostStagedChannel
+from repro.core.deployment import pack_instances, placement_summary
+from repro.core.mlmodels import (DecisionTreeRegressor, LinearRegression,
+                                 RandomForestRegressor,
+                                 mean_absolute_percentage_error)
+from repro.core.predictor import (PipelinePredictor, StagePredictor,
+                                  collect_samples, profile_from_engine)
+from repro.core.qos import QoSTracker
+from repro.core.types import (RTX_2080TI, TPU_V5E_DEV, V100, Allocation,
+                              DeviceSpec, MicroserviceProfile, Pipeline,
+                              Placement, StageAlloc)
+
+__all__ = [
+    "CamelotAllocator", "SAConfig", "SolveResult", "CommModel",
+    "DeviceHandoff", "HostStagedChannel", "pack_instances",
+    "placement_summary", "DecisionTreeRegressor", "LinearRegression",
+    "RandomForestRegressor", "mean_absolute_percentage_error",
+    "PipelinePredictor", "StagePredictor", "collect_samples",
+    "profile_from_engine", "QoSTracker", "RTX_2080TI", "TPU_V5E_DEV", "V100",
+    "Allocation", "DeviceSpec", "MicroserviceProfile", "Pipeline",
+    "Placement", "StageAlloc",
+]

@@ -1,0 +1,268 @@
+"""Contention-aware resource allocation (paper §VII-B/C).
+
+Two policies, both solved by simulated annealing over the paper's decision
+vector V = [N_1..N_n, p_1..p_n]:
+
+  * ``solve_max_load``     — maximise min_i N_i·f(p_i) (Eq. 1): the peak load
+    of the pipeline is its slowest stage's aggregate throughput.
+  * ``solve_min_resource`` — Eq. 2 sizes the device count
+    y = max(ΣC/G, ΣM/F); Eq. 3 then minimises Σ N_i·p_i at the given load.
+
+Constraints (Table II): total compute C·R, instance count C·I (MPS limit),
+aggregate global-memory bandwidth C·BW, global-memory capacity C·F
+(weights shared between same-stage co-located instances are handled by the
+deployment packer), and end-to-end QoS including inter-stage communication
+time under the chosen communication mechanism.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.comm import CommModel
+from repro.core.deployment import pack_instances
+from repro.core.predictor import PipelinePredictor
+from repro.core.types import (Allocation, DeviceSpec, Pipeline, Placement,
+                              StageAlloc)
+
+QUOTA_STEP = 0.05
+QUOTA_MIN = 0.05
+
+
+@dataclass
+class SAConfig:
+    iterations: int = 2000
+    t0: float = 1.0
+    t_end: float = 1e-3
+    seed: int = 0
+    # disable the bandwidth constraint => Camelot-NC ablation (§VIII-D)
+    bandwidth_constraint: bool = True
+    # fraction of the QoS budget reserved for batching wait (the runtime
+    # dispatches partial batches after ~0.25×QoS) and queueing margin; the
+    # paper's Constraint-5 only sums stage durations — without this slack the
+    # solver picks zero-headroom points that violate p99 under load
+    qos_slack: float = 0.45
+
+
+def _ffd_fits(quotas: Sequence[float], n_devices: int) -> bool:
+    """First-fit-decreasing feasibility: can these per-instance quotas be
+    packed into ``n_devices`` bins of capacity 1.0?  (Aggregate Σ N·p ≤ C·R
+    is necessary but not sufficient — paper's deployment step, §VII-D.)"""
+    bins = [1.0 + 1e-9] * n_devices
+    for q in sorted(quotas, reverse=True):
+        for i, free in enumerate(bins):
+            if free >= q:
+                bins[i] = free - q
+                break
+        else:
+            return False
+    return True
+
+
+@dataclass
+class SolveResult:
+    allocation: Allocation
+    objective: float
+    feasible: bool
+    solve_time: float
+    iterations: int
+    history: List[float] = field(default_factory=list)
+
+
+class CamelotAllocator:
+    def __init__(self, pipeline: Pipeline, predictor: PipelinePredictor,
+                 device: DeviceSpec, n_devices: int,
+                 comm: Optional[CommModel] = None,
+                 sa: SAConfig = SAConfig()):
+        self.pipeline = pipeline
+        self.predictor = predictor
+        self.device = device
+        self.n_devices = n_devices
+        self.comm = comm or CommModel(device)
+        self.sa = sa
+
+    # ------------------------------------------------------------------
+    # Constraint / objective evaluation for a candidate V
+    # ------------------------------------------------------------------
+
+    def _eval(self, ns: np.ndarray, ps: np.ndarray, batch: int,
+              n_devices: int):
+        """Returns (min_throughput, total_quota, latency, feasible)."""
+        dev = self.device
+        n = len(ns)
+        stages = self.predictor.stages
+        durations = np.array([stages[i].duration(batch, ps[i])
+                              for i in range(n)])
+        thpts = np.array([ns[i] * stages[i].throughput(batch, ps[i])
+                          for i in range(n)])
+        bws = np.array([ns[i] * stages[i].bandwidth(batch, ps[i])
+                        for i in range(n)])
+        foots = np.array([stages[i].footprint(batch) for i in range(n)])
+
+        # Constraint-1: Σ N_i p_i <= C·R, refined to per-device packability
+        if float(ns @ ps) > n_devices * 1.0 + 1e-9:
+            return None
+        quotas = [ps[i] for i in range(n) for _ in range(int(ns[i]))]
+        if not _ffd_fits(quotas, n_devices):
+            return None
+        # Constraint-2: Σ N_i <= C·I
+        if int(ns.sum()) > n_devices * dev.max_instances:
+            return None
+        # Constraint-3: Σ N_i b(p_i) <= C·BW  (Camelot-NC disables this)
+        if self.sa.bandwidth_constraint and \
+                float(bws.sum()) > n_devices * dev.mem_bandwidth:
+            return None
+        # Constraint-4: Σ N_i M(i, s) <= C·F — refined by the packer, which
+        # shares same-stage weights; use the aggregate bound here.
+        total_mem = float(sum(ns[i] * foots[i] for i in range(n)))
+        if total_mem > n_devices * dev.mem_capacity:
+            return None
+        # Constraint-5 (QoS): Σ duration_i + Σ comm_i <= QoS target.
+        # Communication uses the global-memory mechanism when adjacent
+        # stages can co-locate (quota headroom on one device), else host.
+        comm_t = 0.0
+        for i in range(n - 1):
+            colocatable = (ps[i] + ps[i + 1]) <= 1.0 + 1e-9
+            comm_t += self.comm.transfer_time(
+                self._edge_bytes(i, batch),
+                same_device=colocatable and self.comm.global_memory_enabled)
+        latency = float(durations.sum()) + comm_t
+        if latency > self.pipeline.qos_target * (1 - self.sa.qos_slack):
+            return None
+        return float(thpts.min()), float(ns @ ps), latency
+
+    def _edge_bytes(self, i: int, batch: int) -> float:
+        """Bytes passed from stage i to stage i+1 per batch."""
+        prof = self.pipeline.stages[i]
+        return prof.host_bytes_per_query * batch * 0.5 or 1e6 * batch
+
+    # ------------------------------------------------------------------
+    # Simulated annealing core (paper §VII-C description)
+    # ------------------------------------------------------------------
+
+    def _anneal(self, batch: int, n_devices: int, objective: str,
+                required_load: Optional[float] = None) -> SolveResult:
+        t_start = time.perf_counter()
+        rng = np.random.default_rng(self.sa.seed)
+        n = self.pipeline.n_stages
+        sa = self.sa
+
+        # initial state: even allocation, one instance per stage
+        ns = np.ones(n, dtype=np.int64)
+        ps = np.full(n, min(1.0, n_devices / n), dtype=np.float64)
+        ps = np.clip(np.round(ps / QUOTA_STEP) * QUOTA_STEP, QUOTA_MIN, 1.0)
+
+        def score(ev):
+            if ev is None:
+                return None
+            thpt, quota, lat = ev
+            if objective == "max_load":
+                return thpt
+            # min_resource: must still meet the required load
+            if required_load is not None and thpt < required_load:
+                return None
+            return -quota
+
+        best_v = (ns.copy(), ps.copy())
+        cur_ev = self._eval(ns, ps, batch, n_devices)
+        cur_score = score(cur_ev)
+        best_score = cur_score if cur_score is not None else -math.inf
+        history = []
+
+        max_inst = n_devices * self.device.max_instances
+        for it in range(sa.iterations):
+            temp = sa.t0 * (sa.t_end / sa.t0) ** (it / max(sa.iterations - 1, 1))
+            cand_ns, cand_ps = ns.copy(), ps.copy()
+            i = int(rng.integers(n))
+            # random move in one direction (paper §VII-C), plus two compound
+            # scale-out/in moves that keep the total quota roughly constant
+            # (otherwise quota-saturated states can only escape downhill)
+            move = rng.integers(6)
+            if move == 0:
+                cand_ns[i] = min(cand_ns[i] + 1, max_inst)
+            elif move == 1:
+                cand_ns[i] = max(cand_ns[i] - 1, 1)
+            elif move == 2:
+                cand_ps[i] = min(round(cand_ps[i] + QUOTA_STEP, 4), 1.0)
+            elif move == 3:
+                cand_ps[i] = max(round(cand_ps[i] - QUOTA_STEP, 4), QUOTA_MIN)
+            elif move == 4:
+                # scale out: one more, proportionally smaller instances
+                cand_ns[i] = min(cand_ns[i] + 1, max_inst)
+                new_p = ps[i] * ns[i] / cand_ns[i]
+                cand_ps[i] = max(round(new_p / QUOTA_STEP) * QUOTA_STEP,
+                                 QUOTA_MIN)
+            else:
+                # scale in: one fewer, proportionally larger instances
+                cand_ns[i] = max(cand_ns[i] - 1, 1)
+                new_p = ps[i] * ns[i] / cand_ns[i]
+                cand_ps[i] = min(round(new_p / QUOTA_STEP) * QUOTA_STEP, 1.0)
+            ev = self._eval(cand_ns, cand_ps, batch, n_devices)
+            s = score(ev)
+            if s is None:
+                continue
+            accept = (cur_score is None or s >= cur_score
+                      or rng.random() < math.exp(
+                          min((s - cur_score) / max(temp * abs(cur_score)
+                                                    + 1e-12, 1e-12), 0.0)))
+            if accept:
+                ns, ps, cur_score, cur_ev = cand_ns, cand_ps, s, ev
+            if cur_score is not None and cur_score > best_score:
+                best_score, best_v = cur_score, (ns.copy(), ps.copy())
+            history.append(best_score)
+
+        ns, ps = best_v
+        ev = self._eval(ns, ps, batch, n_devices)
+        feasible = ev is not None
+        alloc = Allocation(
+            stages=[StageAlloc(int(ns[i]), float(ps[i]), batch)
+                    for i in range(n)],
+            predicted_min_throughput=ev[0] if feasible else 0.0,
+            predicted_latency=ev[2] if feasible else float("inf"))
+        if feasible:
+            alloc.placement = pack_instances(
+                alloc, self.pipeline, self.predictor, self.device, n_devices)
+            feasible = alloc.placement is not None
+        return SolveResult(allocation=alloc,
+                           objective=best_score if feasible else -math.inf,
+                           feasible=feasible,
+                           solve_time=time.perf_counter() - t_start,
+                           iterations=sa.iterations, history=history)
+
+    # ------------------------------------------------------------------
+    # Public policies
+    # ------------------------------------------------------------------
+
+    def solve_max_load(self, batch: int) -> SolveResult:
+        """Case 1 (Eq. 1): maximise the peak supported load."""
+        return self._anneal(batch, self.n_devices, "max_load")
+
+    def min_devices(self, batch: int, load: float) -> int:
+        """Eq. 2: y = max(ΣC(i,s)/G, ΣM(i,s)/F) scaled to the target load."""
+        dev = self.device
+        n = self.pipeline.n_stages
+        qps_per_batch = [self.predictor.stages[i].throughput(batch, 1.0)
+                         for i in range(n)]
+        # FLOP/s demand at `load` qps across stages
+        flops_demand = sum(self.predictor.stages[i].flops(batch) / batch
+                           * load for i in range(n))
+        mem_demand = sum(self.predictor.stages[i].footprint(batch)
+                         for i in range(n))
+        y = max(flops_demand / dev.peak_flops,
+                mem_demand / dev.mem_capacity)
+        return max(1, int(math.ceil(y - 1e-9)))
+
+    def solve_min_resource(self, batch: int, load: float) -> SolveResult:
+        """Case 2 (Eq. 2 + Eq. 3): minimise resource usage at ``load`` qps."""
+        y = self.min_devices(batch, load)
+        while y <= self.n_devices:
+            res = self._anneal(batch, y, "min_resource", required_load=load)
+            if res.feasible:
+                return res
+            y += 1   # infeasible at y devices: grow (Eq. 2 is a lower bound)
+        return self._anneal(batch, self.n_devices, "min_resource",
+                            required_load=load)

@@ -1,0 +1,108 @@
+"""Inter-microservice communication (paper §VI).
+
+Two mechanisms:
+  * host-staged (default on GPUs): device→host→device over the PCIe link,
+    with bandwidth-sharing contention — a single pinned-memory stream can
+    consume the whole link; ⌊12160/3150⌋ = 3 pageable streams saturate it
+    (paper Fig. 9).
+  * global-memory (Camelot): producer passes an 8-byte handle (CUDA IPC);
+    consumer maps the buffer — no PCIe traffic, small fixed overhead, so tiny
+    transfers (< ~0.02 MB, paper Fig. 11) are better off host-staged.
+
+TPU adaptation (DESIGN.md §2): "same GPU" → "same slice" (in-HBM hand-off of
+the output jax.Array), cross-slice same-pod → ICI copy, cross-pod → DCN/host.
+``transfer_time`` exposes the model; ``DeviceHandoff``/``HostStagedChannel``
+are the *live* implementations used by the real serving engine.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.types import DeviceSpec
+
+
+@dataclass
+class CommModel:
+    device: DeviceSpec
+    global_memory_enabled: bool = True
+    ici_bandwidth: float = 50e9        # cross-slice (TPU) B/s
+    ici_latency: float = 2e-6
+
+    def host_staged_time(self, nbytes: float, concurrent: int = 1) -> float:
+        """Two PCIe copies (D2H + H2D) with ``concurrent`` streams sharing
+        the link."""
+        dev = self.device
+        per_stream = min(dev.host_link_stream,
+                         dev.host_link_total / max(concurrent, 1))
+        return 2 * (dev.host_link_latency + nbytes / per_stream)
+
+    def global_memory_time(self, nbytes: float) -> float:
+        """Handle pass + map; data never moves."""
+        return self.device.ipc_latency
+
+    def ici_time(self, nbytes: float) -> float:
+        return self.ici_latency + nbytes / self.ici_bandwidth
+
+    def transfer_time(self, nbytes: float, same_device: bool,
+                      concurrent: int = 1, cross_pod: bool = False) -> float:
+        if same_device and self.global_memory_enabled:
+            # Camelot picks the cheaper mechanism per edge (Fig. 11 crossover)
+            return min(self.global_memory_time(nbytes),
+                       self.host_staged_time(nbytes, concurrent))
+        if cross_pod or not self.global_memory_enabled:
+            return self.host_staged_time(nbytes, concurrent)
+        return min(self.ici_time(nbytes),
+                   self.host_staged_time(nbytes, concurrent))
+
+    def crossover_bytes(self) -> float:
+        """Data size above which global-memory wins (paper: ~0.02 MB)."""
+        dev = self.device
+        return max(0.0, (dev.ipc_latency - 2 * dev.host_link_latency)
+                   * dev.host_link_stream / 2)
+
+
+# --------------------------------------------------------------------------
+# Live mechanisms (used by repro.serving.engine on real arrays)
+# --------------------------------------------------------------------------
+
+class DeviceHandoff:
+    """Global-memory-based communication, live path: the producer's output
+    array is handed to the consumer by reference — no host round-trip.
+    On real TPU slices this is a donated in-HBM buffer; on CPU it is the
+    jax.Array object itself.  Setup (IPC-channel analogue) happens once."""
+
+    def __init__(self):
+        self._setup_done = False
+        self.setup_time = 0.0
+        self.transfers = 0
+
+    def setup(self):
+        t0 = time.perf_counter()
+        self._setup_done = True
+        self.setup_time = time.perf_counter() - t0
+
+    def send(self, array):
+        if not self._setup_done:
+            self.setup()
+        self.transfers += 1
+        return array           # handle pass: zero copy
+
+
+class HostStagedChannel:
+    """Default mechanism, live path: materialise to host memory (numpy) and
+    re-upload — the D2H + H2D round trip of paper Fig. 8(a)."""
+
+    def __init__(self):
+        self.transfers = 0
+        self.bytes_moved = 0
+
+    def send(self, array):
+        import jax.numpy as jnp
+        host = np.asarray(array)           # D2H
+        self.transfers += 1
+        self.bytes_moved += host.nbytes * 2
+        return jnp.asarray(host)           # H2D

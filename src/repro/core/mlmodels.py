@@ -1,0 +1,171 @@
+"""Prediction models used by the Camelot performance predictor (paper §VII-A):
+Linear Regression, CART Decision Tree, and Random Forest — written from
+scratch on numpy (no sklearn in this environment).
+
+The paper evaluates all three (Fig. 12) and picks the Decision Tree for
+duration/bandwidth/throughput (accuracy of RF at ~1/5 the inference cost) and
+LR for FLOPs / memory footprint (exactly linear in batch size).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Linear regression (normal equations, ridge-stabilised)
+# --------------------------------------------------------------------------
+
+class LinearRegression:
+    def __init__(self, ridge: float = 1e-8):
+        self.ridge = ridge
+        self.coef_: Optional[np.ndarray] = None
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "LinearRegression":
+        x = np.asarray(x, np.float64)
+        y = np.asarray(y, np.float64)
+        xb = np.concatenate([x, np.ones((len(x), 1))], axis=1)
+        a = xb.T @ xb + self.ridge * np.eye(xb.shape[1])
+        self.coef_ = np.linalg.solve(a, xb.T @ y)
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, np.float64)
+        xb = np.concatenate([x, np.ones((len(x), 1))], axis=1)
+        return xb @ self.coef_
+
+
+# --------------------------------------------------------------------------
+# CART regression tree
+# --------------------------------------------------------------------------
+
+@dataclass
+class _Node:
+    feature: int = -1
+    threshold: float = 0.0
+    value: float = 0.0
+    left: Optional["_Node"] = None
+    right: Optional["_Node"] = None
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.left is None
+
+
+class DecisionTreeRegressor:
+    """CART with variance-reduction splits."""
+
+    def __init__(self, max_depth: int = 12, min_samples_leaf: int = 2,
+                 max_features: Optional[int] = None, seed: int = 0):
+        self.max_depth = max_depth
+        self.min_samples_leaf = min_samples_leaf
+        self.max_features = max_features
+        self.rng = np.random.default_rng(seed)
+        self.root: Optional[_Node] = None
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "DecisionTreeRegressor":
+        x = np.asarray(x, np.float64)
+        y = np.asarray(y, np.float64)
+        self.root = self._build(x, y, 0)
+        return self
+
+    def _best_split(self, x, y):
+        n, d = x.shape
+        feats = np.arange(d)
+        if self.max_features is not None and self.max_features < d:
+            feats = self.rng.choice(d, self.max_features, replace=False)
+        best = (None, None, np.inf)
+        for f in feats:
+            order = np.argsort(x[:, f], kind="stable")
+            xs, ys = x[order, f], y[order]
+            csum = np.cumsum(ys)
+            csq = np.cumsum(ys ** 2)
+            total, total_sq = csum[-1], csq[-1]
+            ks = np.arange(self.min_samples_leaf,
+                           n - self.min_samples_leaf + 1)
+            if len(ks) == 0:
+                continue
+            # skip splits between equal feature values (ks <= n-1 here)
+            ks = ks[xs[ks - 1] < xs[ks]]
+            if len(ks) == 0:
+                continue
+            left_sum, left_sq = csum[ks - 1], csq[ks - 1]
+            right_sum, right_sq = total - left_sum, total_sq - left_sq
+            sse = ((left_sq - left_sum ** 2 / ks)
+                   + (right_sq - right_sum ** 2 / (n - ks)))
+            i = int(np.argmin(sse))
+            if sse[i] < best[2]:
+                k = int(ks[i])
+                thr = 0.5 * (xs[k - 1] + xs[min(k, n - 1)])
+                best = (int(f), float(thr), float(sse[i]))
+        return best
+
+    def _build(self, x, y, depth) -> _Node:
+        node = _Node(value=float(np.mean(y)))
+        if (depth >= self.max_depth or len(y) < 2 * self.min_samples_leaf
+                or np.ptp(y) == 0.0):
+            return node
+        f, thr, sse = self._best_split(x, y)
+        if f is None:
+            return node
+        mask = x[:, f] <= thr
+        if mask.all() or (~mask).all():
+            return node
+        node.feature, node.threshold = f, thr
+        node.left = self._build(x[mask], y[mask], depth + 1)
+        node.right = self._build(x[~mask], y[~mask], depth + 1)
+        return node
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, np.float64)
+        out = np.empty(len(x))
+        for i, row in enumerate(x):
+            node = self.root
+            while not node.is_leaf:
+                node = node.left if row[node.feature] <= node.threshold \
+                    else node.right
+            out[i] = node.value
+        return out
+
+
+# --------------------------------------------------------------------------
+# Random forest (bagging)
+# --------------------------------------------------------------------------
+
+class RandomForestRegressor:
+    def __init__(self, n_trees: int = 20, max_depth: int = 12,
+                 min_samples_leaf: int = 2, seed: int = 0):
+        self.n_trees = n_trees
+        self.max_depth = max_depth
+        self.min_samples_leaf = min_samples_leaf
+        self.seed = seed
+        self.trees: list[DecisionTreeRegressor] = []
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "RandomForestRegressor":
+        x = np.asarray(x, np.float64)
+        y = np.asarray(y, np.float64)
+        rng = np.random.default_rng(self.seed)
+        n, d = x.shape
+        max_feats = max(1, int(np.ceil(d / 2)))
+        self.trees = []
+        for t in range(self.n_trees):
+            idx = rng.integers(0, n, n)
+            tree = DecisionTreeRegressor(
+                max_depth=self.max_depth,
+                min_samples_leaf=self.min_samples_leaf,
+                max_features=max_feats, seed=self.seed + t + 1)
+            tree.fit(x[idx], y[idx])
+            self.trees.append(tree)
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return np.mean([t.predict(x) for t in self.trees], axis=0)
+
+
+def mean_absolute_percentage_error(y_true, y_pred) -> float:
+    y_true = np.asarray(y_true, np.float64)
+    y_pred = np.asarray(y_pred, np.float64)
+    denom = np.maximum(np.abs(y_true), 1e-12)
+    return float(np.mean(np.abs(y_true - y_pred) / denom))

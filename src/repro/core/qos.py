@@ -1,0 +1,35 @@
+"""QoS tracking: latency percentiles, violation accounting."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+import numpy as np
+
+
+@dataclass
+class QoSTracker:
+    target: float                      # end-to-end 99%-ile target (seconds)
+    percentile: float = 99.0
+    latencies: List[float] = field(default_factory=list)
+
+    def record(self, latency: float) -> None:
+        self.latencies.append(latency)
+
+    def tail_latency(self) -> float:
+        if not self.latencies:
+            return 0.0
+        return float(np.percentile(self.latencies, self.percentile))
+
+    def normalized_tail(self) -> float:
+        """p99 / target: > 1.0 means QoS violation (paper Figs. 14/17)."""
+        return self.tail_latency() / self.target if self.target else 0.0
+
+    def violated(self) -> bool:
+        return self.tail_latency() > self.target
+
+    def mean(self) -> float:
+        return float(np.mean(self.latencies)) if self.latencies else 0.0
+
+    def count(self) -> int:
+        return len(self.latencies)

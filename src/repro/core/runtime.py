@@ -1,0 +1,126 @@
+"""Camelot online runtime: load monitoring + periodic re-allocation.
+
+The paper motivates Camelot with the diurnal load pattern of user-facing
+services (§I, §VIII-C evaluates four static load levels).  This module closes
+the loop: an EWMA load monitor drives the min-resource policy on a sliding
+window, switching to the max-load allocation when the estimate approaches the
+cluster's peak capability — the "runtime system that manages GPU resources
+online" of the title.
+
+Used by benchmarks/bench_diurnal.py and tests/test_runtime.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.allocator import CamelotAllocator, SAConfig, SolveResult
+from repro.core.comm import CommModel
+from repro.core.predictor import PipelinePredictor
+from repro.core.types import Allocation, DeviceSpec, Pipeline
+
+
+@dataclass
+class RuntimeConfig:
+    reallocate_every: float = 60.0     # seconds between allocator runs
+    ewma_alpha: float = 0.3            # load-estimate smoothing
+    headroom: float = 1.25             # provision for estimate × headroom
+    peak_switch_frac: float = 0.8      # above this fraction of peak, use
+                                       # the max-load allocation outright
+
+
+@dataclass
+class ReallocationEvent:
+    time: float
+    load_estimate: float
+    provisioned_for: float
+    total_quota: float
+    feasible: bool
+
+
+class CamelotRuntime:
+    """Online wrapper around the two allocation policies."""
+
+    def __init__(self, pipeline: Pipeline, predictor: PipelinePredictor,
+                 device: DeviceSpec, n_devices: int, batch: int,
+                 rt: RuntimeConfig = RuntimeConfig(),
+                 sa: SAConfig = SAConfig()):
+        self.pipeline = pipeline
+        self.predictor = predictor
+        self.device = device
+        self.n_devices = n_devices
+        self.batch = batch
+        self.rt = rt
+        self.comm = CommModel(device, global_memory_enabled=True)
+        self.allocator = CamelotAllocator(pipeline, predictor, device,
+                                          n_devices, comm=self.comm, sa=sa)
+        peak = self.allocator.solve_max_load(batch)
+        self.peak_result = peak
+        self.peak_qps = peak.objective if peak.feasible else 0.0
+        self._load_est = 0.0
+        self.current: Allocation = peak.allocation
+        self.history: List[ReallocationEvent] = []
+
+    # ------------------------------------------------------------------
+
+    def observe(self, qps_sample: float) -> None:
+        a = self.rt.ewma_alpha
+        self._load_est = (1 - a) * self._load_est + a * qps_sample
+
+    @property
+    def load_estimate(self) -> float:
+        return self._load_est
+
+    def reallocate(self, now: float) -> Allocation:
+        """Re-solve for the current load estimate; returns the allocation."""
+        target = self._load_est * self.rt.headroom
+        if self.peak_qps and target >= self.rt.peak_switch_frac * self.peak_qps:
+            alloc, provisioned, feasible = (self.peak_result.allocation,
+                                            self.peak_qps,
+                                            self.peak_result.feasible)
+        else:
+            res = self.allocator.solve_min_resource(self.batch,
+                                                    load=max(target, 1.0))
+            if res.feasible:
+                alloc, provisioned, feasible = (res.allocation, target, True)
+            else:                       # fall back to the peak allocation
+                alloc, provisioned, feasible = (self.peak_result.allocation,
+                                                self.peak_qps, False)
+        self.current = alloc
+        self.history.append(ReallocationEvent(
+            time=now, load_estimate=self._load_est,
+            provisioned_for=provisioned,
+            total_quota=alloc.total_quota(), feasible=feasible))
+        return alloc
+
+    # ------------------------------------------------------------------
+
+    def run_trace(self, load_fn: Callable[[float], float], duration: float,
+                  sample_every: float = 10.0) -> List[ReallocationEvent]:
+        """Drive the runtime over a load trace load_fn(t) -> qps.
+
+        Samples the load every ``sample_every`` s, reallocates every
+        ``rt.reallocate_every`` s.  Returns the reallocation history."""
+        t = 0.0
+        next_realloc = 0.0
+        while t < duration:
+            self.observe(load_fn(t))
+            if t >= next_realloc:
+                self.reallocate(t)
+                next_realloc = t + self.rt.reallocate_every
+            t += sample_every
+        return self.history
+
+
+def diurnal_load(peak_qps: float, period: float = 86_400.0,
+                 low_frac: float = 0.25) -> Callable[[float], float]:
+    """Sinusoidal diurnal pattern between low_frac·peak and peak (paper §I:
+    'the load of a user-facing service varies (diurnal load pattern)')."""
+    amp = (1 - low_frac) / 2.0
+
+    def fn(t: float) -> float:
+        phase = np.sin(2 * np.pi * t / period - np.pi / 2)  # trough at t=0
+        return peak_qps * (low_frac + amp * (1 + phase))
+    return fn

@@ -1,0 +1,148 @@
+"""Shared Camelot datatypes.
+
+Units are SI throughout: seconds, bytes, FLOPs, bytes/s, queries/s.
+
+Terminology mapping to the paper (§VII, Table II):
+  - ``DeviceSpec``      — one accelerator ("GPU"): R (compute, normalised to
+                          1.0), F (global-memory capacity), BW (global-memory
+                          bandwidth), I (max co-resident instances — Volta MPS
+                          client limit), G (peak FLOP/s), host link (PCIe).
+  - ``MicroserviceProfile`` — ground-truth performance curves of one
+                          microservice stage (the simulator's physics; the
+                          predictor only sees sampled observations of it).
+  - ``StageAlloc``      — (N_i, p_i, s): instances, per-instance quota,
+                          batch size for stage i.
+  - ``Placement``       — instance -> device packing (deployment scheme §VII-D).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DeviceSpec:
+    name: str = "rtx2080ti"
+    peak_flops: float = 13.45e12        # fp32 FLOP/s (2080Ti)
+    mem_capacity: float = 11e9          # bytes
+    mem_bandwidth: float = 616e9        # B/s (2080Ti); V100: 897e9
+    max_instances: int = 48             # Volta MPS client limit I
+    # host link (16x PCIe 3.0, paper §VI-A)
+    host_link_total: float = 12_160e6   # effective B/s
+    host_link_stream: float = 3_150e6   # single-stream B/s
+    host_link_latency: float = 10e-6    # per-transfer setup
+    ipc_latency: float = 33e-6          # global-memory handle overhead
+    ipc_setup: float = 1e-3             # one-time channel setup (§VIII-G)
+
+
+RTX_2080TI = DeviceSpec()
+V100 = DeviceSpec(name="v100", peak_flops=15.7e12, mem_capacity=32e9,
+                  mem_bandwidth=897e9)
+# TPU-adapted device (the hardware-adaptation target, DESIGN.md §2)
+TPU_V5E_DEV = DeviceSpec(name="tpu-v5e", peak_flops=197e12,
+                         mem_capacity=16e9, mem_bandwidth=819e9,
+                         host_link_total=50e9, host_link_stream=12.5e9,
+                         ipc_latency=5e-6)
+
+
+@dataclass(frozen=True)
+class MicroserviceProfile:
+    """Ground-truth curves for one microservice (the simulator's physics).
+
+    duration(batch, quota) = overhead
+        + serial_frac-limited speedup of the compute term (Amdahl — models
+          the saturating SM scalability in paper Fig. 3)
+        + memory term (global-memory bandwidth is NOT partitioned by quota)
+    """
+    name: str
+    flops_per_query: float              # C(i, s) slope (LR-modelled, §VII-A)
+    mem_bytes_per_query: float          # global-memory traffic per query
+    host_bytes_per_query: float         # PCIe in+out per query
+    weights_bytes: float                # model weights (shared by co-located
+                                        # same-stage instances, §VII-D)
+    act_bytes_per_query: float          # activations / working set per query
+    overhead: float = 1e-3              # fixed launch/dispatch time
+    serial_frac: float = 0.08           # Amdahl serial fraction
+    flops_base: float = 0.0             # per-batch constant FLOPs
+    arch: Optional[str] = None          # model-zoo arch id, if any
+
+    # ---- ground truth -------------------------------------------------
+    def flops(self, batch: int) -> float:
+        return self.flops_base + self.flops_per_query * batch
+
+    def mem_bytes(self, batch: int) -> float:
+        return self.weights_bytes + self.mem_bytes_per_query * batch
+
+    def footprint(self, batch: int) -> float:
+        """M(i, s): global-memory footprint at batch size s."""
+        return self.weights_bytes + self.act_bytes_per_query * batch
+
+    def duration(self, batch: int, quota: float,
+                 device: DeviceSpec) -> float:
+        """Solo-run duration at ``quota`` (fraction of one device).
+
+        The achievable memory bandwidth of one instance saturates with
+        occupancy (~25% of SMs already stream a large fraction of DRAM bw),
+        so a small-quota instance cannot monopolise the device's bandwidth.
+        """
+        quota = float(np.clip(quota, 1e-3, 1.0))
+        speedup = 1.0 / (self.serial_frac + (1 - self.serial_frac) / quota)
+        compute_t = self.flops(batch) / (device.peak_flops * speedup)
+        bw_frac = min(1.0, 0.25 + quota)
+        memory_t = self.mem_bytes(batch) / (device.mem_bandwidth * bw_frac)
+        return self.overhead + max(compute_t, memory_t)
+
+    def bandwidth(self, batch: int, quota: float,
+                  device: DeviceSpec) -> float:
+        """Global-memory bandwidth usage b(p) while running."""
+        d = self.duration(batch, quota, device)
+        return self.mem_bytes(batch) / max(d, 1e-9)
+
+    def throughput(self, batch: int, quota: float,
+                   device: DeviceSpec) -> float:
+        """Queries/s of one instance."""
+        return batch / self.duration(batch, quota, device)
+
+
+@dataclass
+class Pipeline:
+    """An end-to-end user-facing service: an ordered chain of stages."""
+    name: str
+    stages: List[MicroserviceProfile]
+    qos_target: float = 0.25            # end-to-end 99%-ile target (seconds)
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+
+@dataclass
+class StageAlloc:
+    n_instances: int
+    quota: float                        # fraction of one device per instance
+    batch: int
+
+
+@dataclass
+class Placement:
+    """instance placements: stage -> list of (device_id, quota)."""
+    per_stage: List[List[Tuple[int, float]]] = field(default_factory=list)
+
+    def devices_used(self) -> set:
+        return {d for st in self.per_stage for d, _ in st}
+
+
+@dataclass
+class Allocation:
+    stages: List[StageAlloc]
+    placement: Optional[Placement] = None
+    predicted_min_throughput: float = 0.0
+    predicted_latency: float = 0.0
+
+    def total_quota(self) -> float:
+        return sum(s.n_instances * s.quota for s in self.stages)
+
+    def total_instances(self) -> int:
+        return sum(s.n_instances for s in self.stages)

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the model zoo's compute hot-spots.
+# Each kernel: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+# oracle in ref.py, dispatching jit wrapper in ops.py.
+from repro.kernels.ops import (decode_attention, flash_attention,
+                               mlstm_chunk, ssm_scan)
+
+__all__ = ["decode_attention", "flash_attention", "mlstm_chunk", "ssm_scan"]

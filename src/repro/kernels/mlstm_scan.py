@@ -1,0 +1,118 @@
+"""Pallas TPU kernel for one stabilised chunkwise-mLSTM step.
+
+Contract (matches repro.models.xlstm.mlstm_chunk): per (batch, head), given
+q/k/v (L, hd), gate pre-activations i/f (L,), and the carried stabilised
+state (C (hd, hd), n (hd), m ()), produce h (L, hd) and the updated carry.
+
+Grid: (B·H,).  The whole chunk is one VMEM-resident tile: the intra-chunk
+part is two (L, L) MXU matmuls (qkᵀ and the decay-weighted combine), the
+inter-chunk part two (L, hd)×(hd, hd) matmuls.  Cumulative sums/maxes are
+computed as lower-triangular matmuls / masked row-maxes — MXU-friendly and
+supported inside Pallas (no 1D cumsum primitive needed on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref, c_ref, n_ref, m_ref,
+            h_ref, c_out_ref, n_out_ref, m_out_ref, *, length: int,
+            scale: float):
+    l = length
+    q = q_ref[0].astype(jnp.float32)                 # (L, hd)
+    k = k_ref[0].astype(jnp.float32) * scale
+    v = v_ref[0].astype(jnp.float32)
+    i_raw = i_ref[0].astype(jnp.float32)             # (L, 1)
+    f_raw = f_ref[0].astype(jnp.float32)
+    c_in = c_ref[0]                                  # (hd, hd)
+    n_in = n_ref[0]                                  # (1, hd)
+    m_in = m_ref[0, 0]                               # ()
+
+    logf = jax.nn.log_sigmoid(f_raw)                 # (L, 1)
+    tril = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    ones_tri = jnp.where(tril, 1.0, 0.0)
+    # b_t = Σ_{r<=t} log f_r  via lower-triangular matmul
+    b_cum = jax.lax.dot_general(ones_tri, logf,
+                                (((1,), (0,)), ((), ())))    # (L, 1)
+    a = i_raw - b_cum                                # (L, 1)
+    # g_t = max_{j<=t} a_j  via masked row-max
+    a_mat = jnp.where(tril, a.T, NEG_INF)            # (L(t), L(j))
+    g = jnp.max(a_mat, axis=1, keepdims=True)        # (L, 1)
+    m_t = jnp.maximum(m_in, g)                       # (L, 1)
+
+    dmat = jnp.where(tril, jnp.exp(a.T - m_t), 0.0)  # (L, L)
+    s_qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+    w = s_qk * dmat
+    num = jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())))       # (L, hd)
+    n_vec = jax.lax.dot_general(dmat, k, (((1,), (0,)), ((), ())))  # (L, hd)
+    inter = jnp.exp(m_in - m_t)                      # (L, 1)
+    num = num + inter * jax.lax.dot_general(q, c_in,
+                                            (((1,), (0,)), ((), ())))
+    n_vec = n_vec + inter * n_in
+    den = jnp.maximum(jnp.abs(jnp.sum(q * n_vec, axis=1, keepdims=True)),
+                      jnp.exp(-(b_cum + m_t)))
+    h_ref[0] = (num / den).astype(h_ref.dtype)
+
+    # carry update at chunk end
+    b_l = b_cum[l - 1, 0]
+    g_l = g[l - 1, 0]
+    m_l = b_l + jnp.maximum(m_in, g_l)
+    w_in = jnp.exp(m_in - m_l + b_l)
+    w_j = jnp.exp(a + b_l - m_l)                     # (L, 1)
+    kw = k * w_j
+    c_out_ref[0] = w_in * c_in + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())))
+    n_out_ref[0] = w_in * n_in + jnp.sum(kw, axis=0, keepdims=True)
+    m_out_ref[0, 0] = m_l
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mlstm_chunk_step(q, k, v, i_raw, f_raw, c_in, n_in, m_in, *,
+                     interpret: bool = True):
+    """q/k/v: (BH, L, hd); i_raw/f_raw: (BH, L); carry c (BH, hd, hd),
+    n (BH, hd), m (BH,).  NOTE: k must be pre-scaled by caller's convention?
+    No — scale 1/sqrt(hd) is applied inside, matching the model which scales
+    k at projection time; pass unscaled k here when used standalone.
+    Returns (h (BH, L, hd), c_out, n_out, m_out)."""
+    bh, l, hd = q.shape
+    i2 = i_raw[..., None]
+    f2 = f_raw[..., None]
+    n2 = n_in[:, None, :]
+    m2 = m_in[:, None, None] * jnp.ones((bh, 1, 1), jnp.float32)
+
+    h, c_o, n_o, m_o = pl.pallas_call(
+        functools.partial(_kernel, length=l, scale=1.0),
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, l, hd), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, l, hd), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, l, hd), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, l, 1), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, l, 1), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, l, hd), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, l, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, hd, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, 1, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, 1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, i2, f2, c_in, n2, m2)
+    return h, c_o, n_o[:, 0], m_o[:, 0, 0]

@@ -1,0 +1,104 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op dispatches on ``impl``:
+  - "xla"              — the pure-XLA implementation used by the model zoo on
+                         CPU and in the multi-pod dry-run (honest HLO costs);
+  - "pallas"           — the Pallas TPU kernel (compiled; real hardware);
+  - "pallas_interpret" — the same kernel body interpreted on CPU (what the
+                         tests validate against ref.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_mod
+from repro.kernels.decode_attention import decode_attention_packed
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.mlstm_scan import mlstm_chunk_step
+from repro.kernels.ssm_scan import ssm_chunk_scan
+
+DEFAULT_IMPL = "xla"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    impl: str = DEFAULT_IMPL):
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KVH, hd) -> (B, Sq, H, hd)."""
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    if impl == "xla":
+        from repro.models.attention import flash_attn
+        return flash_attn(q, k, v, causal=causal, window=window)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
+    if impl in ("pallas", "pallas_interpret"):
+        out = flash_attention_bhsd(
+            qf, kf, vf, num_heads=h, num_kv_heads=kvh, causal=causal,
+            window=window, interpret=(impl == "pallas_interpret"))
+    elif impl == "ref":
+        out = ref_mod.attention_ref(qf, kf, vf, num_heads=h,
+                                    num_kv_heads=kvh, causal=causal,
+                                    window=window)
+    else:
+        raise ValueError(impl)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+
+
+def decode_attention(q, k, v, valid, *, impl: str = DEFAULT_IMPL):
+    """q: (B, 1, H, hd); k, v: (B, Sc, KVH, hd); valid: () int32."""
+    b, _, h, hd = q.shape
+    _, sc, kvh, _ = k.shape
+    g = h // kvh
+    if impl == "xla":
+        from repro.models.attention import KVCache, decode_attn
+        return decode_attn(q, KVCache(k, v), valid)
+    qf = q.reshape(b, kvh, g, hd).reshape(b * kvh, g, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, sc, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, sc, hd)
+    if impl in ("pallas", "pallas_interpret"):
+        out = decode_attention_packed(
+            qf, kf, vf, valid, num_heads=h, num_kv_heads=kvh,
+            interpret=(impl == "pallas_interpret"))
+    elif impl == "ref":
+        out = ref_mod.decode_attention_ref(qf, kf, vf, valid, num_heads=h,
+                                           num_kv_heads=kvh)
+    else:
+        raise ValueError(impl)
+    return out.reshape(b, kvh, g, hd).reshape(b, 1, h, hd)
+
+
+def ssm_scan(da, dbx, *, impl: str = DEFAULT_IMPL):
+    """Inclusive within-chunk scan; da/dbx: (B, L, D, ST) fp32."""
+    if impl == "xla":
+        from repro.models.ssm import _chunk_scan
+        return _chunk_scan(da, dbx)
+    if impl in ("pallas", "pallas_interpret"):
+        return ssm_chunk_scan(da, dbx,
+                              interpret=(impl == "pallas_interpret"))
+    if impl == "ref":
+        return ref_mod.ssm_chunk_scan_ref(da, dbx)
+    raise ValueError(impl)
+
+
+def mlstm_chunk(q, k, v, i_raw, f_raw, c_in, n_in, m_in, *,
+                impl: str = DEFAULT_IMPL):
+    """One chunkwise-mLSTM step; see kernels.mlstm_scan for shapes."""
+    if impl == "xla":
+        from repro.models.xlstm import mlstm_chunk as xla_chunk
+        # model layout: (B, H, L, hd) / (B, H, L) — flatten to (BH, ...)
+        h, (c, n, m) = xla_chunk(q[:, None], k[:, None], v[:, None],
+                                 i_raw[:, None], f_raw[:, None],
+                                 c_in[:, None], n_in[:, None],
+                                 m_in[:, None])
+        return h[:, 0], c[:, 0], n[:, 0], m[:, 0]
+    if impl in ("pallas", "pallas_interpret"):
+        return mlstm_chunk_step(q, k, v, i_raw, f_raw, c_in, n_in, m_in,
+                                interpret=(impl == "pallas_interpret"))
+    if impl == "ref":
+        return ref_mod.mlstm_chunk_ref(q, k, v, i_raw, f_raw, c_in, n_in,
+                                       m_in)
+    raise ValueError(impl)

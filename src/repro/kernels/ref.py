@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (naive, obviously-correct)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, num_heads: int, num_kv_heads: int,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """q: (B·H, Sq, hd); k, v: (B·KVH, Skv, hd) — naive full-matrix."""
+    bh, sq, hd = q.shape
+    bkv, skv, _ = k.shape
+    g = num_heads // num_kv_heads
+    # expand kv to per-query-head
+    b = bh // num_heads
+    k = jnp.repeat(k.reshape(b, num_kv_heads, skv, hd), g, axis=1)
+    v = jnp.repeat(v.reshape(b, num_kv_heads, skv, hd), g, axis=1)
+    k = k.reshape(bh, skv, hd)
+    v = v.reshape(bh, skv, hd)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, valid, *, num_heads: int,
+                         num_kv_heads: int) -> jax.Array:
+    """q: (B·KVH, G, hd); k, v: (B·KVH, Sc, hd); valid: () int32."""
+    bkv, g, hd = q.shape
+    _, sc, _ = k.shape
+    s = jnp.einsum("bgd,bkd->bgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    mask = jnp.arange(sc)[None, None, :] < valid
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgk,bkd->bgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_chunk_scan_ref(da, dbx) -> jax.Array:
+    """Sequential-in-python inclusive scan: h_t = da_t h_{t-1} + dbx_t."""
+    b, l, d, st = da.shape
+
+    def step(h, x):
+        da_t, dbx_t = x
+        h = da_t * h + dbx_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, jnp.zeros((b, d, st), da.dtype),
+                         (da.transpose(1, 0, 2, 3), dbx.transpose(1, 0, 2, 3)))
+    return hs.transpose(1, 0, 2, 3)
+
+
+def mlstm_chunk_ref(q, k, v, i_raw, f_raw, c_in, n_in, m_in):
+    """Per-timestep stabilised mLSTM recurrence (the decode-step math applied
+    sequentially — independent of the chunkwise derivation).
+
+    q/k/v: (BH, L, hd); i/f: (BH, L); carry c (BH, hd, hd), n (BH, hd),
+    m (BH,).  k is expected pre-scaled (model convention).
+    Returns (h, c_out, n_out, m_out)."""
+    bh, l, hd = q.shape
+
+    def step(carry, x):
+        c, n, m = carry
+        qt, kt, vt, it, ft = x
+        logf = jax.nn.log_sigmoid(ft)                     # (BH,)
+        m_new = jnp.maximum(logf + m, it)
+        f_s = jnp.exp(logf + m - m_new)[:, None, None]
+        i_s = jnp.exp(it - m_new)[:, None, None]
+        c = f_s * c + i_s * (kt[:, :, None] * vt[:, None, :])
+        n = f_s[:, :, 0] * n + i_s[:, :, 0] * kt
+        num = jnp.einsum("be,bef->bf", qt, c)
+        den = jnp.maximum(jnp.abs(jnp.einsum("be,be->b", qt, n)),
+                          jnp.exp(-m_new))
+        h = num / den[:, None]
+        return (c, n, m_new), h
+
+    xs = (q.transpose(1, 0, 2).astype(jnp.float32),
+          k.transpose(1, 0, 2).astype(jnp.float32),
+          v.transpose(1, 0, 2).astype(jnp.float32),
+          i_raw.T.astype(jnp.float32), f_raw.T.astype(jnp.float32))
+    (c, n, m), hs = jax.lax.scan(step, (c_in, n_in, m_in), xs)
+    return hs.transpose(1, 0, 2), c, n, m

@@ -1,0 +1,8 @@
+# NOTE: repro.launch.dryrun must be imported/run as a fresh process (it sets
+# XLA_FLAGS before importing jax); do not import it from here.
+from repro.launch.mesh import (data_axes, dp_size, make_host_mesh,
+                               make_production_mesh, tp_size)
+from repro.launch.sharding import ShardingRules
+
+__all__ = ["data_axes", "dp_size", "make_host_mesh", "make_production_mesh",
+           "tp_size", "ShardingRules"]

@@ -1,0 +1,297 @@
+"""Sharding rules: parameters, optimizer state, batches, caches, activations.
+
+Scheme (baseline; §Perf iterates on it):
+  * train  — FSDP×TP: weight matrices sharded over (data…) on their large
+    input dim and over "model" on their output dim; optimizer state follows
+    parameters.  Activations: batch over data axes, residual stream
+    sequence-sharded over "model" between layers (sequence parallelism) so
+    the per-chip live set of the scanned superblock fits HBM.
+  * prefill/decode — inference: weights TP-sharded over "model" only
+    (replicated over data → no weight gathers on the latency path), batch
+    over data axes.  KV caches shard batch over data and kv-heads over
+    "model" when divisible; when the batch is smaller than the data axes
+    (long_500k, global_batch=1) the cache SEQUENCE dim is sharded over the
+    idle data axes instead — XLA turns the softmax reductions into
+    all-reduces (distributed flash-decode).
+
+Every rule checks divisibility and falls back to replication — uneven dims
+(e.g. starcoder2's 24 heads on a 16-way model axis) stay unsharded and are
+called out by the roofline report instead of silently padding.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import data_axes, dp_size, tp_size
+
+TP = "model"
+
+
+def _div(size: int, n: int) -> bool:
+    return n > 0 and size % n == 0 and size >= n
+
+
+class ShardingRules:
+    """Factory for every sharding used by one (cfg, mesh, mode) combo."""
+
+    def __init__(self, cfg: ModelConfig, mesh, mode: str,
+                 global_batch: int, seq_len: int):
+        assert mode in ("train", "prefill", "decode")
+        self.cfg = cfg
+        self.mesh = mesh
+        self.mode = mode
+        self.batch = global_batch
+        self.seq = seq_len
+        # Attention-free stacks (xlstm) train PURE-DP: the recurrent mixers'
+        # states and per-head projections gain nothing from the model axis
+        # but pay per-chunk collectives — fold "model" into data parallelism.
+        from repro.configs.base import ATTN as _ATTN, CROSS as _CROSS
+        self.pure_dp = (mode == "train"
+                        and not any(k in (_ATTN, _CROSS)
+                                    for k in cfg.block_pattern))
+        if self.pure_dp:
+            all_axes = tuple(mesh.axis_names)
+            # largest suffix of axes whose product divides the batch
+            dp = all_axes
+            while dp and not _div(global_batch, int(
+                    np.prod([mesh.shape[a] for a in dp]))):
+                dp = dp[1:]
+            self.dp = dp or data_axes(mesh)
+            self.tp_enabled = False
+        else:
+            self.dp = data_axes(mesh)
+            self.tp_enabled = True
+        self.dp_n = int(np.prod([mesh.shape[a] for a in self.dp]))
+        self.tp_n = tp_size(mesh)
+        self.batch_shardable = _div(global_batch, self.dp_n)
+
+    def ns(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+    # ------------------------------------------------------------------
+    # Parameters
+    # ------------------------------------------------------------------
+
+    def _leaf_spec(self, path_names, shape) -> P:
+        cfg = self.cfg
+        name = path_names[-1]
+        in_blocks = path_names[0] in ("blocks", "enc_blocks")
+        body = tuple(shape[1:]) if in_blocks else tuple(shape)
+        lead = (None,) if in_blocks else ()
+        train = self.mode == "train"
+        dp = self.dp if train else None   # FSDP only for training
+
+        def dpa(size):      # data-axes shard if divisible (train only)
+            return self.dp if (train and _div(size, self.dp_n)) else None
+
+        def tpa(size):
+            if not self.tp_enabled:
+                return None
+            return TP if _div(size, self.tp_n) else None
+
+        if name == "embed":
+            v, d = body
+            # vocab over the model axis in BOTH modes: matches the V-sharded
+            # logits, so the (tied) embedding gradient needs no 40 GB
+            # dlogits re-shard; d over data = the FSDP dim in training
+            return P(tpa(v), dpa(d))
+        if name == "lm_head":
+            d, v = body
+            return P(dpa(d), tpa(v))
+        if len(body) == 1:
+            return P(*lead, None)
+        if name in ("wq", "wk", "wv") and len(body) == 2:
+            d, x = body
+            return P(*lead, dpa(d), tpa(x))
+        if name == "wo":
+            x, d = body
+            return P(*lead, tpa(x), dpa(d))
+        if len(body) == 2 and name in ("w_gate", "w_up", "ff_gate", "ff_up",
+                                       "in_proj", "w_in"):
+            d, f = body
+            return P(*lead, dpa(d), tpa(f))
+        if len(body) == 2 and name in ("w_down", "ff_down", "out_proj",
+                                       "dt_proj"):
+            f, d = body
+            return P(*lead, tpa(f), dpa(d))
+        if name == "router":
+            return P(*lead, None, None)
+        if len(body) == 3:
+            # MoE experts: expert-parallel over the data axes in train AND
+            # prefill (the token scatter lowers to an all-to-all); decode
+            # keeps experts replicated over data (token-gather path)
+            def edp(e):
+                return self.dp if (self.mode in ("train", "prefill")
+                                   and _div(e, self.dp_n)) else None
+            if name in ("w_gate", "w_up"):          # MoE (E, d, f)
+                e, d, f = body
+                return P(*lead, edp(e), None, tpa(f))
+            if name == "w_down":                    # MoE (E, f, d)
+                e, f, d = body
+                return P(*lead, edp(e), tpa(f), None)
+            if name == "r":                         # sLSTM recurrent: repl.
+                return P(*lead, None, None, None)
+            if name == "wv":                        # mLSTM v-head blocks
+                h, hd_in, hd_out = body
+                return P(*lead, None, None, tpa(hd_out))
+            return P(*lead, None, None, None)
+        if name == "conv_w":
+            ck, inner = body
+            return P(*lead, None, tpa(inner))
+        if name in ("x_proj",):
+            inner, r = body
+            return P(*lead, tpa(inner), None)
+        if name in ("A_log",):
+            inner, st = body
+            return P(*lead, tpa(inner), None)
+        if name in ("w_i", "w_f"):
+            inner, h = body
+            return P(*lead, tpa(inner), None)
+        if len(body) == 2:
+            d0, d1 = body
+            return P(*lead, dpa(d0), tpa(d1))
+        return P(*lead, *([None] * len(body)))
+
+    def params_shardings(self, params_tree) -> Any:
+        def spec(path, leaf):
+            names = [getattr(k, "key", getattr(k, "idx", None))
+                     for k in path]
+            names = [str(n) for n in names]
+            ps = self._leaf_spec(names, leaf.shape)
+            assert len(ps) == len(leaf.shape) or ps == P(), (names, leaf.shape, ps)
+            return self.ns(*ps)
+        return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+    def opt_shardings(self, opt_tree, params_tree) -> Any:
+        params_sh = self.params_shardings(params_tree)
+        import repro.training.optimizer as optm
+        return optm.AdamWState(
+            step=self.ns(), mu=params_sh, nu=params_sh)
+
+    # ------------------------------------------------------------------
+    # Batch / tokens
+    # ------------------------------------------------------------------
+
+    def batch_shardings(self, batch_tree) -> Any:
+        dpb = self.dp if self.batch_shardable else None
+
+        def spec(leaf):
+            if leaf.ndim == 0:
+                return self.ns()
+            return self.ns(dpb, *([None] * (leaf.ndim - 1)))
+        return jax.tree.map(spec, batch_tree)
+
+    # ------------------------------------------------------------------
+    # Cache (decode / prefill)
+    # ------------------------------------------------------------------
+
+    def cache_shardings(self, cache_tree) -> Any:
+        """Leaves have a leading n_sb dim (scanned), then batch."""
+        cfg = self.cfg
+        dpb = self.dp if self.batch_shardable else None
+        kvh_tp = TP if _div(cfg.num_kv_heads, self.tp_n) else None
+        # idle data axes -> shard long KV/cache sequence dim instead
+        seq_shard_kv = not self.batch_shardable
+
+        def spec(path, leaf):
+            names = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                             for k in path)
+            shp = leaf.shape
+            if leaf.ndim == 0:       # pos scalar
+                return self.ns()
+            # 5D leaves: KV cache for attention archs, matrix memory C for
+            # xLSTM (no model mixes both — xlstm has no attn blocks)
+            from repro.configs.base import MLSTM
+            is_kv = MLSTM not in cfg.block_pattern
+            if leaf.ndim == 5 and is_kv:   # KV cache (n_sb, B, Sc, KVH, hd)
+                # decode attention is SEQUENCE-parallel over the model axis
+                # (softmax reductions lower to all-reduces): kv-head counts
+                # rarely divide the 16-way axis, cache capacity demands it
+                sc = shp[2]
+                seq_axes = []
+                if seq_shard_kv and _div(sc, self.dp_n * self.tp_n):
+                    seq_axes = list(self.dp) + [TP]
+                elif _div(sc, self.tp_n):
+                    seq_axes = [TP]
+                if seq_axes:
+                    return self.ns(None, dpb, tuple(seq_axes), None, None)
+                return self.ns(None, dpb, None, kvh_tp, None)
+            if leaf.ndim == 5:             # mLSTM C (n_sb, B, H, hdk, hdv)
+                hdv_tp = TP if _div(shp[-1], self.tp_n) else None
+                return self.ns(None, dpb, None, None, hdv_tp)
+            if leaf.ndim == 4:
+                # mamba h (n_sb,B,inner,st) | mlstm n (n_sb,B,H,hd)
+                if shp[-1] == cfg.ssm_state_dim and \
+                        _div(shp[2], self.tp_n):
+                    return self.ns(None, dpb, TP, None)
+                return self.ns(None, dpb, None, None)
+            if leaf.ndim == 3:       # conv tails / slstm (n_sb,B,d)
+                return self.ns(None, dpb, None)
+            if leaf.ndim == 2:
+                return self.ns(None, dpb)
+            return self.ns(*([None] * leaf.ndim))
+        return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+    # ------------------------------------------------------------------
+    # Activation constraint rules (installed via set_sharding_rules)
+    # ------------------------------------------------------------------
+
+    def activation_rules(self) -> dict:
+        cfg = self.cfg
+        dpb = self.dp if self.batch_shardable else None
+        h_tp = TP if _div(cfg.num_heads, self.tp_n) else None
+        kvh_tp = TP if _div(cfg.num_kv_heads, self.tp_n) else None
+        ff_tp = TP if _div(cfg.d_ff or 0, self.tp_n) else None
+        v_tp = TP if _div(cfg.vocab_size, self.tp_n) else None
+        inner_ssm = cfg.ssm_expand * cfg.d_model
+        inner_x = cfg.xlstm_expand * cfg.d_model
+        e_dp = None
+        if cfg.moe is not None and self.mode in ("train", "prefill") and \
+                _div(cfg.moe.num_experts, self.dp_n):
+            e_dp = self.dp
+        moe_ff_tp = TP if (cfg.moe and _div(cfg.moe.d_expert, self.tp_n)) \
+            else None
+        seq_tp = TP if (self.mode in ("train", "prefill")
+                        and _div(self.seq, self.tp_n)) else None
+
+        if not self.tp_enabled:          # pure-DP (attention-free train)
+            flat3 = self.ns(dpb, None, None)
+            return {
+                "residual": flat3, "logits": flat3, "ffn_hidden": flat3,
+                "ssm_inner": flat3, "xlstm_inner": flat3, "slstm_seq": flat3,
+                "attn_heads": self.ns(dpb, None, None, None),
+                "act_q": None, "act_kv": None, "act_attn_out": None,
+                "moe_buf": None, "moe_hidden": None,
+            }
+
+        rules = {
+            # Megatron sequence parallelism: the residual stream is
+            # sequence-sharded over the model axis between layers (bounds
+            # saved activations to 1/tp per layer); XLA all-gathers the
+            # sequence entering attention/mlp and reduce-scatters the output
+            "residual": self.ns(dpb, seq_tp, None),
+            # sLSTM per-timestep scan: replicate on the model axis up front
+            "slstm_seq": self.ns(dpb, None, None),
+            "logits": self.ns(dpb, None, v_tp),
+            # flash attention runs in (B, H, S, hd) with KV repeated to H
+            "attn_heads": self.ns(dpb, h_tp, None, None),
+            "act_q": None,
+            "act_kv": None,
+            "act_attn_out": None,
+            "ffn_hidden": self.ns(dpb, None, ff_tp),
+            "ssm_inner": self.ns(
+                dpb, None, TP if _div(inner_ssm, self.tp_n) else None),
+            "xlstm_inner": self.ns(
+                dpb, None, TP if _div(inner_x, self.tp_n) else None),
+            "moe_buf": self.ns(e_dp, None, None),
+            "moe_hidden": self.ns(e_dp, None, moe_ff_tp),
+        }
+        if self.mode == "decode":
+            rules["residual"] = self.ns(dpb, None, None)
+        return rules

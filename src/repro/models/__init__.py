@@ -1,0 +1,19 @@
+from repro.models.transformer import (
+    ModelCache,
+    abstract_cache,
+    abstract_params,
+    decode_cache_len,
+    encode,
+    forward_train,
+    init_cache,
+    init_params,
+    serve_decode,
+    serve_prefill,
+)
+from repro.models.common import set_sharding_rules
+
+__all__ = [
+    "ModelCache", "abstract_cache", "abstract_params", "decode_cache_len",
+    "encode", "forward_train", "init_cache", "init_params", "serve_decode",
+    "serve_prefill", "set_sharding_rules",
+]

@@ -1,0 +1,162 @@
+"""Shared layers: norms, RoPE, SwiGLU MLP, init helpers, sharding hooks."""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Sharding hooks: the launcher installs PartitionSpec rules; model code calls
+# constrain(x, "name") at well-known points.  Outside a mesh (CPU tests) this
+# is a no-op.
+# --------------------------------------------------------------------------
+
+_rules = threading.local()
+
+
+def set_sharding_rules(rules: Optional[dict]) -> None:
+    _rules.value = rules
+
+
+def get_sharding_rules() -> Optional[dict]:
+    return getattr(_rules, "value", None)
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    rules = get_sharding_rules()
+    if not rules or name not in rules:
+        return x
+    spec = rules[name]
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------------------
+# shard_map context: layers whose dispatch must be LOCAL per data shard
+# (MoE scatter, sLSTM time scan) read the mesh + data axes from here and
+# wrap themselves in a partial-auto shard_map.  None outside the launcher.
+# --------------------------------------------------------------------------
+
+_shard_ctx = threading.local()
+
+
+def set_shard_context(ctx: Optional[dict]) -> None:
+    """ctx: {"mesh": Mesh, "dp": tuple of data axis names} or None."""
+    _shard_ctx.value = ctx
+
+
+def get_shard_context() -> Optional[dict]:
+    return getattr(_shard_ctx, "value", None)
+
+
+# --------------------------------------------------------------------------
+# Initialisation
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.bfloat16):
+    """LeCun-normal-ish init, fan-in on ``in_axis``."""
+    fan_in = shape[in_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms (fp32 internals, cast back)
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def head_rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """qk-norm: normalise over the head dim of (..., H, hd)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)          # (hd/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def swiglu_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+               w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = constrain(h, "ffn_hidden")
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def init_mlp_params(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross entropy over a possibly vocab-sharded logits tensor.
+
+    Shard-friendly: the gold logit is extracted with an iota-match reduction
+    (partitions over V like any other reduction) rather than
+    take_along_axis, whose gather would force SPMD to all-gather the full
+    (B, S, V) fp32 logits (~40 GB/device at train_4k scale).  All V-sized
+    intermediates stay inside reduction fusions.
+    """
+    lmax = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = (logits - lmax).astype(jnp.float32)
+    sumexp = jnp.sum(jnp.exp(shifted), axis=-1)
+    viota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                     logits.ndim - 1)
+    gold = jnp.sum(jnp.where(viota == labels[..., None], shifted, 0.0),
+                   axis=-1)
+    return jnp.mean(jnp.log(sumexp) - gold)

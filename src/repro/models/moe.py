@@ -1,0 +1,166 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based scatter dispatch.
+
+Dispatch strategy (TPU-native, static shapes): tokens are scattered into a
+per-expert buffer (E, C, d) by cumulative position within their expert;
+tokens beyond capacity C are dropped (standard capacity-factor semantics).
+All experts are then applied with one batched einsum — MXU-friendly, no
+(T, E, C) one-hot dispatch tensor.
+
+Sharding: expert FFN dims are sharded over the "model" axis; the expert axis
+is sharded over the "expert"(=data) axis via constrain() hooks, which makes
+XLA insert the token all-to-all.  At reduced scale on CPU everything is local.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import constrain, dense_init
+
+
+def init_moe_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    moe = cfg.moe
+    d, f, e = cfg.d_model, moe.d_expert, moe.num_experts
+    keys = jax.random.split(key, 4)
+    return {
+        "router": dense_init(keys[0], (d, e), dtype=jnp.float32),
+        "w_gate": dense_init(keys[1], (e, d, f), dtype=dtype),
+        "w_up": dense_init(keys[2], (e, d, f), dtype=dtype),
+        "w_down": dense_init(keys[3], (e, f, d), dtype=dtype),
+    }
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    moe = cfg.moe
+    c = int(tokens * moe.top_k * moe.capacity_factor / moe.num_experts)
+    return max(8, -(-c // 8) * 8)   # round up to 8, floor 8
+
+
+def route(x2d: jax.Array, router: jax.Array, cfg: ModelConfig
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x2d: (T, d) -> (topk experts (T,k), gates (T,k), aux loss scalar)."""
+    moe = cfg.moe
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, moe.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    e = moe.num_experts
+    dispatch_frac = jnp.mean(
+        jax.nn.one_hot(experts, e, dtype=jnp.float32).sum(1), axis=0)
+    prob_frac = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(dispatch_frac * prob_frac) * moe.load_balance_coef
+    return experts, gates.astype(x2d.dtype), aux
+
+
+def moe_forward(x: jax.Array, p: dict, cfg: ModelConfig
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    When a shard context is installed (multi-device launch), the scatter
+    dispatch runs LOCALLY per data shard under a partial-auto shard_map —
+    scatter/gather with global token indices across sharded operands
+    otherwise degenerates into full-tensor collectives (measured: ~8 TB of
+    collective traffic per prefill step at qwen3-moe-30B scale; see
+    EXPERIMENTS.md §Perf iteration log).
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.models.common import get_shard_context
+    ctx = get_shard_context()
+    if ctx and ctx.get("dp"):
+        dp = tuple(ctx["dp"])
+        tp = ctx.get("tp")
+        b, s, _ = x.shape
+        # also split the SEQUENCE over the model axis when it divides: every
+        # shard routes its own token slice through ALL experts — the dispatch
+        # needs no collectives at all; only the (inherent, ZeRO-style) expert
+        # weight gather remains.  Falls back to dp-only sharding otherwise.
+        seq_spec = None
+        axes = set(dp)
+        if tp and s % (ctx.get("tp_size") or 1) == 0 and ctx.get("tp_size", 0) > 1:
+            seq_spec = tp
+            axes = axes | {tp}
+        # fully-manual shard_map: leaving spare mesh axes in auto mode
+        # triggers an XLA partitioner check-failure on 3-axis meshes
+        # ("Invalid binary instruction opcode copy"); unmentioned axes in
+        # the specs are simply replicated
+        all_axes = set(ctx["mesh"].axis_names)
+        fn = jax.shard_map(
+            lambda xx, router, wg, wu, wd: _moe_dispatch_local(
+                xx, {"router": router, "w_gate": wg, "w_up": wu,
+                     "w_down": wd}, cfg, dp_axes=tuple(axes)),
+            mesh=ctx["mesh"],
+            in_specs=(P(dp, seq_spec, None), P(), P(), P(), P()),
+            out_specs=(P(dp, seq_spec, None), P()),
+            axis_names=all_axes, check_vma=False)
+        return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return _moe_dispatch_local(x, p, cfg, dp_axes=None)
+
+
+def _moe_dispatch_local(x: jax.Array, p: dict, cfg: ModelConfig,
+                        dp_axes=None) -> Tuple[jax.Array, jax.Array]:
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = moe.top_k
+    e = moe.num_experts
+    cap = _capacity(t, cfg)
+    x2d = x.reshape(t, d)
+
+    experts, gates, aux = route(x2d, p["router"], cfg)        # (T,k)
+    if dp_axes is not None:
+        aux = jax.lax.pmean(aux, dp_axes)
+
+    # position of each (token, slot) within its expert
+    flat_expert = experts.reshape(-1)                          # (T*k,)
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)   # (T*k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - 1)
+    pos = jnp.take_along_axis(pos_in_expert, flat_expert[:, None], axis=1)[:, 0]
+    keep = pos < cap                                           # drop overflow
+
+    # scatter tokens into (E, C, d)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    scatter_e = jnp.where(keep, flat_expert, e)                # e == drop bin
+    buf = buf.at[scatter_e, jnp.where(keep, pos, 0)].set(
+        x2d[tok_idx], mode="drop")
+    # sharding constraints only apply on the auto-SPMD path; under shard_map
+    # the data axes are manual and everything here is shard-local
+    c = (lambda t, name: t) if dp_axes is not None else constrain
+    buf = c(buf, "moe_buf")
+
+    # expert FFN (swiglu), batched over experts
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = c(h, "moe_hidden")
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    y = c(y, "moe_buf")
+
+    # gather back and combine with gates
+    gathered = y[scatter_e.clip(0, e - 1), pos.clip(0, cap - 1)]  # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    weighted = gathered * gates.reshape(-1)[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[tok_idx].add(weighted)
+    return out.reshape(b, s, d), aux
+
+
+def moe_forward_decode(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """Decode path: (B, 1, d).  T is tiny — use gather-of-weights instead of
+    the capacity machinery (no drops, exact)."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    experts, gates, _ = route(x2d, p["router"], cfg)           # (T,k)
+    wg = p["w_gate"][experts]                                  # (T,k,d,f)
+    wu = p["w_up"][experts]
+    wd = p["w_down"][experts]
+    g = jnp.einsum("td,tkdf->tkf", x2d, wg)
+    u = jnp.einsum("td,tkdf->tkf", x2d, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("tkf,tkfd->tkd", h, wd)
+    out = jnp.einsum("tkd,tk->td", y, gates.astype(jnp.float32).astype(x.dtype))
+    return out.reshape(b, s, d)

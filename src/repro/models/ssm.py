@@ -1,0 +1,152 @@
+"""Mamba selective-SSM block (Jamba's sequence mixer) [arXiv:2312.00752].
+
+TPU adaptation: the CUDA selective-scan kernel is replaced by a *chunked
+associative scan* — ``lax.scan`` over chunks carrying the (B, inner, state)
+SSM state, ``lax.associative_scan`` within a chunk.  This bounds transients to
+(B, chunk, inner_local, state) and keeps the MXU busy on the projections.
+A Pallas kernel for the within-chunk scan lives in repro.kernels.ssm_scan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import constrain, dense_init
+
+SSM_CHUNK = 256
+
+
+class MambaState(NamedTuple):
+    h: jax.Array      # (B, inner, state) fp32 SSM state
+    conv: jax.Array   # (B, conv_k - 1, inner) causal-conv tail
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def init_mamba_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    st, ck, dr = cfg.ssm_state_dim, cfg.ssm_conv_dim, dt_rank(cfg)
+    keys = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (inner, 1))
+    return {
+        "in_proj": dense_init(keys[0], (d, 2 * inner), dtype=dtype),
+        "conv_w": dense_init(keys[1], (ck, inner), in_axis=0, dtype=dtype),
+        "conv_b": jnp.zeros((inner,), dtype),
+        "x_proj": dense_init(keys[2], (inner, dr + 2 * st), dtype=dtype),
+        "dt_proj": dense_init(keys[3], (dr, inner), dtype=dtype),
+        "dt_bias": jnp.full((inner,), -4.6, jnp.float32),   # softplus ~ 0.01
+        "A_log": jnp.log(a),
+        "D": jnp.ones((inner,), jnp.float32),
+        "out_proj": dense_init(keys[4], (inner, d), dtype=dtype),
+    }
+
+
+def make_mamba_state(batch: int, cfg: ModelConfig, dtype=jnp.bfloat16) -> MambaState:
+    inner = cfg.ssm_expand * cfg.d_model
+    return MambaState(
+        h=jnp.zeros((batch, inner, cfg.ssm_state_dim), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_dim - 1, inner), dtype))
+
+
+def _causal_conv(x: jax.Array, tail: jax.Array, w: jax.Array, b: jax.Array):
+    """x: (B, S, inner); tail: (B, ck-1, inner) history.  Returns conv output
+    (B, S, inner) and the new tail."""
+    ck = w.shape[0]
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(ck))
+    new_tail = xp[:, -(ck - 1):] if ck > 1 else tail
+    return out + b[None, None, :], new_tail
+
+
+def _ssm_inputs(xc: jax.Array, p: dict, cfg: ModelConfig):
+    """Post-conv activations -> discretised (dA, dBx, C) in fp32.
+
+    xc: (B, S, inner) -> dA, dBx: (B, S, inner, state); C: (B, S, state).
+    """
+    st, dr = cfg.ssm_state_dim, dt_rank(cfg)
+    proj = jnp.einsum("bsi,ir->bsr", xc, p["x_proj"]).astype(jnp.float32)
+    dt_raw, bmat, cmat = jnp.split(proj, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_raw, p["dt_proj"].astype(jnp.float32))
+        + p["dt_bias"])                                       # (B,S,inner)
+    a = -jnp.exp(p["A_log"])                                  # (inner, st)
+    da = jnp.exp(dt[..., None] * a[None, None])               # (B,S,inner,st)
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+    return da, dbx, cmat
+
+
+def _chunk_scan(da, dbx):
+    """Within-chunk inclusive scan of h_t = da_t * h_{t-1} + dbx_t along
+    axis 1, h_0 = 0.  Returns all h_t (B, L, inner, st)."""
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+    return h
+
+
+def mamba_mix(x: jax.Array, p: dict, cfg: ModelConfig, state: MambaState,
+              chunk: int = SSM_CHUNK) -> Tuple[jax.Array, MambaState]:
+    """Sequence-mix a full segment (train/prefill).  x: (B, S, d)."""
+    b, s, d = x.shape
+    inner = cfg.ssm_expand * d
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, "ssm_inner")
+    z = constrain(z, "ssm_inner")
+    xc, new_tail = _causal_conv(xin, state.conv, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xc_p = xc
+    nch = (s + pad) // chunk
+    xch = xc_p.reshape(b, nch, chunk, inner).transpose(1, 0, 2, 3)
+    valid = (jnp.arange(nch * chunk) < s).reshape(nch, chunk)
+
+    def chunk_body(h, xs):                     # h: (B, inner, st)
+        xcb, vb = xs
+        da, dbx, cmat = _ssm_inputs(xcb, p, cfg)
+        # padded steps are identity transitions (da=1, dbx=0)
+        da = jnp.where(vb[None, :, None, None], da, 1.0)
+        dbx = jnp.where(vb[None, :, None, None], dbx, 0.0)
+        hs = _chunk_scan(da, dbx)              # (B, L, inner, st)
+        # fold in carried state: h_t += (prod_{r<=t} da_r) * h_in
+        da_cum = jnp.cumprod(da, axis=1)
+        hs = hs + da_cum * h[:, None]
+        y = jnp.einsum("blis,bls->bli", hs, cmat)
+        return hs[:, -1], y.astype(x.dtype)
+
+    h_final, ys = jax.lax.scan(chunk_body, state.h, (xch, valid))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s + pad, inner)[:, :s]
+    y = y + xc * p["D"].astype(x.dtype)[None, None, :]
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, MambaState(h=h_final, conv=new_tail)
+
+
+def mamba_decode(x: jax.Array, p: dict, cfg: ModelConfig,
+                 state: MambaState) -> Tuple[jax.Array, MambaState]:
+    """Single-token recurrent step.  x: (B, 1, d)."""
+    b, _, d = x.shape
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, new_tail = _causal_conv(xin, state.conv, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    da, dbx, cmat = _ssm_inputs(xc, p, cfg)    # (B,1,inner,st)
+    h = da[:, 0] * state.h + dbx[:, 0]
+    y = jnp.einsum("bis,bs->bi", h, cmat[:, 0])[:, None, :].astype(x.dtype)
+    y = y + xc * p["D"].astype(x.dtype)[None, None, :]
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, MambaState(h=h, conv=new_tail)

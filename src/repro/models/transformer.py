@@ -1,0 +1,411 @@
+"""Model assembly: superblocks, scan-over-superblocks, enc-dec, entry points.
+
+Heterogeneous layer stacks (jamba's 1:7 mamba/attn, xlstm's 7:1 mlstm/slstm)
+are expressed as one *superblock* — the repeating period of the pattern —
+scanned ``num_superblocks`` times with stacked parameters.  This keeps the
+HLO small at 88 layers and makes the remat boundary the superblock.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, CROSS, MAMBA, MLSTM, SLSTM, ModelConfig)
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import KVCache
+from repro.models.common import (constrain, cross_entropy_loss, dense_init,
+                                 embed_init, init_mlp_params, rms_norm,
+                                 swiglu_mlp)
+
+
+# --------------------------------------------------------------------------
+# Parameter construction
+# --------------------------------------------------------------------------
+
+def _init_block_position(key, kind: str, mlp_kind: str, cfg: ModelConfig,
+                         dtype) -> dict:
+    d = cfg.d_model
+    keys = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": jnp.ones((d,), dtype)}
+    if kind in (ATTN, CROSS):
+        p["mix"] = attn_mod.init_attn_params(keys[0], cfg, dtype)
+        if kind == CROSS:
+            p["norm_cross"] = jnp.ones((d,), dtype)
+            p["cross"] = attn_mod.init_attn_params(keys[3], cfg, dtype)
+    elif kind == MAMBA:
+        p["mix"] = ssm_mod.init_mamba_params(keys[0], cfg, dtype)
+    elif kind == MLSTM:
+        p["mix"] = xlstm_mod.init_mlstm_params(keys[0], cfg, dtype)
+    elif kind == SLSTM:
+        p["mix"] = xlstm_mod.init_slstm_params(keys[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if mlp_kind == "dense":
+        p["norm2"] = jnp.ones((d,), dtype)
+        p["mlp"] = init_mlp_params(keys[1], d, cfg.d_ff, dtype)
+    elif mlp_kind == "moe":
+        p["norm2"] = jnp.ones((d,), dtype)
+        p["mlp"] = moe_mod.init_moe_params(keys[1], cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    n_sb = cfg.num_superblocks
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab_size),
+                                       dtype=dtype)
+
+    def stack_position(j, kind, mlp_kind, base_key):
+        def one(i):
+            return _init_block_position(
+                jax.random.fold_in(base_key, i * 1000 + j), kind, mlp_kind,
+                cfg, dtype)
+        trees = [one(i) for i in range(n_sb)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+    params["blocks"] = tuple(
+        stack_position(j, kind, mlp_kind, keys[2])
+        for j, (kind, mlp_kind) in enumerate(
+            zip(cfg.block_pattern, cfg.mlp_pattern)))
+
+    if cfg.encoder_decoder:
+        def enc_one(i):
+            return _init_block_position(
+                jax.random.fold_in(keys[3], i), ATTN, "dense", cfg, dtype)
+        trees = [enc_one(i) for i in range(cfg.num_encoder_layers)]
+        params["enc_blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+        params["enc_final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the parameters — no allocation (dry-run)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# --------------------------------------------------------------------------
+# Cache construction
+# --------------------------------------------------------------------------
+
+class ModelCache(NamedTuple):
+    blocks: Tuple[Any, ...]   # per pattern position, leaves stacked (n_sb,...)
+    pos: jax.Array            # scalar int32: #tokens already generated
+    cross: Optional[Tuple[Any, ...]] = None   # enc-dec cross KV per position
+
+
+def _position_cache(kind: str, batch: int, s_cache: int, cfg: ModelConfig,
+                    dtype):
+    hd = cfg.resolved_head_dim
+    if kind in (ATTN, CROSS):
+        return attn_mod.make_kv_cache(batch, s_cache, cfg.num_kv_heads, hd,
+                                      dtype)
+    if kind == MAMBA:
+        return ssm_mod.make_mamba_state(batch, cfg, dtype)
+    if kind == MLSTM:
+        return xlstm_mod.make_mlstm_state(batch, cfg, dtype)
+    if kind == SLSTM:
+        return xlstm_mod.make_slstm_state(batch, cfg)
+    raise ValueError(kind)
+
+
+def decode_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Attention-cache length for a decode context of ``seq_len``.
+
+    Native sliding-window archs cache only the window.  Full-attention archs
+    cache the whole context up to 128k; beyond that (long_500k) they switch to
+    the ring-buffer window variant — EXCEPT hybrids (jamba), whose few
+    attention layers keep the full context (their long-context design point).
+    """
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    if seq_len > 131_072 and cfg.arch_type != "hybrid":
+        return min(seq_len, cfg.long_context_window)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=None) -> ModelCache:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_sb = cfg.num_superblocks
+    s_cache = decode_cache_len(cfg, seq_len)
+
+    def stacked(kind):
+        one = _position_cache(kind, batch, s_cache, cfg, dtype)
+        return jax.tree.map(
+            lambda x: jnp.zeros((n_sb,) + x.shape, x.dtype), one)
+
+    blocks = tuple(stacked(k) for k in cfg.block_pattern)
+    cross = None
+    if cfg.encoder_decoder:
+        one = attn_mod.make_kv_cache(batch, cfg.encoder_seq_len,
+                                     cfg.num_kv_heads,
+                                     cfg.resolved_head_dim, dtype)
+        cross = tuple(
+            jax.tree.map(lambda x: jnp.zeros((n_sb,) + x.shape, x.dtype), one)
+            for k in cfg.block_pattern)
+    return ModelCache(blocks=blocks, pos=jnp.zeros((), jnp.int32),
+                      cross=cross)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, seq_len))
+
+
+# --------------------------------------------------------------------------
+# Superblock forward
+# --------------------------------------------------------------------------
+
+def _mix_forward(kind: str, x, p, cfg: ModelConfig, *, mode: str, positions,
+                 pos, cache):
+    """Dispatch one sequence-mixer.  Returns (out, new_cache)."""
+    if kind in (ATTN, CROSS):
+        return attn_mod.attn_forward(
+            x, p["mix"], cfg, positions=positions, mode=mode, cache=cache,
+            pos=pos)
+    if cache is None:
+        # train mode: fresh zero state for recurrent mixers
+        b = x.shape[0]
+        if kind == MAMBA:
+            cache = ssm_mod.make_mamba_state(b, cfg, x.dtype)
+        elif kind == MLSTM:
+            cache = xlstm_mod.make_mlstm_state(b, cfg, x.dtype)
+        elif kind == SLSTM:
+            cache = xlstm_mod.make_slstm_state(b, cfg)
+    if mode == "decode":
+        if kind == MAMBA:
+            return ssm_mod.mamba_decode(x, p["mix"], cfg, cache)
+        if kind == MLSTM:
+            return xlstm_mod.mlstm_decode(x, p["mix"], cfg, cache)
+        if kind == SLSTM:
+            return xlstm_mod.slstm_decode(x, p["mix"], cfg, cache)
+    else:
+        if kind == MAMBA:
+            return ssm_mod.mamba_mix(x, p["mix"], cfg, cache)
+        if kind == MLSTM:
+            return xlstm_mod.mlstm_mix(x, p["mix"], cfg, cache)
+        if kind == SLSTM:
+            return xlstm_mod.slstm_mix(x, p["mix"], cfg, cache)
+    raise ValueError(kind)
+
+
+def superblock(h, blk_params, blk_cache, cross_cache, cfg: ModelConfig, *,
+               mode: str, positions, pos, enc_out=None):
+    """One period of the block pattern.
+
+    h: (B, S, d).  blk_params/blk_cache: tuples per pattern position (one
+    superblock slice, no leading n_sb dim).  Returns (h, new_caches,
+    new_cross, aux_loss).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+    new_cross = []
+    for j, (kind, mlp_kind) in enumerate(zip(cfg.block_pattern,
+                                             cfg.mlp_pattern)):
+        p = blk_params[j]
+        cache_j = blk_cache[j] if blk_cache is not None else None
+        x = rms_norm(h, p["norm1"], cfg.norm_eps)
+        out, new_c = _mix_forward(kind, x, p, cfg, mode=mode,
+                                  positions=positions, pos=pos,
+                                  cache=cache_j)
+        h = h + out
+        new_caches.append(new_c if new_c is not None else cache_j)
+        if kind == CROSS:
+            # cross-attention sub-layer
+            if mode in ("train", "prefill") and enc_out is not None:
+                ckv = attn_mod.encode_cross_kv(enc_out, p["cross"], cfg)
+            else:
+                ckv = cross_cache[j] if cross_cache is not None else None
+            if ckv is not None:
+                xc = rms_norm(h, p["norm_cross"], cfg.norm_eps)
+                h = h + attn_mod.cross_attn_forward(xc, p["cross"], cfg, ckv)
+            new_cross.append(ckv)
+        else:
+            new_cross.append(cross_cache[j] if cross_cache is not None else None)
+        if mlp_kind != "none":
+            x2 = rms_norm(h, p["norm2"], cfg.norm_eps)
+            if mlp_kind == "dense":
+                out2 = swiglu_mlp(x2, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                                  p["mlp"]["w_down"])
+            else:
+                if mode == "decode":
+                    out2 = moe_mod.moe_forward_decode(x2, p["mlp"], cfg)
+                else:
+                    out2, a = moe_mod.moe_forward(x2, p["mlp"], cfg)
+                    aux = aux + a
+            h = h + out2
+        h = constrain(h, "residual")
+    return h, tuple(new_caches), tuple(new_cross), aux
+
+
+def run_stack(h, params, cache: Optional[ModelCache], cfg: ModelConfig, *,
+              mode: str, positions, pos, enc_out=None, remat: bool = False):
+    """Scan the superblock over the stacked parameters.
+
+    Returns (h, new_cache_blocks, new_cross, aux)."""
+    have_cache = cache is not None
+    n_pos = len(cfg.block_pattern)
+    none_tuple = (None,) * n_pos   # no pytree leaves -> scanned as-is
+    blocks_xs = cache.blocks if have_cache else none_tuple
+    cross_xs = (cache.cross if (have_cache and cache.cross is not None)
+                else none_tuple)
+
+    def body(carry, xs):
+        h, aux = carry
+        blk_params, blk_cache, cross_cache = xs
+        if all(c is None for c in blk_cache):
+            blk_cache = None
+        if all(c is None for c in cross_cache):
+            cross_cache = None
+        h, new_c, new_x, a = superblock(
+            h, blk_params, blk_cache, cross_cache, cfg, mode=mode,
+            positions=positions, pos=pos, enc_out=enc_out)
+        ys = (new_c, new_x) if have_cache else None
+        return (h, aux + a), ys
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    (h, aux), ys = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)),
+        (params["blocks"], blocks_xs, cross_xs))
+    if have_cache:
+        new_blocks, new_cross = ys
+        if cache.cross is None:
+            new_cross = None
+        return h, new_blocks, new_cross, aux
+    return h, None, None, aux
+
+
+# --------------------------------------------------------------------------
+# Embedding / head
+# --------------------------------------------------------------------------
+
+def _sinusoidal_pos(positions: jax.Array, d: int) -> jax.Array:
+    """positions: (..., S) -> (..., S, d) fp32 sinusoidal embedding."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def embed_tokens(params, tokens: jax.Array, cfg: ModelConfig,
+                 positions: Optional[jax.Array]) -> jax.Array:
+    h = params["embed"][tokens]
+    if cfg.learned_pos_emb and positions is not None:
+        pe = _sinusoidal_pos(positions, cfg.d_model)
+        h = h + pe.astype(h.dtype)
+    return constrain(h, "residual")
+
+
+def lm_logits(params, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    return constrain(logits, "logits")
+
+
+# --------------------------------------------------------------------------
+# Encoder (whisper)
+# --------------------------------------------------------------------------
+
+def encode(params, frames: jax.Array, cfg: ModelConfig,
+           remat: bool = False) -> jax.Array:
+    """frames: (B, S_enc, d) stubbed frontend embeddings -> encoder output."""
+    b, s, _ = frames.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
+    h = frames + _sinusoidal_pos(positions, cfg.d_model).astype(frames.dtype)
+    h = constrain(h, "residual")
+
+    def body(h, blk_params):
+        x = rms_norm(h, blk_params["norm1"], cfg.norm_eps)
+        q, k, v = attn_mod.project_qkv(x, blk_params["mix"], cfg, None)
+        out = attn_mod.flash_attn(q, k, v, causal=False)
+        out = out.reshape(b, s, -1)
+        h = h + jnp.einsum("bsk,kd->bsd", out, blk_params["mix"]["wo"])
+        x2 = rms_norm(h, blk_params["norm2"], cfg.norm_eps)
+        h = h + swiglu_mlp(x2, blk_params["mlp"]["w_gate"],
+                           blk_params["mlp"]["w_up"],
+                           blk_params["mlp"]["w_down"])
+        return constrain(h, "residual"), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return rms_norm(h, params["enc_final_norm"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# Entry points
+# --------------------------------------------------------------------------
+
+def forward_train(params, batch: dict, cfg: ModelConfig,
+                  remat: bool = True) -> jax.Array:
+    """batch: {"tokens": (B,S) int32, "labels": (B,S) int32,
+    optionally "frames": (B,S_enc,d)} -> mean loss (scalar fp32)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
+    enc_out = None
+    if cfg.encoder_decoder:
+        enc_out = encode(params, batch["frames"], cfg, remat=remat)
+    h = embed_tokens(params, tokens, cfg, positions)
+    h, _, _, aux = run_stack(h, params, None, cfg, mode="train",
+                             positions=positions, pos=None, enc_out=enc_out,
+                             remat=remat)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, h, cfg)
+    loss = cross_entropy_loss(logits, batch["labels"])
+    return loss + aux
+
+
+def serve_prefill(params, tokens: jax.Array, cfg: ModelConfig,
+                  cache_len: Optional[int] = None,
+                  frames: Optional[jax.Array] = None,
+                  remat: bool = False):
+    """Process the prompt, build the decode cache.
+
+    Returns (last-token logits (B, V), ModelCache with pos = S)."""
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
+    cache = init_cache(cfg, b, cache_len if cache_len is not None else s)
+    enc_out = None
+    if cfg.encoder_decoder:
+        assert frames is not None
+        enc_out = encode(params, frames, cfg, remat=remat)
+    h = embed_tokens(params, tokens, cfg, positions)
+    h, new_blocks, new_cross, _ = run_stack(
+        h, params, cache, cfg, mode="prefill", positions=positions, pos=None,
+        enc_out=enc_out, remat=remat)
+    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, h, cfg)[:, 0]
+    return logits, ModelCache(blocks=new_blocks,
+                              pos=jnp.asarray(s, jnp.int32),
+                              cross=new_cross)
+
+
+def serve_decode(params, cache: ModelCache, tokens: jax.Array,
+                 cfg: ModelConfig):
+    """One decode step.  tokens: (B,) int32 -> (logits (B,V), new cache)."""
+    b = tokens.shape[0]
+    pos = cache.pos
+    positions = jnp.reshape(pos, (1, 1))
+    h = embed_tokens(params, tokens[:, None], cfg, positions)
+    h, new_blocks, new_cross, _ = run_stack(
+        h, params, cache, cfg, mode="decode", positions=positions, pos=pos)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, h, cfg)[:, 0]
+    return logits, ModelCache(blocks=new_blocks, pos=pos + 1,
+                              cross=new_cross)

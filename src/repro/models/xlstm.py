@@ -1,0 +1,330 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential) [arXiv:2405.04517].
+
+TPU adaptation: the mLSTM recurrence C_t = f_t C_{t-1} + i_t k_t v_t^T is
+computed in the *chunkwise* form — quadratic (MXU matmul) within a chunk,
+recurrent across chunks via a carried (C, n, m) state with exact log-space
+stabilisation.  The sLSTM keeps its inherently sequential scan (paper's
+design); its recurrent block-diagonal matmuls are small and the block appears
+once per 8 layers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import constrain, dense_init, rms_norm
+
+MLSTM_CHUNK = 256
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+
+class MLSTMState(NamedTuple):
+    c: jax.Array    # (B, H, hd, hd) stabilised matrix memory (true C = c*e^m)
+    n: jax.Array    # (B, H, hd)     stabilised normaliser
+    m: jax.Array    # (B, H)         log-space stabiliser
+    conv: jax.Array  # (B, ck-1, inner) causal-conv tail
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    inner = cfg.xlstm_expand * cfg.d_model
+    h = cfg.xlstm_num_heads
+    return inner, h, inner // h
+
+
+def init_mlstm_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    inner, h, hd = _mlstm_dims(cfg)
+    ck = cfg.xlstm_conv_dim
+    keys = jax.random.split(key, 9)
+    return {
+        "in_proj": dense_init(keys[0], (d, 2 * inner), dtype=dtype),
+        "conv_w": dense_init(keys[1], (ck, inner), in_axis=0, dtype=dtype),
+        "conv_b": jnp.zeros((inner,), dtype),
+        # per-head block-diagonal q/k/v projections
+        "wq": dense_init(keys[2], (h, hd, hd), dtype=dtype),
+        "wk": dense_init(keys[3], (h, hd, hd), dtype=dtype),
+        "wv": dense_init(keys[4], (h, hd, hd), dtype=dtype),
+        # gates: scalar per head from the inner activations
+        "w_i": dense_init(keys[5], (inner, h), dtype=jnp.float32),
+        "w_f": dense_init(keys[6], (inner, h), dtype=jnp.float32),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # open forget gates at init
+        "out_norm": jnp.ones((inner,), dtype),
+        "out_proj": dense_init(keys[7], (inner, d), dtype=dtype),
+    }
+
+
+def make_mlstm_state(batch: int, cfg: ModelConfig, dtype=jnp.bfloat16) -> MLSTMState:
+    inner, h, hd = _mlstm_dims(cfg)
+    return MLSTMState(
+        c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, h, hd), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, cfg.xlstm_conv_dim - 1, inner), dtype))
+
+
+def _conv(x, tail, w, b):
+    ck = w.shape[0]
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(ck))
+    return out + b[None, None, :], xp[:, -(ck - 1):]
+
+
+def _mlstm_qkv_gates(x_m: jax.Array, xc: jax.Array, p: dict, cfg: ModelConfig):
+    """x_m, xc: (B, S, inner) -> q,k,v (B,H,S,hd); i_raw,f_raw (B,H,S)."""
+    b, s, inner = x_m.shape
+    _, h, hd = _mlstm_dims(cfg)
+    xh = xc.reshape(b, s, h, hd)
+    xmh = x_m.reshape(b, s, h, hd)
+    q = jnp.einsum("bshd,hde->bhse", xh, p["wq"])
+    k = jnp.einsum("bshd,hde->bhse", xh, p["wk"]) * (hd ** -0.5)
+    v = jnp.einsum("bshd,hde->bhse", xmh, p["wv"])
+    i_raw = (jnp.einsum("bsi,ih->bhs", xc.astype(jnp.float32), p["w_i"])
+             + p["b_i"][None, :, None])
+    f_raw = (jnp.einsum("bsi,ih->bhs", xc.astype(jnp.float32), p["w_f"])
+             + p["b_f"][None, :, None])
+    return q, k, v, i_raw, f_raw
+
+
+def mlstm_chunk(q, k, v, i_raw, f_raw, state_c, state_n, state_m):
+    """One chunk of the stabilised chunkwise mLSTM.
+
+    q,k,v: (B,H,L,hd); i_raw,f_raw: (B,H,L); carried (c,n,m).
+    Returns h (B,H,L,hd) and the updated carry.  All fp32.
+    This function is the contract implemented by kernels/mlstm_scan.
+    """
+    q32, k32, v32 = (t.astype(jnp.float32) for t in (q, k, v))
+    logf = jax.nn.log_sigmoid(f_raw)                    # (B,H,L)
+    b_cum = jnp.cumsum(logf, axis=-1)                   # Σ_{r<=t} log f_r
+    # g_t = max_{j<=t} (i_raw_j - b_j); stabiliser M_t = max(m_in, g_t)
+    a = i_raw - b_cum                                   # (B,H,L)
+    g = jax.lax.cummax(a, axis=a.ndim - 1)
+    m_t = jnp.maximum(state_m[..., None], g)            # M_t (B,H,L)
+    # intra-chunk decay: D_tj = exp(a_j - M_t) for j <= t
+    l = q.shape[2]
+    dmat = jnp.exp(a[:, :, None, :] - m_t[..., None])   # (B,H,L(t),L(j))
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    dmat = jnp.where(causal[None, None], dmat, 0.0)
+    s_qk = jnp.einsum("bhte,bhje->bhtj", q32, k32)      # (B,H,L,L)
+    w = s_qk * dmat
+    num = jnp.einsum("bhtj,bhje->bhte", w, v32)
+    n_vec = jnp.einsum("bhtj,bhje->bhte", dmat, k32)
+    # inter-chunk: coeff exp(m_in - M_t)
+    inter = jnp.exp(state_m[..., None] - m_t)           # (B,H,L)
+    num = num + inter[..., None] * jnp.einsum("bhte,bhef->bhtf", q32, state_c)
+    n_vec = n_vec + inter[..., None] * state_n[:, :, None, :]
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhte,bhte->bht", q32, n_vec)),
+                      jnp.exp(-(b_cum + m_t)))
+    h = num / den[..., None]
+    # carry update at chunk end
+    m_l = b_cum[..., -1] + jnp.maximum(state_m, g[..., -1])     # (B,H)
+    w_in = jnp.exp(state_m - m_l + b_cum[..., -1])
+    w_j = jnp.exp(a + b_cum[..., -1:] - m_l[..., None])         # (B,H,L)
+    c_out = (w_in[..., None, None] * state_c
+             + jnp.einsum("bhj,bhje,bhjf->bhef", w_j, k32, v32))
+    n_out = (w_in[..., None] * state_n
+             + jnp.einsum("bhj,bhje->bhe", w_j, k32))
+    return h, (c_out, n_out, m_l)
+
+
+def mlstm_mix(x: jax.Array, p: dict, cfg: ModelConfig, state: MLSTMState,
+              chunk: int = MLSTM_CHUNK) -> Tuple[jax.Array, MLSTMState]:
+    """Full-segment mLSTM block body.  x: (B, S, d) (post-norm residual branch)."""
+    b, s, d = x.shape
+    inner, h, hd = _mlstm_dims(cfg)
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_proj"])
+    x_m, z = jnp.split(xz, 2, axis=-1)
+    x_m = constrain(x_m, "xlstm_inner")
+    z = constrain(z, "xlstm_inner")
+    xc, new_tail = _conv(x_m, state.conv, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    q, k, v, i_raw, f_raw = _mlstm_qkv_gates(x_m, xc, p, cfg)
+
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:  # pad with zero-input steps: i gate -inf keeps them inert
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        # padded steps: i -> -inf (no write), f -> +30 (log f ~ 0, no decay)
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=-1e30)
+        f_raw = jnp.pad(f_raw, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=30.0)
+    nch = (s + pad) // chunk
+    resh = lambda t: t.reshape(b, h, nch, chunk, -1).transpose(2, 0, 1, 3, 4)
+    reshg = lambda t: t.reshape(b, h, nch, chunk).transpose(2, 0, 1, 3)
+
+    def body(carry, xs):
+        c, n, m = carry
+        qb, kb, vb, ib, fb = xs
+        hb, carry_new = mlstm_chunk(qb, kb, vb, ib, fb, c, n, m)
+        return carry_new, hb
+
+    (c_f, n_f, m_f), hs = jax.lax.scan(
+        body, (state.c, state.n, state.m),
+        (resh(q), resh(k), resh(v), reshg(i_raw), reshg(f_raw)))
+    hseq = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, s + pad, hd)[:, :, :s]
+    hflat = hseq.transpose(0, 2, 1, 3).reshape(b, s, inner).astype(x.dtype)
+    hflat = rms_norm(hflat, p["out_norm"], cfg.norm_eps)
+    hflat = hflat * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", hflat, p["out_proj"])
+    return out, MLSTMState(c=c_f, n=n_f, m=m_f, conv=new_tail)
+
+
+def mlstm_decode(x: jax.Array, p: dict, cfg: ModelConfig,
+                 state: MLSTMState) -> Tuple[jax.Array, MLSTMState]:
+    """Single-token recurrent step.  x: (B, 1, d)."""
+    b, _, d = x.shape
+    inner, h, hd = _mlstm_dims(cfg)
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_proj"])
+    x_m, z = jnp.split(xz, 2, axis=-1)
+    xc, new_tail = _conv(x_m, state.conv, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    q, k, v, i_raw, f_raw = _mlstm_qkv_gates(x_m, xc, p, cfg)
+    q32, k32, v32 = (t[:, :, 0].astype(jnp.float32) for t in (q, k, v))
+    i_r, f_r = i_raw[..., 0], f_raw[..., 0]             # (B,H)
+    logf = jax.nn.log_sigmoid(f_r)
+    m_new = jnp.maximum(logf + state.m, i_r)
+    f_s = jnp.exp(logf + state.m - m_new)
+    i_s = jnp.exp(i_r - m_new)
+    c = f_s[..., None, None] * state.c + i_s[..., None, None] * (
+        k32[..., :, None] * v32[..., None, :])
+    n = f_s[..., None] * state.n + i_s[..., None] * k32
+    num = jnp.einsum("bhe,bhef->bhf", q32, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", q32, n)),
+                      jnp.exp(-m_new))
+    hvec = (num / den[..., None]).reshape(b, 1, inner).astype(x.dtype)
+    hvec = rms_norm(hvec, p["out_norm"], cfg.norm_eps)
+    hvec = hvec * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", hvec, p["out_proj"])
+    return out, MLSTMState(c=c, n=n, m=m_new, conv=new_tail)
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+
+class SLSTMState(NamedTuple):
+    c: jax.Array    # (B, d) cell
+    n: jax.Array    # (B, d) normaliser
+    m: jax.Array    # (B, d) stabiliser
+    h: jax.Array    # (B, d) hidden (recurrent input)
+
+
+def init_slstm_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    h = cfg.xlstm_num_heads
+    hd = d // h
+    keys = jax.random.split(key, 7)
+    d_ffn = int(d * 4 / 3)
+    return {
+        # input projections for gates z, i, f, o
+        "w_in": dense_init(keys[0], (d, 4 * d), dtype=dtype),
+        # block-diagonal recurrent projections per head
+        "r": dense_init(keys[1], (h, hd, 4 * hd), dtype=dtype),
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.zeros((d,)),
+                              jnp.full((d,), 3.0), jnp.zeros((d,))]
+                             ).astype(jnp.float32),
+        "out_norm": jnp.ones((d,), dtype),
+        # post-cell GEGLU feed-forward (paper: pf 4/3)
+        "ff_gate": dense_init(keys[2], (d, d_ffn), dtype=dtype),
+        "ff_up": dense_init(keys[3], (d, d_ffn), dtype=dtype),
+        "ff_down": dense_init(keys[4], (d_ffn, d), dtype=dtype),
+    }
+
+
+def make_slstm_state(batch: int, cfg: ModelConfig) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full((batch, d), -1e30, jnp.float32), h=z)
+
+
+def _slstm_step(p: dict, cfg: ModelConfig, state: SLSTMState,
+                wx_t: jax.Array) -> Tuple[SLSTMState, jax.Array]:
+    """wx_t: (B, 4d) precomputed input projection for one timestep."""
+    d = cfg.d_model
+    nh = cfg.xlstm_num_heads
+    hd = d // nh
+    b = wx_t.shape[0]
+    hprev = state.h.reshape(b, nh, hd)
+    rec = jnp.einsum("bhe,hef->bhf", hprev.astype(p["r"].dtype), p["r"])
+    gates = (wx_t.astype(jnp.float32)
+             + rec.reshape(b, 4 * d).astype(jnp.float32) + p["b"])
+    zg, ig, fg, og = jnp.split(gates, 4, axis=-1)
+    z = jnp.tanh(zg)
+    o = jax.nn.sigmoid(og)
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + state.m, ig)
+    f_s = jnp.exp(logf + state.m - m_new)
+    i_s = jnp.exp(ig - m_new)
+    c = f_s * state.c + i_s * z
+    n = jnp.maximum(f_s * state.n + i_s, jnp.exp(-m_new))
+    h = o * (c / n)
+    return SLSTMState(c=c, n=n, m=m_new, h=h), h
+
+
+def _slstm_scan_local(wx: jax.Array, state: SLSTMState, r: jax.Array,
+                      bias: jax.Array, cfg: ModelConfig):
+    """The per-timestep recurrence over a (local) batch shard."""
+    p = {"r": r, "b": bias}
+
+    def body(st, wx_t):
+        st2, h = _slstm_step(p, cfg, st, wx_t)
+        return st2, h
+
+    state_f, hs = jax.lax.scan(body, state, wx.transpose(1, 0, 2))
+    return hs, state_f
+
+
+def slstm_mix(x: jax.Array, p: dict, cfg: ModelConfig, state: SLSTMState
+              ) -> Tuple[jax.Array, SLSTMState]:
+    """Sequential scan over the segment.  x: (B, S, d)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.models.common import get_shard_context
+    b, s, d = x.shape
+    wx = jnp.einsum("bsd,df->bsf", x, p["w_in"])        # (B,S,4d)
+    # gather ONCE before the per-timestep scan: any model-axis sharding here
+    # would turn into one all-reduce per timestep (4096 per layer)
+    wx = constrain(wx, "slstm_seq")
+
+    ctx = get_shard_context()
+    if ctx and ctx.get("dp") and s > 1:
+        # shard_map keeps the time loop shard-local; crucially its transpose
+        # psums the REPLICATED recurrent weights' gradients ONCE instead of
+        # letting SPMD sink a dR all-reduce into every timestep of the
+        # backward loop (measured: 4096 × 17 MB per layer; §Perf log)
+        dp = tuple(ctx["dp"])
+        st_spec = SLSTMState(*(P(dp, None),) * 4)
+        fn = jax.shard_map(
+            lambda wx_, st_, r_, b_: _slstm_scan_local(wx_, st_, r_, b_, cfg),
+            mesh=ctx["mesh"],
+            in_specs=(P(dp, None, None), st_spec, P(), P()),
+            out_specs=(P(None, dp, None), st_spec),
+            # fully-manual: spare auto axes crash the XLA partitioner on
+            # 3-axis meshes (see moe_forward)
+            axis_names=set(ctx["mesh"].axis_names), check_vma=False)
+        hs, state_f = fn(wx, state, p["r"], p["b"])
+    else:
+        hs, state_f = _slstm_scan_local(wx, state, p["r"], p["b"], cfg)
+    h = hs.transpose(1, 0, 2).astype(x.dtype)           # (B,S,d)
+    h = rms_norm(h, p["out_norm"], cfg.norm_eps)
+    # GEGLU FFN
+    g = jnp.einsum("bsd,df->bsf", h, p["ff_gate"])
+    u = jnp.einsum("bsd,df->bsf", h, p["ff_up"])
+    hf = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out = jnp.einsum("bsf,fd->bsd", hf, p["ff_down"])
+    return out, state_f
+
+
+def slstm_decode(x: jax.Array, p: dict, cfg: ModelConfig, state: SLSTMState
+                 ) -> Tuple[jax.Array, SLSTMState]:
+    out, state_f = slstm_mix(x, p, cfg, state)
+    return out, state_f

@@ -1,0 +1,5 @@
+from repro.serving.engine import (ModelStageServer, PipelineEngine, Query,
+                                  ServeStats, make_trace)
+
+__all__ = ["ModelStageServer", "PipelineEngine", "Query", "ServeStats",
+           "make_trace"]

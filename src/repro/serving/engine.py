@@ -1,0 +1,203 @@
+"""Live mini serving engine: runs REAL JAX models as microservice pipelines.
+
+This is the reduced-scale twin of the simulator: actual model-zoo forward
+passes (CPU, reduced configs), a request queue with QoS-aware dynamic
+batching, and both communication mechanisms — ``DeviceHandoff`` passes the
+stage-output ``jax.Array`` by reference (global-memory mechanism, §VI-B);
+``HostStagedChannel`` forces the device→host→device round trip (§VI-A).
+
+It validates Camelot's mechanisms end-to-end and produces the real step
+timings that calibrate the simulator's profiles (``profile_stage_timings``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig, get_config
+from repro.core.comm import DeviceHandoff, HostStagedChannel
+from repro.core.qos import QoSTracker
+from repro.models import init_params, serve_prefill
+
+
+@dataclass
+class Query:
+    qid: int
+    arrival: float
+    tokens: np.ndarray                  # (S,) int32
+    done: Optional[float] = None
+
+
+class ModelStageServer:
+    """One microservice stage: a reduced model served via prefill scoring.
+
+    The stage consumes a token batch (or the previous stage's hidden-state
+    batch re-tokenised via argmax — the pipeline contract used by the
+    Camelot-suite live twins) and emits next-token ids.
+    """
+
+    def __init__(self, name: str, arch: str, seq_len: int = 32, seed: int = 0):
+        self.name = name
+        self.cfg: ModelConfig = get_config(arch, reduced=True)
+        self.seq_len = seq_len
+        self.params = init_params(jax.random.PRNGKey(seed), self.cfg)
+        cfg = self.cfg
+
+        def run(params, tokens):
+            frames = None
+            if cfg.encoder_decoder:
+                frames = jnp.zeros(
+                    (tokens.shape[0], cfg.encoder_seq_len, cfg.d_model),
+                    jnp.bfloat16)
+                logits, _ = serve_prefill(params, tokens, cfg,
+                                          frames=frames)
+            else:
+                logits, _ = serve_prefill(params, tokens, cfg)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        self._run = jax.jit(run)
+        self.calls = 0
+        self.busy_time = 0.0
+
+    def warmup(self, batch: int):
+        t = jnp.zeros((batch, self.seq_len), jnp.int32)
+        self._run(self.params, t).block_until_ready()
+
+    def process(self, tokens: jax.Array) -> jax.Array:
+        t0 = time.perf_counter()
+        out = self._run(self.params, tokens)
+        out.block_until_ready()
+        self.busy_time += time.perf_counter() - t0
+        self.calls += 1
+        return out
+
+    def profile_stage_timings(self, batches: Sequence[int] = (1, 2, 4, 8),
+                              repeats: int = 3) -> List[tuple]:
+        """Measured (batch, seconds) pairs — the live profiling feed for
+        repro.core.predictor.profile_from_engine."""
+        out = []
+        for b in batches:
+            self.warmup(b)
+            ts = []
+            for _ in range(repeats):
+                t = jnp.zeros((b, self.seq_len), jnp.int32)
+                t0 = time.perf_counter()
+                self._run(self.params, t).block_until_ready()
+                ts.append(time.perf_counter() - t0)
+            out.append((b, float(np.median(ts))))
+        return out
+
+
+@dataclass
+class ServeStats:
+    qos: QoSTracker
+    comm_time: float = 0.0
+    compute_time: float = 0.0
+    batches: int = 0
+
+    def summary(self) -> dict:
+        return {
+            "p99": self.qos.tail_latency(),
+            "mean": self.qos.mean(),
+            "completed": self.qos.count(),
+            "comm_time": self.comm_time,
+            "compute_time": self.compute_time,
+            "comm_frac": self.comm_time
+                         / max(self.comm_time + self.compute_time, 1e-12),
+        }
+
+
+class PipelineEngine:
+    """Executes a pipeline of ModelStageServers over a query trace."""
+
+    def __init__(self, stages: Sequence[ModelStageServer],
+                 comm_mechanism: str = "device", qos_target: float = 2.0,
+                 batch_size: int = 4, batch_timeout: float = 0.2):
+        assert comm_mechanism in ("device", "host")
+        self.stages = list(stages)
+        self.comm_mechanism = comm_mechanism
+        self.channels = [DeviceHandoff() if comm_mechanism == "device"
+                         else HostStagedChannel()
+                         for _ in range(len(stages) - 1)]
+        self.qos_target = qos_target
+        self.batch_size = batch_size
+        self.batch_timeout = batch_timeout
+
+    def _seq_len(self) -> int:
+        return self.stages[0].seq_len
+
+    def run_trace(self, queries: List[Query]) -> ServeStats:
+        """Synchronous replay: queries arrive per their timestamps; batches
+        dispatch on size/timeout; wall-clock latencies recorded."""
+        stats = ServeStats(qos=QoSTracker(self.qos_target))
+        for st in self.stages:
+            st.warmup(self.batch_size)
+        start = time.perf_counter()
+        pending: List[Query] = []
+        i = 0
+        n = len(queries)
+        while i < n or pending:
+            now = time.perf_counter() - start
+            # admit arrivals
+            while i < n and queries[i].arrival <= now:
+                pending.append(queries[i])
+                i += 1
+            dispatch = False
+            if len(pending) >= self.batch_size:
+                dispatch = True
+            elif pending and (now - pending[0].arrival) >= self.batch_timeout:
+                dispatch = True
+            elif not pending and i < n:
+                # fast-forward idle gaps instead of spinning
+                time.sleep(max(queries[i].arrival - now, 0) if
+                           queries[i].arrival - now < 0.01 else 0.001)
+                continue
+            if not dispatch:
+                time.sleep(0.0005)
+                continue
+            batch = pending[:self.batch_size]
+            del pending[:len(batch)]
+            self._process_batch(batch, stats, start)
+        return stats
+
+    def _process_batch(self, batch: List[Query], stats: ServeStats,
+                       start: float):
+        # pad partial batches to the fixed batch size: one compiled shape
+        stacked = np.stack([q.tokens for q in batch])
+        if len(batch) < self.batch_size:
+            pad = np.zeros((self.batch_size - len(batch),) +
+                           stacked.shape[1:], stacked.dtype)
+            stacked = np.concatenate([stacked, pad])
+        tokens = jnp.asarray(stacked)
+        x = tokens
+        for si, stage in enumerate(self.stages):
+            t0 = time.perf_counter()
+            out = stage.process(x)
+            stats.compute_time += time.perf_counter() - t0
+            if si + 1 < len(self.stages):
+                t0 = time.perf_counter()
+                handed = self.channels[si].send(out)
+                stats.comm_time += time.perf_counter() - t0
+                # next stage consumes previous outputs as a token prefix
+                nxt_len = self.stages[si + 1].seq_len
+                vocab_next = self.stages[si + 1].cfg.vocab_size
+                x = jnp.tile(handed[:, None] % vocab_next, (1, nxt_len))
+        done = time.perf_counter() - start
+        for q in batch:
+            q.done = done
+            stats.qos.record(done - q.arrival)
+        stats.batches += 1
+
+
+def make_trace(n: int, qps: float, seq_len: int, vocab: int,
+               seed: int = 0) -> List[Query]:
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.exponential(1.0 / qps, n))
+    return [Query(qid=i, arrival=float(t[i]),
+                  tokens=rng.integers(0, vocab, seq_len).astype(np.int32))
+            for i in range(n)]

@@ -1,0 +1,12 @@
+from repro.sim.baselines import (camelot, camelot_min_resource, camelot_nc,
+                                 even_allocation, laius, standalone)
+from repro.sim.simulator import (PipelineSimulator, SimConfig, SimResult,
+                                 find_peak_load)
+from repro.sim.workloads import (artifact_pipelines, artifact_stage,
+                                 camelot_suite)
+
+__all__ = [
+    "camelot", "camelot_min_resource", "camelot_nc", "even_allocation",
+    "laius", "standalone", "PipelineSimulator", "SimConfig", "SimResult",
+    "find_peak_load", "artifact_pipelines", "artifact_stage", "camelot_suite",
+]

@@ -1,0 +1,254 @@
+"""Discrete-event datacenter simulator for GPU-microservice pipelines.
+
+The simulator is the *physics*: ground-truth durations from
+MicroserviceProfile curves, runtime global-memory-bandwidth contention on
+each device (the effect Camelot's Constraint-3 manages), PCIe stream
+contention on each host link (paper Fig. 9), and the chosen inter-stage
+communication mechanism.  Policies under test only choose the allocation +
+placement + mechanism; the simulator charges them the consequences.
+
+Event flow per batch: [arrive & batch at stage-0 queue] -> for each stage:
+wait for a free instance -> compute (duration × contention factor) ->
+transfer to next stage (mechanism-dependent) -> ... -> complete.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.comm import CommModel
+from repro.core.qos import QoSTracker
+from repro.core.types import (Allocation, DeviceSpec, MicroserviceProfile,
+                              Pipeline, Placement)
+
+
+@dataclass
+class SimConfig:
+    duration: float = 20.0             # simulated seconds
+    warmup: float = 2.0                # ignore latencies before this
+    batch_timeout_frac: float = 0.25   # dispatch partial batch after
+                                       # frac×QoS waiting
+    seed: int = 0
+    max_queries: int = 60_000
+    contention_noise: float = 0.02
+
+
+@dataclass
+class InstanceState:
+    stage: int
+    device: int
+    quota: float
+    busy_until: float = 0.0
+    bandwidth: float = 0.0             # bw demand while active
+    active: bool = False
+
+
+@dataclass
+class SimResult:
+    p99: float
+    mean_latency: float
+    completed: int
+    offered_qps: float
+    achieved_qps: float
+    qos: QoSTracker
+    device_busy: Dict[int, float] = field(default_factory=dict)
+
+    @property
+    def normalized_p99(self) -> float:
+        return self.p99 / self.qos.target if self.qos.target else 0.0
+
+
+class PipelineSimulator:
+    def __init__(self, pipeline: Pipeline, allocation: Allocation,
+                 device: DeviceSpec, comm: CommModel,
+                 sim: SimConfig = SimConfig()):
+        assert allocation.placement is not None, "allocation must be placed"
+        self.pipeline = pipeline
+        self.alloc = allocation
+        self.device = device
+        self.comm = comm
+        self.cfg = sim
+
+    # ------------------------------------------------------------------
+
+    def run(self, offered_qps: float) -> SimResult:
+        cfg = self.cfg
+        rng = np.random.default_rng(cfg.seed)
+        pipe = self.pipeline
+        n_stages = pipe.n_stages
+        qos = QoSTracker(pipe.qos_target)
+
+        # instances
+        instances: List[InstanceState] = []
+        stage_instances: List[List[int]] = [[] for _ in range(n_stages)]
+        for si, placed in enumerate(self.alloc.placement.per_stage):
+            for dev, quota in placed:
+                stage_instances[si].append(len(instances))
+                instances.append(InstanceState(si, dev, quota))
+
+        batch_size = self.alloc.stages[0].batch
+        # per-stage FIFO of ready batches: (ready_time, arrivals, count)
+        stage_queues: List[List] = [[] for _ in range(n_stages)]
+        device_busy: Dict[int, float] = {}
+
+        # ---- contention bookkeeping ----------------------------------
+        def device_bw_load(dev: int) -> float:
+            return sum(i.bandwidth for i in instances
+                       if i.active and i.device == dev)
+
+        def host_streams(dev: int) -> int:
+            return self._host_streams.get(dev, 0)
+
+        self._host_streams: Dict[int, int] = {}
+
+        # ---- event queue ----------------------------------------------
+        # (time, seq, kind, payload)
+        evq: List[Tuple] = []
+        seq = itertools.count()
+
+        def push(t, kind, payload):
+            heapq.heappush(evq, (t, next(seq), kind, payload))
+
+        # arrivals (Poisson)
+        n_arrivals = min(int(offered_qps * cfg.duration) + 1,
+                         cfg.max_queries)
+        gaps = rng.exponential(1.0 / max(offered_qps, 1e-9), n_arrivals)
+        arrival_times = np.cumsum(gaps)
+        arrival_times = arrival_times[arrival_times < cfg.duration]
+
+        # stage-0 batching: accumulate queries, dispatch on full/timeout
+        pending: List[float] = []
+
+        def flush_pending(now):
+            if pending:
+                batch = list(pending)
+                pending.clear()
+                stage_queues[0].append((now, batch))
+                try_dispatch(0, now)
+
+        for t in arrival_times:
+            push(t, "arrive", None)
+
+        def try_dispatch(si: int, now: float):
+            while stage_queues[si]:
+                inst_id = None
+                for i in stage_instances[si]:
+                    if not instances[i].active and \
+                            instances[i].busy_until <= now + 1e-12:
+                        inst_id = i
+                        break
+                if inst_id is None:
+                    return
+                ready_t, arrivals = stage_queues[si].pop(0)
+                start_compute(si, inst_id, arrivals, now)
+
+        def start_compute(si, inst_id, arrivals, now):
+            inst = instances[inst_id]
+            prof = pipe.stages[si]
+            b = len(arrivals)
+            base = prof.duration(b, inst.quota, self.device)
+            inst.bandwidth = prof.bandwidth(b, inst.quota, self.device)
+            inst.active = True
+            # global-memory bandwidth contention (paper §IV-A): demand beyond
+            # the device's bandwidth stretches the memory-bound time
+            total_bw = device_bw_load(inst.device)
+            factor = max(1.0, total_bw / self.device.mem_bandwidth)
+            dur = base * factor * (1 + abs(rng.normal(0, cfg.contention_noise)))
+            inst.busy_until = now + dur
+            device_busy[inst.device] = device_busy.get(inst.device, 0.0) + dur
+            push(now + dur, "compute_done", (si, inst_id, arrivals))
+
+        def start_transfer(si, arrivals, from_dev, now):
+            """Transfer batch output from stage si to si+1."""
+            nxt = si + 1
+            prof = pipe.stages[si]
+            nbytes = prof.host_bytes_per_query * len(arrivals) * 0.5
+            to_devs = {d for d, _ in self.alloc.placement.per_stage[nxt]}
+            same = from_dev in to_devs
+            use_host = not (same and self.comm.global_memory_enabled)
+            if use_host:
+                self._host_streams[from_dev] = host_streams(from_dev) + 1
+            t = self.comm.transfer_time(
+                nbytes, same_device=same,
+                concurrent=max(host_streams(from_dev), 1))
+            push(now + t, "transfer_done", (nxt, arrivals, use_host, from_dev))
+
+        # ---- main loop -------------------------------------------------
+        completed = 0
+        while evq:
+            now, _, kind, payload = heapq.heappop(evq)
+            if kind == "arrive":
+                pending.append(now)
+                if len(pending) >= batch_size:
+                    flush_pending(now)
+                else:
+                    deadline = pending[0] + cfg.batch_timeout_frac \
+                        * pipe.qos_target
+                    push(deadline, "timeout", pending[0])
+            elif kind == "timeout":
+                if pending and pending[0] == payload:
+                    flush_pending(now)
+            elif kind == "compute_done":
+                si, inst_id, arrivals = payload
+                inst = instances[inst_id]
+                inst.active = False
+                if si + 1 < n_stages:
+                    start_transfer(si, arrivals, inst.device, now)
+                else:
+                    for at in arrivals:
+                        if at >= cfg.warmup:
+                            qos.record(now - at)
+                        completed += 1
+                try_dispatch(si, now)
+            elif kind == "transfer_done":
+                nxt, arrivals, used_host, from_dev = payload
+                if used_host:
+                    self._host_streams[from_dev] = max(
+                        0, host_streams(from_dev) - 1)
+                stage_queues[nxt].append((now, arrivals))
+                try_dispatch(nxt, now)
+
+        horizon = max(cfg.duration - cfg.warmup, 1e-9)
+        return SimResult(
+            p99=qos.tail_latency(),
+            mean_latency=qos.mean(),
+            completed=completed,
+            offered_qps=offered_qps,
+            achieved_qps=qos.count() / horizon,
+            qos=qos,
+            device_busy=device_busy)
+
+
+def find_peak_load(make_sim, qos_target: float, lo: float = 1.0,
+                   hi: float = 4096.0, tol: float = 0.03,
+                   max_iter: int = 14) -> Tuple[float, SimResult]:
+    """Binary-search the highest offered QPS whose p99 meets the target
+    (paper §IV-A: 'gradually increase the load until the 99%-ile latency
+    achieves the QoS target')."""
+
+    def ok(qps):
+        r = make_sim().run(qps)
+        # every query completes (the event queue drains), so a saturated
+        # system shows up directly as an exploding p99
+        meets = r.p99 <= qos_target and r.qos.count() >= 5
+        return meets, r
+
+    meets, best = ok(lo)
+    if not meets:
+        return 0.0, best
+    # exponential grow
+    while hi > lo * (1 + tol):
+        mid = (lo * hi) ** 0.5
+        meets, r = ok(mid)
+        if meets:
+            lo, best = mid, r
+        else:
+            hi = mid
+        if max_iter <= 0:
+            break
+        max_iter -= 1
+    return lo, best

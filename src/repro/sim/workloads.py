@@ -1,0 +1,129 @@
+"""Camelot suite (paper §III): the four real 2-stage pipelines plus the
+parametric artifact benchmark (compute-/memory-/PCIe-intensive stages).
+
+Real-system profiles are derived from the model zoo: per-query FLOPs come
+from the architecture's analytic parameter counts (2·N_active per token ×
+tokens per query), memory traffic from weight + activation reads, PCIe
+traffic from the query payload.  Constants are sized so solo durations land
+in the paper's regime (tens of ms per stage on a 2080Ti at mid batch).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from repro.configs import active_param_count, get_config
+from repro.core.types import (RTX_2080TI, DeviceSpec, MicroserviceProfile,
+                              Pipeline)
+
+
+def _model_stage(name: str, arch: str, tokens_per_query: int,
+                 payload_bytes: float, weights_scale: float = 1.0,
+                 serial_frac: float = 0.08,
+                 overhead: float = 2e-3) -> MicroserviceProfile:
+    """Build a profile from a model-zoo architecture (reduced family parent).
+
+    2 FLOPs/param/token forward; weight traffic once per batch; activation
+    traffic ~4 bytes × d_model × tokens."""
+    cfg = get_config(arch)
+    n_active = active_param_count(cfg) * weights_scale
+    flops_q = 2.0 * n_active * tokens_per_query
+    # bf16 weights; traffic per query amortises weights over batch ~8
+    weights_bytes = 2.0 * n_active
+    act_bytes = 4.0 * cfg.d_model * tokens_per_query
+    return MicroserviceProfile(
+        name=name, arch=arch,
+        flops_per_query=flops_q,
+        mem_bytes_per_query=act_bytes * 6 + weights_bytes / 8,
+        host_bytes_per_query=payload_bytes,
+        weights_bytes=weights_bytes,
+        act_bytes_per_query=act_bytes * 16,
+        overhead=overhead,
+        serial_frac=serial_frac)
+
+
+def camelot_suite(device: DeviceSpec = RTX_2080TI) -> Dict[str, Pipeline]:
+    """The four end-to-end services of Table I, mapped onto the model zoo.
+
+    img-to-img : face recognition (vision backbone) -> image enhancement
+    img-to-text: feature extraction (VLM backbone) -> caption decoder (LSTM-like)
+    text-to-img: semantic understanding (LSTM-like) -> image generation
+    text-to-text: summarisation (BERT-like) -> translation (enc-dec)
+    """
+    img_payload = 3 * 224 * 224 * 4.0          # one float32 image
+    txt_payload = 512 * 4.0                    # token ids
+    feat_payload = 4096 * 4.0                  # feature vector
+
+    return {
+        "img-to-img": Pipeline("img-to-img", [
+            _model_stage("face-recognition", "qwen3-0.6b", 96, img_payload,
+                         weights_scale=0.25, serial_frac=0.05),
+            _model_stage("image-enhancement", "qwen1.5-0.5b", 48, img_payload,
+                         weights_scale=0.15, serial_frac=0.12),
+        ], qos_target=0.20),
+        "img-to-text": Pipeline("img-to-text", [
+            _model_stage("feature-extraction", "qwen1.5-0.5b", 96,
+                         img_payload, weights_scale=0.4, serial_frac=0.05),
+            _model_stage("image-caption", "xlstm-1.3b", 24, feat_payload,
+                         weights_scale=0.10, serial_frac=0.18),
+        ], qos_target=0.25),
+        "text-to-img": Pipeline("text-to-img", [
+            _model_stage("semantic-understanding", "xlstm-1.3b", 32,
+                         txt_payload, weights_scale=0.08, serial_frac=0.15),
+            _model_stage("image-generation", "qwen1.5-0.5b", 128, img_payload,
+                         weights_scale=0.35, serial_frac=0.04),
+        ], qos_target=0.30),
+        "text-to-text": Pipeline("text-to-text", [
+            _model_stage("text-summarization", "qwen3-0.6b", 96, txt_payload,
+                         weights_scale=0.35, serial_frac=0.06),
+            _model_stage("text-translation", "whisper-medium", 64,
+                         txt_payload, weights_scale=0.3, serial_frac=0.10),
+        ], qos_target=0.25),
+    }
+
+
+# --------------------------------------------------------------------------
+# Artifact benchmark (§III-B): parametric c/m/p-intensive stages
+# --------------------------------------------------------------------------
+
+_INTENSITY = (1.0, 2.0, 4.0)
+
+
+def artifact_stage(kind: str, level: int,
+                   device: DeviceSpec = RTX_2080TI) -> MicroserviceProfile:
+    """kind in {"c","m","p"}, level in {1,2,3}; higher level = more intense
+    (paper: c3 more compute-intensive than c2 > c1, etc.)."""
+    assert kind in ("c", "m", "p") and level in (1, 2, 3)
+    mult = _INTENSITY[level - 1]
+    base_flops = 10e9            # ~0.75 ms/query at full quota on 2080Ti
+    base_mem = 40e6
+    base_host = 0.5e6
+    if kind == "c":
+        f, m, h, sf = base_flops * mult, base_mem, base_host, 0.04
+    elif kind == "m":
+        f, m, h, sf = base_flops * 0.15, 360e6 * mult, base_host, 0.10
+    else:
+        f, m, h, sf = base_flops * 0.15, base_mem, 2e6 * mult, 0.08
+    return MicroserviceProfile(
+        name=f"{kind}{level}",
+        flops_per_query=f,
+        mem_bytes_per_query=m,
+        host_bytes_per_query=h,
+        weights_bytes=500e6,
+        act_bytes_per_query=24e6 * (mult if kind == "m" else 1.0),
+        overhead=1e-3,
+        serial_frac=sf)
+
+
+def artifact_pipelines(device: DeviceSpec = RTX_2080TI) -> Dict[str, Pipeline]:
+    """The 3×3×3 = 27 pipelines p_i + c_j + m_k of §VIII-E."""
+    out = {}
+    for pi in (1, 2, 3):
+        for ci in (1, 2, 3):
+            for mi in (1, 2, 3):
+                name = f"p{pi}+c{ci}+m{mi}"
+                out[name] = Pipeline(name, [
+                    artifact_stage("p", pi, device),
+                    artifact_stage("c", ci, device),
+                    artifact_stage("m", mi, device),
+                ], qos_target=0.25)
+    return out

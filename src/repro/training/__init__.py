@@ -1,0 +1,11 @@
+from repro.training.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.training.data import DataConfig, batch_iterator, make_batch
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                      init_adamw)
+from repro.training.train_step import loss_only_step, make_train_step
+
+__all__ = [
+    "CheckpointManager", "load_pytree", "save_pytree", "DataConfig",
+    "batch_iterator", "make_batch", "AdamWConfig", "AdamWState",
+    "adamw_update", "init_adamw", "loss_only_step", "make_train_step",
+]

@@ -1,0 +1,110 @@
+"""Checkpointing: msgpack-serialised pytrees with numpy tensor payloads.
+
+No orbax in this environment — this implements the standard pattern:
+a manifest (treedef + shapes/dtypes) plus raw little-endian tensor bytes,
+atomic rename on save, step-indexed directory layout, and latest-step lookup.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _to_entry(x) -> dict:
+    arr = np.asarray(jax.device_get(x))
+    if arr.dtype == jnp.bfloat16:
+        return {"dtype": "bfloat16", "shape": list(arr.shape),
+                "data": arr.view(np.uint16).tobytes()}
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _from_entry(e: dict) -> np.ndarray:
+    shape = tuple(e["shape"])
+    if e["dtype"] == "bfloat16":
+        raw = np.frombuffer(e["data"], np.uint16).reshape(shape)
+        return raw.view(jnp.bfloat16)
+    return np.frombuffer(e["data"], np.dtype(e["dtype"])).reshape(shape)
+
+
+def save_pytree(tree: Any, path: str) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [_to_entry(x) for x in leaves],
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves_like, treedef = jax.tree.flatten(like)
+    entries = payload["leaves"]
+    assert len(entries) == len(leaves_like), (
+        f"checkpoint has {len(entries)} leaves, expected {len(leaves_like)}")
+    out = []
+    for e, ref in zip(entries, leaves_like):
+        arr = _from_entry(e)
+        assert tuple(arr.shape) == tuple(ref.shape), (arr.shape, ref.shape)
+        out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def save(self, step: int, params: Any, opt_state: Any = None) -> str:
+        d = self._step_dir(step) + ".tmp"
+        os.makedirs(d, exist_ok=True)
+        save_pytree(params, os.path.join(d, "params.msgpack"))
+        if opt_state is not None:
+            save_pytree(opt_state, os.path.join(d, "opt_state.msgpack"))
+        final = self._step_dir(step)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(d, final)
+        self._gc()
+        return final
+
+    def steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int, params_like: Any,
+                opt_like: Any = None) -> Tuple[Any, Any]:
+        d = self._step_dir(step)
+        params = load_pytree(os.path.join(d, "params.msgpack"), params_like)
+        opt = None
+        opt_path = os.path.join(d, "opt_state.msgpack")
+        if opt_like is not None and os.path.exists(opt_path):
+            opt = load_pytree(opt_path, opt_like)
+        return params, opt
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -1,0 +1,87 @@
+"""AdamW from scratch (optax is not available in this environment).
+
+State layout mirrors the params pytree: fp32 first/second moments + step.
+Supports global-norm gradient clipping and cosine LR schedule with warmup.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def init_adamw(params) -> AdamWState:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
+                      nu=zeros(params))
+
+
+def schedule(step: jax.Array, cfg: AdamWConfig) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, stats)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(step, cfg)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:   # decay matrices only, not norms/biases
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2, v2
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), stats

@@ -1,0 +1,34 @@
+"""Assembled training step: loss + grad + AdamW update."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward_train
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    remat: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    The returned function is jit-able and shard-able (pure)."""
+
+    def train_step(params, opt_state: AdamWState, batch: dict):
+        loss_fn = lambda p: forward_train(p, batch, cfg, remat=remat)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, stats = adamw_update(grads, opt_state, params,
+                                                opt_cfg)
+        metrics = {"loss": loss, **stats}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def loss_only_step(cfg: ModelConfig, remat: bool = True):
+    def step(params, batch):
+        return forward_train(params, batch, cfg, remat=remat)
+    return step

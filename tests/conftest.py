@@ -1,0 +1,14 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — tests
+run against the single real CPU device; only dryrun subprocesses fake 512."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,213 @@
+"""Camelot core: ML models, predictor, allocator, deployment, comm, QoS."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (RTX_2080TI, CamelotAllocator, CommModel,
+                        DecisionTreeRegressor, LinearRegression,
+                        PipelinePredictor, QoSTracker,
+                        RandomForestRegressor, SAConfig,
+                        mean_absolute_percentage_error, pack_instances,
+                        placement_summary)
+from repro.core.allocator import _ffd_fits
+from repro.core.types import Allocation, MicroserviceProfile, Pipeline, StageAlloc
+from repro.sim.workloads import artifact_stage, camelot_suite
+
+
+# --------------------------------------------------------------------------
+# mlmodels
+# --------------------------------------------------------------------------
+
+def test_linear_regression_exact():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(200, 3))
+    w = np.array([2.0, -1.0, 0.5])
+    y = x @ w + 3.0
+    lr = LinearRegression().fit(x, y)
+    np.testing.assert_allclose(lr.predict(x), y, atol=1e-8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), depth=st.integers(2, 10))
+def test_decision_tree_bounded_and_improves_on_mean(seed, depth):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 1, size=(120, 2))
+    y = np.sin(x[:, 0] * 6) + x[:, 1] ** 2
+    dt = DecisionTreeRegressor(max_depth=depth, seed=seed).fit(x, y)
+    pred = dt.predict(x)
+    assert pred.min() >= y.min() - 1e-9 and pred.max() <= y.max() + 1e-9
+    sse_tree = np.sum((pred - y) ** 2)
+    sse_mean = np.sum((y.mean() - y) ** 2)
+    assert sse_tree <= sse_mean + 1e-9
+
+
+def test_random_forest_better_than_single_shallow_tree():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 1, size=(300, 2))
+    y = np.sin(x[:, 0] * 8) * np.cos(x[:, 1] * 5) + rng.normal(0, 0.05, 300)
+    xt, yt = x[:200], y[:200]
+    xv, yv = x[200:], y[200:]
+    rf = RandomForestRegressor(n_trees=15, max_depth=8, seed=0).fit(xt, yt)
+    dt = DecisionTreeRegressor(max_depth=3, seed=0).fit(xt, yt)
+    rmse = lambda p: float(np.sqrt(np.mean((p - yv) ** 2)))
+    assert rmse(rf.predict(xv)) < rmse(dt.predict(xv))
+
+
+# --------------------------------------------------------------------------
+# predictor (paper Fig. 12: DT/RF accurate, LR worse on nonlinear curves)
+# --------------------------------------------------------------------------
+
+def test_predictor_accuracy_ordering():
+    prof = artifact_stage("c", 2)
+    errs = {}
+    for kind in ("lr", "dt", "rf"):
+        pred = PipelinePredictor.from_profiles([prof], RTX_2080TI,
+                                               model_kind=kind, seed=0)
+        errs[kind] = pred.stages[0].fit_errors["duration"]
+    assert errs["dt"] < errs["lr"]
+    assert errs["rf"] < errs["lr"]
+    assert errs["dt"] < 0.15          # paper: ~10% error
+    # DT inference < 1 ms (paper §VII-A)
+    pred.stages[0].duration(16, 0.5)
+
+
+def test_predictor_flops_footprint_linear():
+    prof = artifact_stage("m", 1)
+    pred = PipelinePredictor.from_profiles([prof], RTX_2080TI).stages[0]
+    for b in (4, 32, 128):
+        assert pred.flops(b) == pytest.approx(prof.flops(b), rel=0.01)
+        assert pred.footprint(b) == pytest.approx(prof.footprint(b), rel=0.01)
+
+
+# --------------------------------------------------------------------------
+# allocator
+# --------------------------------------------------------------------------
+
+def test_ffd_packing():
+    assert _ffd_fits([0.5, 0.5, 0.5, 0.5], 2)
+    assert not _ffd_fits([0.65, 0.65, 0.65], 2)
+    assert _ffd_fits([1.0, 1.0], 2)
+    assert not _ffd_fits([1.0, 1.0, 0.05], 2)
+
+
+def _make_allocator(name="img-to-img", n_devices=2, iters=800, **kw):
+    pipe = camelot_suite()[name]
+    pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI)
+    return pipe, CamelotAllocator(pipe, pred, RTX_2080TI, n_devices,
+                                  sa=SAConfig(iterations=iters, seed=0, **kw))
+
+
+def test_max_load_beats_naive():
+    pipe, alloc = _make_allocator()
+    res = alloc.solve_max_load(batch=16)
+    assert res.feasible
+    # naive: 1 instance per stage at full quota
+    naive = min(alloc.predictor.stages[i].throughput(16, 1.0)
+                for i in range(pipe.n_stages))
+    assert res.objective > naive * 1.2
+    assert res.solve_time < 2.0
+    # constraints hold
+    a = res.allocation
+    assert a.total_quota() <= 2.0 + 1e-9
+    assert a.predicted_latency <= pipe.qos_target
+
+
+def test_min_resource_meets_load_and_saves():
+    pipe, alloc = _make_allocator()
+    peak = alloc.solve_max_load(batch=16)
+    load = peak.objective * 0.3
+    res = alloc.solve_min_resource(batch=16, load=load)
+    assert res.feasible
+    a = res.allocation
+    assert a.total_quota() < peak.allocation.total_quota() * 0.7
+    min_thpt = min(a.stages[i].n_instances
+                   * alloc.predictor.stages[i].throughput(16, a.stages[i].quota)
+                   for i in range(pipe.n_stages))
+    assert min_thpt >= load * 0.99
+
+
+def test_camelot_nc_relaxes_bandwidth():
+    """Without Constraint-3 the solver may claim more aggregate bandwidth."""
+    pipe, alloc = _make_allocator("img-to-text")
+    res = alloc.solve_max_load(batch=32)
+    pipe2, alloc2 = _make_allocator("img-to-text",
+                                    bandwidth_constraint=False)
+    res2 = alloc2.solve_max_load(batch=32)
+    assert res2.objective >= res.objective - 1e-6
+
+
+def test_eq2_min_devices_monotone():
+    pipe, alloc = _make_allocator()
+    assert alloc.min_devices(16, 50.0) <= alloc.min_devices(16, 5000.0)
+
+
+# --------------------------------------------------------------------------
+# deployment
+# --------------------------------------------------------------------------
+
+def test_pack_shares_same_stage_weights():
+    pipe = camelot_suite()["img-to-img"]
+    pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI)
+    alloc = Allocation(stages=[StageAlloc(4, 0.25, 16),
+                               StageAlloc(2, 0.5, 16)])
+    placement = pack_instances(alloc, pipe, pred, RTX_2080TI, 2)
+    assert placement is not None
+    s = placement_summary(placement, 2)
+    assert s["devices_used"] <= 2
+    for q in s["quota_per_device"]:
+        assert q <= 1.0 + 1e-9
+
+
+def test_pack_rejects_infeasible():
+    pipe = camelot_suite()["img-to-img"]
+    pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI)
+    alloc = Allocation(stages=[StageAlloc(3, 0.65, 16)])
+    # 3×0.65 can't pack into 2 devices of 1.0
+    pipe1 = Pipeline("one", [pipe.stages[0]], qos_target=1.0)
+    assert pack_instances(alloc, pipe1, pred, RTX_2080TI, 2) is None
+
+
+# --------------------------------------------------------------------------
+# communication model (paper §VI)
+# --------------------------------------------------------------------------
+
+def test_comm_crossover():
+    cm = CommModel(RTX_2080TI)
+    cross = cm.crossover_bytes()
+    assert 1e3 < cross < 1e6          # paper: ~0.02 MB
+    small, large = cross / 10, cross * 100
+    assert cm.host_staged_time(small) < cm.global_memory_time(small)
+    assert cm.global_memory_time(large) < cm.host_staged_time(large)
+
+
+def test_pcie_contention_saturates_at_three_streams():
+    """⌊12160/3150⌋ = 3: beyond 3 concurrent streams, per-stream time grows
+    (paper Fig. 9)."""
+    cm = CommModel(RTX_2080TI)
+    nbytes = 100e6
+    t = [cm.host_staged_time(nbytes, concurrent=n) for n in range(1, 9)]
+    assert t[0] == pytest.approx(t[1], rel=0.01)    # 2 streams still fine
+    assert t[0] == pytest.approx(t[2], rel=0.05)    # 3 streams ~saturate
+    assert t[3] > t[2]                              # 4th stream contends
+    assert t[5] > t[2] * 1.3                        # 6 streams: clear slowdown
+    assert t[7] > t[3]
+
+
+def test_transfer_time_prefers_mechanism():
+    cm = CommModel(RTX_2080TI, global_memory_enabled=True)
+    assert cm.transfer_time(50e6, same_device=True) < \
+        cm.transfer_time(50e6, same_device=False)
+    cm_off = CommModel(RTX_2080TI, global_memory_enabled=False)
+    assert cm_off.transfer_time(50e6, same_device=True) == \
+        pytest.approx(cm_off.host_staged_time(50e6), rel=1e-6)
+
+
+def test_qos_tracker():
+    q = QoSTracker(target=0.1)
+    for v in np.linspace(0.01, 0.09, 99):
+        q.record(float(v))
+    assert not q.violated()
+    q.record(5.0)
+    assert q.tail_latency() > 0.09

