@@ -5,7 +5,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Row, timeit
-from repro.core import CommModel, DeviceHandoff, HostStagedChannel, RTX_2080TI
+from repro.core import (CommModel, DeviceHandoff, HostStagedChannel,
+                        RTX_2080TI, select_mechanism)
 
 
 def run(quick: bool = False) -> list[Row]:
@@ -15,10 +16,13 @@ def run(quick: bool = False) -> list[Row]:
     for nbytes in sizes:
         th = cm.host_staged_time(nbytes) * 1e6
         tg = cm.global_memory_time(nbytes) * 1e6
+        # the per-edge route of the unified exec core (crossover rule) —
+        # must agree with the raw curve comparison
+        mech = select_mechanism(cm, nbytes, same_device=True)
         winner = "global-mem" if tg < th else "host"
         rows.append((f"fig11/model/host/{int(nbytes)}B", th, "modelled"))
         rows.append((f"fig11/model/globalmem/{int(nbytes)}B", tg,
-                     f"winner={winner}"))
+                     f"winner={winner} route={mech}"))
     rows.append(("fig11/crossover_bytes", cm.crossover_bytes(),
                  "paper~2e4B"))
 

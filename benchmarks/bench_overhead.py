@@ -1,12 +1,14 @@
 """Paper §VIII-G: Camelot's runtime overheads — SA solve time (paper: ~5 ms),
-per-prediction time (<1 ms), comm-channel setup (~1 ms), offline profiling."""
+per-prediction time (<1 ms), comm-channel setup (~1 ms), offline profiling,
+and the live allocation-swap cost of the unified execution core."""
 from __future__ import annotations
 
 import time
 
 from benchmarks.common import Row, timeit
-from repro.core import (CamelotAllocator, DeviceHandoff, PipelinePredictor,
-                        RTX_2080TI, SAConfig, collect_samples)
+from repro.core import (BatchingPolicy, CamelotAllocator, DeviceHandoff,
+                        ExecCore, PipelinePredictor, RTX_2080TI, SAConfig,
+                        collect_samples)
 from repro.sim.workloads import camelot_suite
 
 
@@ -36,4 +38,13 @@ def run(quick: bool = False) -> list[Row]:
     rows.append(("overhead/profiling_3batches",
                  (time.perf_counter() - t0) * 1e6,
                  "offline, paper: <1 day full suite"))
+
+    # live re-allocation: cost of swapping a running engine's instance pool
+    # to a fresh Placement (applied between batches, queues survive)
+    if res.feasible and res.allocation.placement is not None:
+        placement = res.allocation.placement
+        core = ExecCore(pipe.n_stages, placement, BatchingPolicy(16, 0.05))
+        us = timeit(lambda: core.reset_instances(placement), repeats=20)
+        rows.append(("overhead/alloc_swap", us,
+                     f"{sum(len(s) for s in placement.per_stage)} instances"))
     return rows

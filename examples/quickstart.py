@@ -3,14 +3,16 @@
 1. profile two REAL (reduced) models on the live engine,
 2. fit the per-stage performance predictor (decision trees),
 3. solve the two allocation policies (max-load / min-resource),
-4. validate the allocation in the datacenter simulator.
+4. validate the allocation in the datacenter simulator,
+5. replay the solved allocation on the LIVE engine — both worlds run the
+   same execution core (repro.core.exec), so the allocation drops in as-is.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 from repro.core import (CamelotAllocator, PipelinePredictor, RTX_2080TI,
                         SAConfig, profile_from_engine)
 from repro.core.types import Pipeline
-from repro.serving import ModelStageServer
+from repro.serving import ModelStageServer, PipelineEngine, make_trace
 from repro.sim import PipelineSimulator, SimConfig, find_peak_load
 from repro.sim.baselines import camelot
 
@@ -57,6 +59,20 @@ def main():
     qps, res = find_peak_load(mk, pipeline.qos_target)
     print(f"  simulated peak {qps:.0f} qps at p99/QoS = "
           f"{res.normalized_p99:.2f}")
+
+    # -- 5. run the solved allocation LIVE -------------------------------
+    if low.feasible and low.allocation.placement is not None:
+        print("== replaying the min-resource allocation on the live engine ==")
+        eng = PipelineEngine(stages, allocation=low.allocation,
+                             comm_mechanism="auto", qos_target=0.4,
+                             batch_timeout=0.05)
+        trace = make_trace(16, qps=20.0, seq_len=16,
+                           vocab=stages[0].cfg.vocab_size, seed=5)
+        s = eng.run_trace(trace).summary()
+        n_inst = [len(p) for p in low.allocation.placement.per_stage]
+        print(f"  instances/stage {n_inst} | live p99 {s['p99'] * 1e3:.1f} ms"
+              f" | completed {s['completed']} | "
+              f"edge-0 picks {eng.channels[0].picks}")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,30 @@
 """End-to-end serving driver: a 2-stage GPU-microservice pipeline of REAL
-models served with batched requests under both communication mechanisms —
+models served with batched requests through the unified execution core —
 the live twin of paper Fig. 5 / Fig. 11.
+
+The engine consumes an ``Allocation`` + ``Placement`` (here: N instances of
+stage 0, built without the allocator for a self-contained demo) and runs the
+instances concurrently; each inter-stage edge routes its payload by the
+Fig. 11 crossover ("auto"), or is pinned to one mechanism for the A/B rows.
 
 Run:  PYTHONPATH=src python examples/serve_pipeline.py [--queries 32]
 """
 import argparse
 
+from repro.core.types import Allocation, Placement, StageAlloc
 from repro.serving import ModelStageServer, PipelineEngine, make_trace
+
+
+def build_allocation(n_stages: int, instances: int, batch: int) -> Allocation:
+    """Stage 0 gets ``instances`` concurrent instances, the rest one each —
+    the shape the Camelot allocator produces for a front-heavy pipeline."""
+    per_stage, stages = [], []
+    for si in range(n_stages):
+        n_i = instances if si == 0 else 1
+        quota = round(1.0 / (n_stages * n_i), 4)
+        stages.append(StageAlloc(n_instances=n_i, quota=quota, batch=batch))
+        per_stage.append([(0, quota) for _ in range(n_i)])
+    return Allocation(stages=stages, placement=Placement(per_stage=per_stage))
 
 
 def main():
@@ -14,28 +32,36 @@ def main():
     ap.add_argument("--queries", type=int, default=32)
     ap.add_argument("--qps", type=float, default=40.0)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--instances", type=int, default=2,
+                    help="concurrent instances of stage 0")
     ap.add_argument("--arch1", default="qwen3-0.6b")
     ap.add_argument("--arch2", default="qwen1.5-0.5b")
     args = ap.parse_args()
+    if args.instances < 1:
+        ap.error("--instances must be >= 1")
 
     stages = [ModelStageServer("stage0", args.arch1, seq_len=16),
               ModelStageServer("stage1", args.arch2, seq_len=16)]
+    alloc = build_allocation(len(stages), args.instances, args.batch)
     print(f"pipeline: {args.arch1} -> {args.arch2} "
-          f"({args.queries} queries @ {args.qps} qps, batch {args.batch})")
+          f"({args.queries} queries @ {args.qps} qps, batch {args.batch}, "
+          f"stage-0 x{args.instances} instances)")
 
-    for mech in ("host", "device"):
+    for mech in ("host", "device", "auto"):
         trace = make_trace(args.queries, qps=args.qps, seq_len=16,
                            vocab=stages[0].cfg.vocab_size, seed=7)
         eng = PipelineEngine(stages, comm_mechanism=mech, qos_target=1.0,
-                             batch_size=args.batch, batch_timeout=0.05)
+                             batch_timeout=0.05, allocation=alloc)
         stats = eng.run_trace(trace)
         s = stats.summary()
-        label = ("host-staged (default, Fig. 8a)" if mech == "host"
-                 else "global-memory hand-off (Camelot, Fig. 8b)")
+        label = {"host": "host-staged (default, Fig. 8a)",
+                 "device": "global-memory hand-off (Camelot, Fig. 8b)",
+                 "auto": "per-edge crossover routing (Fig. 11)"}[mech]
         print(f"  {label}:")
         print(f"    p99 {s['p99'] * 1e3:7.1f} ms | mean "
               f"{s['mean'] * 1e3:6.1f} ms | completed {s['completed']} | "
-              f"comm share {s['comm_frac'] * 100:.2f}%")
+              f"comm share {s['comm_frac'] * 100:.2f}% | "
+              f"edge-0 picks {eng.channels[0].picks}")
 
 
 if __name__ == "__main__":

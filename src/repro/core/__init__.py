@@ -4,10 +4,17 @@
 #   allocator.py  — SA-based contention-aware allocation (Eq. 1-3, §VII-B/C)
 #   deployment.py — multi-device packing, memory-capacity first (§VII-D)
 #   comm.py       — global-memory vs host-staged communication (§VI)
+#   exec.py       — unified pipeline-execution core (batching, dispatch,
+#                   per-edge mechanism selection) shared by the live engine
+#                   and the simulator
 #   qos.py        — tail-latency tracking
 from repro.core.allocator import CamelotAllocator, SAConfig, SolveResult
-from repro.core.comm import CommModel, DeviceHandoff, HostStagedChannel
+from repro.core.comm import (GLOBAL_MEMORY, HOST_STAGED, ICI, CommModel,
+                             DeviceHandoff, EdgeChannel, HostStagedChannel,
+                             mechanism_time, select_mechanism)
 from repro.core.deployment import pack_instances, placement_summary
+from repro.core.exec import (BatchingPolicy, EdgeRoute, ExecCore, ReadyBatch,
+                             StageInstance, default_allocation, edge_bytes)
 from repro.core.mlmodels import (DecisionTreeRegressor, LinearRegression,
                                  RandomForestRegressor,
                                  mean_absolute_percentage_error)
@@ -20,7 +27,10 @@ from repro.core.types import (RTX_2080TI, TPU_V5E_DEV, V100, Allocation,
 
 __all__ = [
     "CamelotAllocator", "SAConfig", "SolveResult", "CommModel",
-    "DeviceHandoff", "HostStagedChannel", "pack_instances",
+    "DeviceHandoff", "EdgeChannel", "HostStagedChannel", "GLOBAL_MEMORY",
+    "HOST_STAGED", "ICI", "select_mechanism", "mechanism_time",
+    "BatchingPolicy", "EdgeRoute", "ExecCore", "ReadyBatch", "StageInstance",
+    "default_allocation", "edge_bytes", "pack_instances",
     "placement_summary", "DecisionTreeRegressor", "LinearRegression",
     "RandomForestRegressor", "mean_absolute_percentage_error",
     "PipelinePredictor", "StagePredictor", "collect_samples",

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.comm import CommModel
 from repro.core.deployment import pack_instances
+from repro.core.exec import edge_bytes
 from repro.core.predictor import PipelinePredictor
 from repro.core.types import (Allocation, DeviceSpec, Pipeline, Placement,
                               StageAlloc)
@@ -77,13 +78,15 @@ class CamelotAllocator:
     def __init__(self, pipeline: Pipeline, predictor: PipelinePredictor,
                  device: DeviceSpec, n_devices: int,
                  comm: Optional[CommModel] = None,
-                 sa: SAConfig = SAConfig()):
+                 sa: Optional[SAConfig] = None):
         self.pipeline = pipeline
         self.predictor = predictor
         self.device = device
         self.n_devices = n_devices
         self.comm = comm or CommModel(device)
-        self.sa = sa
+        # per-instance default: a shared mutable SAConfig default would let
+        # one allocator's tweaks (e.g. bandwidth_constraint) leak into all
+        self.sa = sa if sa is not None else SAConfig()
 
     # ------------------------------------------------------------------
     # Constraint / objective evaluation for a candidate V
@@ -136,9 +139,9 @@ class CamelotAllocator:
         return float(thpts.min()), float(ns @ ps), latency
 
     def _edge_bytes(self, i: int, batch: int) -> float:
-        """Bytes passed from stage i to stage i+1 per batch."""
-        prof = self.pipeline.stages[i]
-        return prof.host_bytes_per_query * batch * 0.5 or 1e6 * batch
+        """Bytes passed from stage i to stage i+1 per batch (the same
+        sizing the execution core charges at runtime)."""
+        return edge_bytes(self.pipeline.stages[i], batch)
 
     # ------------------------------------------------------------------
     # Simulated annealing core (paper §VII-C description)

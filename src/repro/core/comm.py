@@ -13,6 +13,13 @@ TPU adaptation (DESIGN.md §2): "same GPU" → "same slice" (in-HBM hand-off of
 the output jax.Array), cross-slice same-pod → ICI copy, cross-pod → DCN/host.
 ``transfer_time`` exposes the model; ``DeviceHandoff``/``HostStagedChannel``
 are the *live* implementations used by the real serving engine.
+
+``select_mechanism``/``mechanism_time`` implement the per-edge routing rule
+of the unified execution core (repro.core.exec): host-staging below the
+Fig. 11 crossover, global-memory hand-off above it, host whenever producer
+and consumer share no device.  ``EdgeChannel`` is the live counterpart —
+one object per pipeline edge owning both mechanisms and routing each real
+payload the same way the simulator charges it.
 """
 from __future__ import annotations
 
@@ -66,6 +73,45 @@ class CommModel:
 
 
 # --------------------------------------------------------------------------
+# Per-edge mechanism selection (Fig. 11) — shared by the live engine and the
+# simulator through repro.core.exec
+# --------------------------------------------------------------------------
+
+GLOBAL_MEMORY = "global-memory"
+HOST_STAGED = "host-staged"
+ICI = "ici"
+
+
+def select_mechanism(comm: Optional[CommModel], nbytes: float,
+                     same_device: bool, cross_pod: bool = False) -> str:
+    """Pick the communication mechanism for one edge payload.
+
+    Camelot enables the global-memory hand-off per edge only when the
+    producer and a consumer share a device AND the payload is above the
+    Fig. 11 crossover — tiny transfers are cheaper through the default
+    host-staged path (2 copies at low latency beat the IPC handle cost).
+    """
+    if comm is None or not comm.global_memory_enabled or cross_pod:
+        return HOST_STAGED
+    if same_device:
+        return (HOST_STAGED if nbytes < comm.crossover_bytes()
+                else GLOBAL_MEMORY)
+    # TPU adaptation: cross-slice same-pod may ride the ICI fabric
+    return (ICI if comm.ici_time(nbytes) < comm.host_staged_time(nbytes)
+            else HOST_STAGED)
+
+
+def mechanism_time(comm: CommModel, mechanism: str, nbytes: float,
+                   concurrent: int = 1) -> float:
+    """Modelled cost of moving ``nbytes`` via the chosen mechanism."""
+    if mechanism == GLOBAL_MEMORY:
+        return comm.global_memory_time(nbytes)
+    if mechanism == ICI:
+        return comm.ici_time(nbytes)
+    return comm.host_staged_time(nbytes, concurrent)
+
+
+# --------------------------------------------------------------------------
 # Live mechanisms (used by repro.serving.engine on real arrays)
 # --------------------------------------------------------------------------
 
@@ -106,3 +152,43 @@ class HostStagedChannel:
         self.transfers += 1
         self.bytes_moved += host.nbytes * 2
         return jnp.asarray(host)           # H2D
+
+
+class EdgeChannel:
+    """Live per-edge channel owning BOTH mechanisms; each payload is routed
+    by ``select_mechanism`` (crossover + co-location), or pinned to one
+    mechanism with ``force`` ("device" / "host") for A/B runs."""
+
+    def __init__(self, comm: Optional[CommModel] = None,
+                 force: Optional[str] = None):
+        assert force in (None, "device", "host")
+        self.comm = comm
+        self.force = force
+        self.device_handoff = DeviceHandoff()
+        self.host_staged = HostStagedChannel()
+        self.picks = {GLOBAL_MEMORY: 0, HOST_STAGED: 0}
+
+    def select(self, nbytes: float, same_device: bool = True) -> str:
+        if self.force == "device":
+            return GLOBAL_MEMORY
+        if self.force == "host":
+            return HOST_STAGED
+        mech = select_mechanism(self.comm, nbytes, same_device)
+        # one host: ICI collapses to the in-memory hand-off
+        return GLOBAL_MEMORY if mech == ICI else mech
+
+    def send(self, array, same_device: bool = True):
+        nbytes = array.size * array.dtype.itemsize
+        mech = self.select(nbytes, same_device)
+        self.picks[mech] += 1
+        if mech == GLOBAL_MEMORY:
+            return self.device_handoff.send(array)
+        return self.host_staged.send(array)
+
+    @property
+    def transfers(self) -> int:
+        return self.device_handoff.transfers + self.host_staged.transfers
+
+    @property
+    def bytes_moved(self) -> int:
+        return self.host_staged.bytes_moved

@@ -1,0 +1,260 @@
+"""Unified pipeline-execution core (paper §VI–§VII).
+
+One scheduling state machine shared — verbatim, not duplicated — by the two
+execution worlds of this repo:
+
+  * the **live serving engine** (``repro.serving.engine.PipelineEngine``)
+    drives it with the wall clock and a thread pool of real jitted model
+    calls, and
+  * the **discrete-event simulator** (``repro.sim.simulator``) drives it
+    with virtual time and charges durations from MicroserviceProfile
+    physics.
+
+The core owns every *policy* decision so both worlds are charged
+identically:
+
+  - stage-0 admission and QoS-aware dynamic batching (dispatch a batch when
+    it is full OR the oldest query has waited past the timeout),
+  - per-stage FIFO ready queues for in-flight batches,
+  - multi-instance dispatch against an ``Allocation``'s ``Placement``
+    (first free instance, FIFO batches — N_i concurrent instances per
+    stage),
+  - per-edge communication-mechanism selection via
+    ``CommModel.crossover_bytes()`` (Fig. 11): host-staging below the
+    crossover, global-memory hand-off above it, host forced when producer
+    and consumers share no device.
+
+The core is deliberately time-agnostic: callers pass ``now`` in, so the
+same code runs under a real clock and a simulated one.  It holds no locks —
+the live engine serialises all core calls on its driver thread; workers
+only report completions through a queue.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Tuple
+
+from repro.core.comm import CommModel, select_mechanism
+from repro.core.types import Allocation, MicroserviceProfile, Placement
+
+
+def edge_bytes(profile: MicroserviceProfile, count: int) -> float:
+    """Bytes crossing the stage_i -> stage_{i+1} edge for ``count`` queries
+    (half the stage's PCIe in+out traffic; 1 MB/query floor for profiles
+    that do not model host traffic)."""
+    return profile.host_bytes_per_query * count * 0.5 or 1e6 * count
+
+
+@dataclass
+class BatchingPolicy:
+    """QoS-aware dynamic batching: dispatch on size or oldest-wait timeout.
+
+    The simulator derives ``timeout`` from the QoS budget
+    (``batch_timeout_frac × qos_target``); the live engine passes it
+    directly.  Either way the decision logic is this one."""
+    batch_size: int
+    timeout: float
+
+    def should_dispatch(self, n_pending: int, oldest_arrival: float,
+                        now: float) -> bool:
+        if n_pending <= 0:
+            return False
+        if n_pending >= self.batch_size:
+            return True
+        return (now - oldest_arrival) >= self.timeout - 1e-12
+
+    def deadline(self, oldest_arrival: float) -> float:
+        return oldest_arrival + self.timeout
+
+
+@dataclass
+class StageInstance:
+    """One schedulable instance of a stage: a (device, quota) slot from the
+    Placement.  ``bandwidth`` is simulator-side contention bookkeeping."""
+    stage: int
+    index: int
+    device: int
+    quota: float
+    busy: bool = False
+    bandwidth: float = 0.0
+    dispatches: int = 0
+    busy_time: float = 0.0
+
+
+@dataclass
+class ReadyBatch:
+    """A formed batch travelling through the pipeline.  ``items`` is opaque
+    to the core (Query objects in the live engine, arrival timestamps in
+    the simulator); ``data`` is the stage input (live: a jax.Array)."""
+    stage: int
+    items: List[Any]
+    ready_time: float
+    data: Any = None
+
+
+@dataclass
+class EdgeRoute:
+    """Resolved routing decision for one batch over one pipeline edge."""
+    mechanism: str
+    same_device: bool
+    nbytes: float
+
+
+class ExecCore:
+    """The shared scheduling state machine.
+
+    Construction takes a ``Placement`` (one ``StageInstance`` per placed
+    (device, quota) entry) — this is how the allocator's output drives
+    execution in both worlds."""
+
+    def __init__(self, n_stages: int, placement: Placement,
+                 batching: BatchingPolicy, comm: Optional[CommModel] = None,
+                 edge_nbytes: Optional[Callable[[int, int], float]] = None):
+        assert len(placement.per_stage) == n_stages, \
+            "placement must cover every stage"
+        self.n_stages = n_stages
+        self.batching = batching
+        self.comm = comm
+        self._edge_nbytes = edge_nbytes or (lambda e, c: 1e6 * c)
+        self.stage_instances: List[List[StageInstance]] = []
+        self._build_instances(placement)
+        # stage-0 accumulation: (arrival, item)
+        self.pending: List[Tuple[float, Any]] = []
+        self.ready: List[deque] = [deque() for _ in range(n_stages)]
+        self.batches_formed = 0
+
+    # ---- instances ----------------------------------------------------
+
+    def _build_instances(self, placement: Placement) -> None:
+        self.placement = placement
+        self.stage_instances = []
+        for si, placed in enumerate(placement.per_stage):
+            assert placed, f"stage {si} has no placed instance"
+            self.stage_instances.append([
+                StageInstance(si, k, dev, quota)
+                for k, (dev, quota) in enumerate(placed)])
+
+    def reset_instances(self, placement: Placement) -> None:
+        """Swap to a new Placement between batches (live re-allocation).
+
+        Queues and pending arrivals survive; in-flight batches complete on
+        the old StageInstance objects, whose release is then a no-op for
+        dispatch because they are no longer in the pool."""
+        self._build_instances(placement)
+
+    @property
+    def instances(self) -> List[StageInstance]:
+        return [i for st in self.stage_instances for i in st]
+
+    # ---- stage-0 admission & dynamic batching -------------------------
+
+    def admit(self, item: Any, arrival: float) -> None:
+        self.pending.append((arrival, item))
+
+    def oldest_pending(self) -> Optional[float]:
+        return self.pending[0][0] if self.pending else None
+
+    def batch_deadline(self) -> Optional[float]:
+        """Virtual time at which the current oldest pending query forces a
+        partial dispatch (None when nothing is pending)."""
+        if not self.pending:
+            return None
+        return self.batching.deadline(self.pending[0][0])
+
+    def form_batches(self, now: float) -> List[ReadyBatch]:
+        """Move pending queries into stage-0 ready batches per the
+        size/timeout policy.  Returns the newly formed batches so the live
+        engine can attach input data before dispatch."""
+        out: List[ReadyBatch] = []
+        while self.pending and self.batching.should_dispatch(
+                len(self.pending), self.pending[0][0], now):
+            take = self.pending[:self.batching.batch_size]
+            del self.pending[:len(take)]
+            rb = ReadyBatch(stage=0, items=[it for _, it in take],
+                            ready_time=now)
+            self.ready[0].append(rb)
+            out.append(rb)
+            self.batches_formed += 1
+        return out
+
+    def push_ready(self, stage: int, items: List[Any], now: float,
+                   data: Any = None) -> ReadyBatch:
+        """Queue a batch arriving at a downstream stage."""
+        rb = ReadyBatch(stage=stage, items=items, ready_time=now, data=data)
+        self.ready[stage].append(rb)
+        return rb
+
+    # ---- dispatch -----------------------------------------------------
+
+    def _free_instance(self, stage: int) -> Optional[StageInstance]:
+        for inst in self.stage_instances[stage]:
+            if not inst.busy:
+                return inst
+        return None
+
+    def dispatch_stage(self, stage: int, now: float,
+                       ) -> List[Tuple[StageInstance, ReadyBatch]]:
+        """Assign queued batches of one stage to free instances (FIFO
+        batches, first free instance)."""
+        out = []
+        q = self.ready[stage]
+        while q:
+            inst = self._free_instance(stage)
+            if inst is None:
+                break
+            rb = q.popleft()
+            inst.busy = True
+            inst.dispatches += 1
+            out.append((inst, rb))
+        return out
+
+    def dispatch(self, now: float) -> List[Tuple[StageInstance, ReadyBatch]]:
+        """Dispatch every stage; later stages first so a freed instance can
+        be reused for work already deeper in the pipeline."""
+        out = []
+        for si in range(self.n_stages - 1, -1, -1):
+            out.extend(self.dispatch_stage(si, now))
+        return out
+
+    def release(self, inst: StageInstance, busy_for: float = 0.0) -> None:
+        inst.busy = False
+        inst.bandwidth = 0.0
+        inst.busy_time += busy_for
+
+    # ---- per-edge communication routing -------------------------------
+
+    def consumer_devices(self, stage: int) -> set:
+        return {d for d, _ in self.placement.per_stage[stage]}
+
+    def route(self, edge: int, count: int, from_device: int) -> EdgeRoute:
+        """Mechanism selection for the edge stage ``edge`` -> ``edge+1``:
+        global-memory only when the producer's device also hosts a consumer
+        instance AND the payload is above the Fig. 11 crossover."""
+        nbytes = float(self._edge_nbytes(edge, count))
+        same = from_device in self.consumer_devices(edge + 1)
+        mech = select_mechanism(self.comm, nbytes, same)
+        return EdgeRoute(mechanism=mech, same_device=same, nbytes=nbytes)
+
+    # ---- progress -----------------------------------------------------
+
+    def has_work(self) -> bool:
+        return bool(self.pending) or any(self.ready) or \
+            any(i.busy for st in self.stage_instances for i in st)
+
+    def queue_depths(self) -> List[int]:
+        return [len(q) for q in self.ready]
+
+
+def default_allocation(n_stages: int, batch: int,
+                       instances_per_stage: int = 1) -> Allocation:
+    """A trivial placed allocation (everything on device 0, even quotas) for
+    running an engine without an allocator in the loop."""
+    from repro.core.types import StageAlloc
+    quota = round(1.0 / max(n_stages * instances_per_stage, 1), 4)
+    stages = [StageAlloc(n_instances=instances_per_stage, quota=quota,
+                         batch=batch) for _ in range(n_stages)]
+    placement = Placement(per_stage=[
+        [(0, quota) for _ in range(instances_per_stage)]
+        for _ in range(n_stages)])
+    return Allocation(stages=stages, placement=placement)

@@ -41,18 +41,26 @@ class ReallocationEvent:
 
 
 class CamelotRuntime:
-    """Online wrapper around the two allocation policies."""
+    """Online wrapper around the two allocation policies.
+
+    ``attach_engine`` connects a live ``PipelineEngine``: every
+    ``reallocate`` then pushes the fresh allocation into the running engine
+    (applied between batches via ``PipelineEngine.apply_allocation``), so
+    the same runtime object manages both the simulated and the live world.
+    """
 
     def __init__(self, pipeline: Pipeline, predictor: PipelinePredictor,
                  device: DeviceSpec, n_devices: int, batch: int,
-                 rt: RuntimeConfig = RuntimeConfig(),
-                 sa: SAConfig = SAConfig()):
+                 rt: Optional[RuntimeConfig] = None,
+                 sa: Optional[SAConfig] = None):
         self.pipeline = pipeline
         self.predictor = predictor
         self.device = device
         self.n_devices = n_devices
         self.batch = batch
-        self.rt = rt
+        # configs default per-instance: a shared mutable default would leak
+        # state between runtimes
+        self.rt = rt if rt is not None else RuntimeConfig()
         self.comm = CommModel(device, global_memory_enabled=True)
         self.allocator = CamelotAllocator(pipeline, predictor, device,
                                           n_devices, comm=self.comm, sa=sa)
@@ -62,8 +70,14 @@ class CamelotRuntime:
         self._load_est = 0.0
         self.current: Allocation = peak.allocation
         self.history: List[ReallocationEvent] = []
+        self._engine = None
 
     # ------------------------------------------------------------------
+
+    def attach_engine(self, engine) -> None:
+        """Connect a live PipelineEngine; subsequent reallocations are
+        applied to it between batches."""
+        self._engine = engine
 
     def observe(self, qps_sample: float) -> None:
         a = self.rt.ewma_alpha
@@ -89,6 +103,8 @@ class CamelotRuntime:
                 alloc, provisioned, feasible = (self.peak_result.allocation,
                                                 self.peak_qps, False)
         self.current = alloc
+        if self._engine is not None and alloc.placement is not None:
+            self._engine.apply_allocation(alloc)
         self.history.append(ReallocationEvent(
             time=now, load_estimate=self._load_est,
             provisioned_for=provisioned,

@@ -1,27 +1,41 @@
 """Live mini serving engine: runs REAL JAX models as microservice pipelines.
 
-This is the reduced-scale twin of the simulator: actual model-zoo forward
-passes (CPU, reduced configs), a request queue with QoS-aware dynamic
-batching, and both communication mechanisms — ``DeviceHandoff`` passes the
+This is the reduced-scale twin of the simulator, and since the
+unified-execution refactor it is built on the SAME scheduling core
+(``repro.core.exec.ExecCore``) the simulator uses: the engine consumes an
+``Allocation`` + ``Placement`` from the allocator and runs N_i concurrent
+instances per stage — a thread pool around the jitted calls, which works
+because ``block_until_ready`` releases the GIL — with QoS-aware dynamic
+batching and per-edge communication-mechanism selection
+(``CommModel.crossover_bytes``, paper Fig. 11): ``DeviceHandoff`` passes the
 stage-output ``jax.Array`` by reference (global-memory mechanism, §VI-B);
 ``HostStagedChannel`` forces the device→host→device round trip (§VI-A).
 
 It validates Camelot's mechanisms end-to-end and produces the real step
-timings that calibrate the simulator's profiles (``profile_stage_timings``).
+timings that calibrate the simulator's profiles (``profile_stage_timings``
+→ ``repro.core.predictor.profile_from_engine``).  ``apply_allocation``
+makes ``CamelotRuntime.reallocate`` applicable to a *running* engine:
+allocations swap between batches while in-flight work drains.
 """
 from __future__ import annotations
 
+import queue
+import threading
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ModelConfig, get_config
-from repro.core.comm import DeviceHandoff, HostStagedChannel
+from repro.core.comm import CommModel, EdgeChannel
+from repro.core.exec import (BatchingPolicy, ExecCore, ReadyBatch,
+                             StageInstance, default_allocation)
 from repro.core.qos import QoSTracker
+from repro.core.types import RTX_2080TI, Allocation
 from repro.models import init_params, serve_prefill
 
 
@@ -38,7 +52,9 @@ class ModelStageServer:
 
     The stage consumes a token batch (or the previous stage's hidden-state
     batch re-tokenised via argmax — the pipeline contract used by the
-    Camelot-suite live twins) and emits next-token ids.
+    Camelot-suite live twins) and emits next-token ids.  ``process`` is
+    thread-safe: the engine may run several instances of one stage
+    concurrently against the same (immutable) params + jitted callable.
     """
 
     def __init__(self, name: str, arch: str, seq_len: int = 32, seed: int = 0):
@@ -61,6 +77,7 @@ class ModelStageServer:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
         self._run = jax.jit(run)
+        self._stats_lock = threading.Lock()
         self.calls = 0
         self.busy_time = 0.0
 
@@ -72,8 +89,10 @@ class ModelStageServer:
         t0 = time.perf_counter()
         out = self._run(self.params, tokens)
         out.block_until_ready()
-        self.busy_time += time.perf_counter() - t0
-        self.calls += 1
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            self.busy_time += dt
+            self.calls += 1
         return out
 
     def profile_stage_timings(self, batches: Sequence[int] = (1, 2, 4, 8),
@@ -113,85 +132,176 @@ class ServeStats:
 
 
 class PipelineEngine:
-    """Executes a pipeline of ModelStageServers over a query trace."""
+    """Executes a pipeline of stage servers over a query trace, driven by
+    the shared ``ExecCore``.
 
-    def __init__(self, stages: Sequence[ModelStageServer],
-                 comm_mechanism: str = "device", qos_target: float = 2.0,
-                 batch_size: int = 4, batch_timeout: float = 0.2):
-        assert comm_mechanism in ("device", "host")
+    ``allocation`` (an ``Allocation`` with a ``Placement``) decides how many
+    concurrent instances each stage runs and on which (logical) device; when
+    omitted, a trivial 1-instance-per-stage allocation is built.
+    ``comm_mechanism``: "auto" routes each edge payload via the crossover
+    rule; "device"/"host" pin the mechanism for A/B comparisons.
+    """
+
+    def __init__(self, stages: Sequence, comm_mechanism: str = "auto",
+                 qos_target: float = 2.0, batch_size: int = 4,
+                 batch_timeout: float = 0.2,
+                 allocation: Optional[Allocation] = None,
+                 comm_model: Optional[CommModel] = None):
+        assert comm_mechanism in ("auto", "device", "host")
         self.stages = list(stages)
         self.comm_mechanism = comm_mechanism
-        self.channels = [DeviceHandoff() if comm_mechanism == "device"
-                         else HostStagedChannel()
-                         for _ in range(len(stages) - 1)]
         self.qos_target = qos_target
-        self.batch_size = batch_size
         self.batch_timeout = batch_timeout
+        self.comm_model = comm_model or CommModel(RTX_2080TI)
+        if allocation is None:
+            allocation = default_allocation(len(self.stages), batch_size)
+        assert allocation.placement is not None, "allocation must be placed"
+        assert len(allocation.stages) == len(self.stages)
+        self.alloc = allocation
+        self.batch_size = allocation.stages[0].batch
+        force = None if comm_mechanism == "auto" else comm_mechanism
+        self.channels = [EdgeChannel(self.comm_model, force=force)
+                         for _ in range(len(self.stages) - 1)]
+        self._pending_alloc: Optional[Allocation] = None
+        self._alloc_lock = threading.Lock()
+        self._core: Optional[ExecCore] = None
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self.swaps = 0
 
-    def _seq_len(self) -> int:
-        return self.stages[0].seq_len
+    # ---- live re-allocation -------------------------------------------
+
+    def apply_allocation(self, allocation: Allocation) -> None:
+        """Queue an Allocation(+Placement) swap.  A running trace applies it
+        between batches — in-flight batches drain on the old instances, the
+        next dispatch uses the new pool.  Safe to call from another thread
+        (e.g. a CamelotRuntime reallocating against live load)."""
+        assert allocation.placement is not None, "allocation must be placed"
+        assert len(allocation.stages) == len(self.stages)
+        with self._alloc_lock:
+            self._pending_alloc = allocation
+
+    def _apply_pending_alloc(self, core: ExecCore) -> None:
+        # read+clear under the lock so a swap queued by another thread in
+        # this window is never silently dropped
+        with self._alloc_lock:
+            alloc = self._pending_alloc
+            self._pending_alloc = None
+        if alloc is None:
+            return
+        self.alloc = alloc
+        self.batch_size = alloc.stages[0].batch
+        core.batching.batch_size = self.batch_size
+        core.reset_instances(alloc.placement)
+        # the executor spawns threads lazily up to _max_workers; grow the
+        # cap so a placement with MORE instances gains real concurrency
+        ex = self._executor
+        if ex is not None and hasattr(ex, "_max_workers"):
+            ex._max_workers = max(ex._max_workers, len(core.instances))
+        self.swaps += 1
+
+    # ---- trace replay --------------------------------------------------
 
     def run_trace(self, queries: List[Query]) -> ServeStats:
-        """Synchronous replay: queries arrive per their timestamps; batches
-        dispatch on size/timeout; wall-clock latencies recorded."""
+        """Replay: queries arrive per their timestamps; the core forms
+        batches on size/timeout and dispatches them to free stage instances;
+        each dispatch runs on a worker thread (the jitted call releases the
+        GIL); wall-clock latencies are recorded."""
         stats = ServeStats(qos=QoSTracker(self.qos_target))
         for st in self.stages:
             st.warmup(self.batch_size)
+        core = ExecCore(len(self.stages), self.alloc.placement,
+                        BatchingPolicy(self.batch_size, self.batch_timeout),
+                        comm=self.comm_model)
+        self._core = core
+        completions: queue.Queue = queue.Queue()
+        in_flight = 0
+        i, n = 0, len(queries)
         start = time.perf_counter()
-        pending: List[Query] = []
-        i = 0
-        n = len(queries)
-        while i < n or pending:
-            now = time.perf_counter() - start
-            # admit arrivals
-            while i < n and queries[i].arrival <= now:
-                pending.append(queries[i])
-                i += 1
-            dispatch = False
-            if len(pending) >= self.batch_size:
-                dispatch = True
-            elif pending and (now - pending[0].arrival) >= self.batch_timeout:
-                dispatch = True
-            elif not pending and i < n:
-                # fast-forward idle gaps instead of spinning
-                time.sleep(max(queries[i].arrival - now, 0) if
-                           queries[i].arrival - now < 0.01 else 0.001)
-                continue
-            if not dispatch:
-                time.sleep(0.0005)
-                continue
-            batch = pending[:self.batch_size]
-            del pending[:len(batch)]
-            self._process_batch(batch, stats, start)
+        try:
+            with ThreadPoolExecutor(
+                    max_workers=max(len(core.instances), 1)) as ex:
+                self._executor = ex
+                while i < n or in_flight or core.has_work():
+                    now = time.perf_counter() - start
+                    self._apply_pending_alloc(core)
+                    while i < n and queries[i].arrival <= now:
+                        core.admit(queries[i], queries[i].arrival)
+                        i += 1
+                    for rb in core.form_batches(now):
+                        rb.data = self._stack([q.tokens for q in rb.items])
+                    for inst, rb in core.dispatch(now):
+                        in_flight += 1
+                        ex.submit(self._worker, inst, rb, completions)
+                    # sleep until the next event: a completion, the next
+                    # arrival, or the oldest pending query's batch deadline
+                    wake = []
+                    if i < n:
+                        wake.append(queries[i].arrival)
+                    deadline = core.batch_deadline()
+                    if deadline is not None:
+                        wake.append(deadline)
+                    timeout = (min(wake) - now) if wake else 0.05
+                    timeout = min(max(timeout, 0.0005), 0.05)
+                    try:
+                        ev = completions.get(timeout=timeout)
+                    except queue.Empty:
+                        continue
+                    while True:
+                        in_flight -= 1
+                        self._complete(ev, core, stats, start)
+                        try:
+                            ev = completions.get_nowait()
+                        except queue.Empty:
+                            break
+        finally:
+            self._core = None
+            self._executor = None
         return stats
 
-    def _process_batch(self, batch: List[Query], stats: ServeStats,
-                       start: float):
+    # ---- internals -----------------------------------------------------
+
+    def _stack(self, tokens_list: List[np.ndarray]) -> jax.Array:
         # pad partial batches to the fixed batch size: one compiled shape
-        stacked = np.stack([q.tokens for q in batch])
-        if len(batch) < self.batch_size:
-            pad = np.zeros((self.batch_size - len(batch),) +
+        stacked = np.stack(tokens_list)
+        if len(tokens_list) < self.batch_size:
+            pad = np.zeros((self.batch_size - len(tokens_list),) +
                            stacked.shape[1:], stacked.dtype)
             stacked = np.concatenate([stacked, pad])
-        tokens = jnp.asarray(stacked)
-        x = tokens
-        for si, stage in enumerate(self.stages):
+        return jnp.asarray(stacked)
+
+    def _worker(self, inst: StageInstance, rb: ReadyBatch,
+                completions: queue.Queue) -> None:
+        t0 = time.perf_counter()
+        try:
+            out, err = self.stages[inst.stage].process(rb.data), None
+        except BaseException as e:      # re-raised on the driver thread
+            out, err = None, e
+        completions.put((inst, rb, out, time.perf_counter() - t0, err))
+
+    def _complete(self, ev, core: ExecCore, stats: ServeStats,
+                  start: float) -> None:
+        inst, rb, out, dt, err = ev
+        core.release(inst, busy_for=dt)
+        if err is not None:
+            raise err
+        stats.compute_time += dt
+        si = rb.stage
+        now = time.perf_counter() - start
+        if si + 1 < len(self.stages):
+            same = inst.device in core.consumer_devices(si + 1)
             t0 = time.perf_counter()
-            out = stage.process(x)
-            stats.compute_time += time.perf_counter() - t0
-            if si + 1 < len(self.stages):
-                t0 = time.perf_counter()
-                handed = self.channels[si].send(out)
-                stats.comm_time += time.perf_counter() - t0
-                # next stage consumes previous outputs as a token prefix
-                nxt_len = self.stages[si + 1].seq_len
-                vocab_next = self.stages[si + 1].cfg.vocab_size
-                x = jnp.tile(handed[:, None] % vocab_next, (1, nxt_len))
-        done = time.perf_counter() - start
-        for q in batch:
-            q.done = done
-            stats.qos.record(done - q.arrival)
-        stats.batches += 1
+            handed = self.channels[si].send(out, same_device=same)
+            stats.comm_time += time.perf_counter() - t0
+            # next stage consumes previous outputs as a token prefix
+            nxt = self.stages[si + 1]
+            x = jnp.tile(handed[:, None] % nxt.cfg.vocab_size,
+                         (1, nxt.seq_len))
+            core.push_ready(si + 1, rb.items, now, data=x)
+        else:
+            for q in rb.items:
+                q.done = now
+                stats.qos.record(now - q.arrival)
+            stats.batches += 1
 
 
 def make_trace(n: int, qps: float, seq_len: int, vocab: int,

@@ -7,6 +7,13 @@ contention on each host link (paper Fig. 9), and the chosen inter-stage
 communication mechanism.  Policies under test only choose the allocation +
 placement + mechanism; the simulator charges them the consequences.
 
+Since the unified-execution refactor, every *scheduling* decision —
+stage-0 dynamic batching, per-stage ready queues, free-instance dispatch
+against the ``Placement``, and per-edge mechanism selection via
+``CommModel.crossover_bytes()`` — lives in ``repro.core.exec.ExecCore``,
+the same code path the live serving engine runs.  This file only advances
+virtual time and charges durations/transfer costs.
+
 Event flow per batch: [arrive & batch at stage-0 queue] -> for each stage:
 wait for a free instance -> compute (duration × contention factor) ->
 transfer to next stage (mechanism-dependent) -> ... -> complete.
@@ -20,7 +27,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.comm import CommModel
+from repro.core.comm import HOST_STAGED, CommModel, mechanism_time
+from repro.core.exec import BatchingPolicy, ExecCore, edge_bytes
 from repro.core.qos import QoSTracker
 from repro.core.types import (Allocation, DeviceSpec, MicroserviceProfile,
                               Pipeline, Placement)
@@ -35,16 +43,6 @@ class SimConfig:
     seed: int = 0
     max_queries: int = 60_000
     contention_noise: float = 0.02
-
-
-@dataclass
-class InstanceState:
-    stage: int
-    device: int
-    quota: float
-    busy_until: float = 0.0
-    bandwidth: float = 0.0             # bw demand while active
-    active: bool = False
 
 
 @dataclass
@@ -65,13 +63,13 @@ class SimResult:
 class PipelineSimulator:
     def __init__(self, pipeline: Pipeline, allocation: Allocation,
                  device: DeviceSpec, comm: CommModel,
-                 sim: SimConfig = SimConfig()):
+                 sim: Optional[SimConfig] = None):
         assert allocation.placement is not None, "allocation must be placed"
         self.pipeline = pipeline
         self.alloc = allocation
         self.device = device
         self.comm = comm
-        self.cfg = sim
+        self.cfg = sim if sim is not None else SimConfig()
 
     # ------------------------------------------------------------------
 
@@ -82,28 +80,20 @@ class PipelineSimulator:
         n_stages = pipe.n_stages
         qos = QoSTracker(pipe.qos_target)
 
-        # instances
-        instances: List[InstanceState] = []
-        stage_instances: List[List[int]] = [[] for _ in range(n_stages)]
-        for si, placed in enumerate(self.alloc.placement.per_stage):
-            for dev, quota in placed:
-                stage_instances[si].append(len(instances))
-                instances.append(InstanceState(si, dev, quota))
-
         batch_size = self.alloc.stages[0].batch
-        # per-stage FIFO of ready batches: (ready_time, arrivals, count)
-        stage_queues: List[List] = [[] for _ in range(n_stages)]
+        core = ExecCore(
+            n_stages, self.alloc.placement,
+            BatchingPolicy(batch_size,
+                           cfg.batch_timeout_frac * pipe.qos_target),
+            comm=self.comm,
+            edge_nbytes=lambda e, c: edge_bytes(pipe.stages[e], c))
         device_busy: Dict[int, float] = {}
+        host_streams: Dict[int, int] = {}
 
         # ---- contention bookkeeping ----------------------------------
         def device_bw_load(dev: int) -> float:
-            return sum(i.bandwidth for i in instances
-                       if i.active and i.device == dev)
-
-        def host_streams(dev: int) -> int:
-            return self._host_streams.get(dev, 0)
-
-        self._host_streams: Dict[int, int] = {}
+            return sum(i.bandwidth for i in core.instances
+                       if i.busy and i.device == dev)
 
         # ---- event queue ----------------------------------------------
         # (time, seq, kind, payload)
@@ -119,98 +109,77 @@ class PipelineSimulator:
         gaps = rng.exponential(1.0 / max(offered_qps, 1e-9), n_arrivals)
         arrival_times = np.cumsum(gaps)
         arrival_times = arrival_times[arrival_times < cfg.duration]
-
-        # stage-0 batching: accumulate queries, dispatch on full/timeout
-        pending: List[float] = []
-
-        def flush_pending(now):
-            if pending:
-                batch = list(pending)
-                pending.clear()
-                stage_queues[0].append((now, batch))
-                try_dispatch(0, now)
-
         for t in arrival_times:
             push(t, "arrive", None)
 
-        def try_dispatch(si: int, now: float):
-            while stage_queues[si]:
-                inst_id = None
-                for i in stage_instances[si]:
-                    if not instances[i].active and \
-                            instances[i].busy_until <= now + 1e-12:
-                        inst_id = i
-                        break
-                if inst_id is None:
-                    return
-                ready_t, arrivals = stage_queues[si].pop(0)
-                start_compute(si, inst_id, arrivals, now)
-
-        def start_compute(si, inst_id, arrivals, now):
-            inst = instances[inst_id]
-            prof = pipe.stages[si]
-            b = len(arrivals)
+        # ---- physics: charge a dispatched batch its compute time ------
+        def start_compute(inst, rb, now):
+            prof = pipe.stages[inst.stage]
+            b = len(rb.items)
             base = prof.duration(b, inst.quota, self.device)
             inst.bandwidth = prof.bandwidth(b, inst.quota, self.device)
-            inst.active = True
             # global-memory bandwidth contention (paper §IV-A): demand beyond
             # the device's bandwidth stretches the memory-bound time
             total_bw = device_bw_load(inst.device)
             factor = max(1.0, total_bw / self.device.mem_bandwidth)
             dur = base * factor * (1 + abs(rng.normal(0, cfg.contention_noise)))
-            inst.busy_until = now + dur
             device_busy[inst.device] = device_busy.get(inst.device, 0.0) + dur
-            push(now + dur, "compute_done", (si, inst_id, arrivals))
+            push(now + dur, "compute_done", (inst, rb, dur))
 
-        def start_transfer(si, arrivals, from_dev, now):
-            """Transfer batch output from stage si to si+1."""
-            nxt = si + 1
-            prof = pipe.stages[si]
-            nbytes = prof.host_bytes_per_query * len(arrivals) * 0.5
-            to_devs = {d for d, _ in self.alloc.placement.per_stage[nxt]}
-            same = from_dev in to_devs
-            use_host = not (same and self.comm.global_memory_enabled)
-            if use_host:
-                self._host_streams[from_dev] = host_streams(from_dev) + 1
-            t = self.comm.transfer_time(
-                nbytes, same_device=same,
-                concurrent=max(host_streams(from_dev), 1))
-            push(now + t, "transfer_done", (nxt, arrivals, use_host, from_dev))
+        def dispatch(si, now):
+            for inst, rb in core.dispatch_stage(si, now):
+                start_compute(inst, rb, now)
+
+        def flush(now):
+            core.form_batches(now)
+            dispatch(0, now)
 
         # ---- main loop -------------------------------------------------
         completed = 0
         while evq:
             now, _, kind, payload = heapq.heappop(evq)
             if kind == "arrive":
-                pending.append(now)
-                if len(pending) >= batch_size:
-                    flush_pending(now)
+                core.admit(now, now)
+                if len(core.pending) >= batch_size:
+                    flush(now)
                 else:
-                    deadline = pending[0] + cfg.batch_timeout_frac \
-                        * pipe.qos_target
-                    push(deadline, "timeout", pending[0])
+                    push(core.batch_deadline(), "timeout",
+                         core.oldest_pending())
             elif kind == "timeout":
-                if pending and pending[0] == payload:
-                    flush_pending(now)
+                # stale unless the oldest pending query is still the one
+                # this deadline was armed for
+                if core.oldest_pending() == payload:
+                    flush(now)
             elif kind == "compute_done":
-                si, inst_id, arrivals = payload
-                inst = instances[inst_id]
-                inst.active = False
+                inst, rb, dur = payload
+                core.release(inst, busy_for=dur)
+                si = rb.stage
                 if si + 1 < n_stages:
-                    start_transfer(si, arrivals, inst.device, now)
+                    # per-edge mechanism selection is the core's call;
+                    # the simulator only charges the modelled cost
+                    route = core.route(si, len(rb.items), inst.device)
+                    used_host = route.mechanism == HOST_STAGED
+                    if used_host:
+                        host_streams[inst.device] = \
+                            host_streams.get(inst.device, 0) + 1
+                    t = mechanism_time(
+                        self.comm, route.mechanism, route.nbytes,
+                        concurrent=max(host_streams.get(inst.device, 0), 1))
+                    push(now + t, "transfer_done",
+                         (si + 1, rb.items, used_host, inst.device))
                 else:
-                    for at in arrivals:
+                    for at in rb.items:
                         if at >= cfg.warmup:
                             qos.record(now - at)
                         completed += 1
-                try_dispatch(si, now)
+                dispatch(si, now)
             elif kind == "transfer_done":
-                nxt, arrivals, used_host, from_dev = payload
+                nxt, items, used_host, from_dev = payload
                 if used_host:
-                    self._host_streams[from_dev] = max(
-                        0, host_streams(from_dev) - 1)
-                stage_queues[nxt].append((now, arrivals))
-                try_dispatch(nxt, now)
+                    host_streams[from_dev] = max(
+                        0, host_streams.get(from_dev, 0) - 1)
+                core.push_ready(nxt, items, now)
+                dispatch(nxt, now)
 
         horizon = max(cfg.duration - cfg.warmup, 1e-9)
         return SimResult(

@@ -1,0 +1,260 @@
+"""Unified pipeline-execution core: batching/dispatch policy, per-edge
+mechanism selection (Fig. 11 crossover), allocation-driven concurrency in
+the live engine, and live re-allocation swaps."""
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import (GLOBAL_MEMORY, HOST_STAGED, RTX_2080TI,
+                        BatchingPolicy, CamelotAllocator, CommModel,
+                        EdgeChannel, ExecCore, default_allocation,
+                        mechanism_time, select_mechanism)
+from repro.core.runtime import CamelotRuntime, RuntimeConfig
+from repro.core.types import Allocation, Placement, StageAlloc
+from repro.serving import PipelineEngine, Query
+
+
+# --------------------------------------------------------------------------
+# mechanism selection (satellite: crossover coverage)
+# --------------------------------------------------------------------------
+
+def test_crossover_matches_mechanism_times():
+    """crossover_bytes() is exactly where global-memory starts beating the
+    host-staged round trip."""
+    cm = CommModel(RTX_2080TI)
+    x = cm.crossover_bytes()
+    assert x > 0
+    assert cm.host_staged_time(0.9 * x) < cm.global_memory_time(0.9 * x)
+    assert cm.host_staged_time(1.1 * x) > cm.global_memory_time(1.1 * x)
+    assert cm.host_staged_time(x) == pytest.approx(
+        cm.global_memory_time(x), rel=1e-9)
+
+
+def test_select_mechanism_per_edge():
+    cm = CommModel(RTX_2080TI)
+    x = cm.crossover_bytes()
+    # sub-crossover payload on one device: host-staging is cheaper
+    assert select_mechanism(cm, 0.5 * x, same_device=True) == HOST_STAGED
+    # above the crossover: global-memory hand-off
+    assert select_mechanism(cm, 2.0 * x, same_device=True) == GLOBAL_MEMORY
+    # different devices can never use the hand-off
+    assert select_mechanism(cm, 2.0 * x, same_device=False) != GLOBAL_MEMORY
+    # mechanism disabled (the paper's default systems): always host
+    off = CommModel(RTX_2080TI, global_memory_enabled=False)
+    assert select_mechanism(off, 2.0 * x, same_device=True) == HOST_STAGED
+    # charged times agree with the CommModel curves
+    assert mechanism_time(cm, HOST_STAGED, 1e6) == \
+        pytest.approx(cm.host_staged_time(1e6))
+    assert mechanism_time(cm, GLOBAL_MEMORY, 1e6) == \
+        pytest.approx(cm.global_memory_time(1e6))
+
+
+def test_edge_channel_routes_by_size():
+    """Live channel: sub-crossover payloads go through the host-staged copy
+    path, larger ones through the zero-copy hand-off."""
+    import jax.numpy as jnp
+    cm = CommModel(RTX_2080TI)
+    x = cm.crossover_bytes()
+    ch = EdgeChannel(cm)
+    small = jnp.zeros(max(int(0.25 * x) // 4, 1), jnp.int32)
+    big = jnp.zeros(int(4 * x) // 4, jnp.int32)
+    ch.send(small)
+    assert ch.picks[HOST_STAGED] == 1 and ch.bytes_moved > 0
+    ch.send(big)
+    assert ch.picks[GLOBAL_MEMORY] == 1
+    assert ch.device_handoff.transfers == 1
+    # cross-device on one live host: ICI collapses to the in-memory
+    # hand-off, but a host-only CommModel must route through the copies
+    off = EdgeChannel(CommModel(RTX_2080TI, global_memory_enabled=False))
+    off.send(big, same_device=False)
+    assert off.picks[HOST_STAGED] == 1
+    # forced modes override the crossover rule
+    dev = EdgeChannel(cm, force="device")
+    dev.send(small)
+    assert dev.picks[GLOBAL_MEMORY] == 1
+
+
+# --------------------------------------------------------------------------
+# core batching + dispatch
+# --------------------------------------------------------------------------
+
+def _core(per_stage, batch=2, timeout=0.1, **kw):
+    return ExecCore(len(per_stage), Placement(per_stage=per_stage),
+                    BatchingPolicy(batch, timeout), **kw)
+
+
+def test_batching_size_and_timeout():
+    core = _core([[(0, 1.0)]], batch=3, timeout=0.5)
+    core.admit("a", 0.0)
+    core.admit("b", 0.1)
+    assert core.form_batches(0.2) == []            # not full, not timed out
+    assert core.batch_deadline() == pytest.approx(0.5)
+    core.admit("c", 0.3)                           # full -> immediate batch
+    [rb] = core.form_batches(0.3)
+    assert rb.items == ["a", "b", "c"]
+    core.admit("d", 0.4)                           # partial, must time out
+    assert core.form_batches(0.5) == []
+    [rb2] = core.form_batches(0.95)
+    assert rb2.items == ["d"]
+    assert core.batches_formed == 2
+
+
+def test_multi_instance_dispatch_against_placement():
+    core = _core([[(0, 0.5), (1, 0.5)]], batch=1, timeout=0.0)
+    for q in ("a", "b", "c"):
+        core.admit(q, 0.0)
+    core.form_batches(0.0)
+    got = core.dispatch(0.0)
+    assert len(got) == 2                           # both instances busy
+    assert {inst.device for inst, _ in got} == {0, 1}
+    assert core.dispatch(0.0) == []                # third batch must wait
+    core.release(got[0][0], busy_for=0.05)
+    got2 = core.dispatch(0.0)
+    assert len(got2) == 1
+    assert got2[0][0].busy_time == pytest.approx(0.05)
+    assert core.has_work()
+
+
+def test_route_uses_placement_colocation():
+    cm = CommModel(RTX_2080TI)
+    x = cm.crossover_bytes()
+    core = _core([[(0, 0.5)], [(0, 0.25), (1, 0.25)]],
+                 comm=cm, edge_nbytes=lambda e, c: 4 * x * c)
+    r = core.route(0, 1, from_device=0)
+    assert r.same_device and r.mechanism == GLOBAL_MEMORY
+    r2 = core.route(0, 1, from_device=7)           # producer off-placement
+    assert not r2.same_device and r2.mechanism != GLOBAL_MEMORY
+    tiny = _core([[(0, 0.5)], [(0, 0.5)]],
+                 comm=cm, edge_nbytes=lambda e, c: 0.1 * x)
+    assert tiny.route(0, 1, from_device=0).mechanism == HOST_STAGED
+
+
+def test_reset_instances_swaps_pool_keeps_queues():
+    core = _core([[(0, 1.0)]], batch=1, timeout=0.0)
+    core.admit("a", 0.0)
+    core.form_batches(0.0)
+    [(inst, _)] = core.dispatch(0.0)
+    core.admit("b", 0.0)
+    core.form_batches(0.0)
+    core.reset_instances(Placement(per_stage=[[(0, 0.5), (0, 0.5)]]))
+    assert len(core.stage_instances[0]) == 2
+    assert len(core.ready[0]) == 1                 # queued work survives
+    core.release(inst)                             # old instance: no-op
+    assert len(core.dispatch(0.0)) == 1
+
+
+# --------------------------------------------------------------------------
+# live engine: allocation-driven concurrency (acceptance criterion)
+# --------------------------------------------------------------------------
+
+class SleepStage:
+    """Deterministic GIL-releasing stage: isolates the engine's concurrency
+    from model-compute noise."""
+
+    def __init__(self, service_time=0.06, seq_len=8, vocab=16):
+        self.service_time = service_time
+        self.seq_len = seq_len
+        self.cfg = types.SimpleNamespace(vocab_size=vocab)
+        self.calls = 0
+
+    def warmup(self, batch):
+        pass
+
+    def process(self, tokens):
+        time.sleep(self.service_time)
+        self.calls += 1
+        return np.zeros((tokens.shape[0],), np.int32)
+
+
+def _burst_trace(n):
+    return [Query(qid=i, arrival=0.0, tokens=np.zeros(8, np.int32))
+            for i in range(n)]
+
+
+def _two_instance_alloc(batch=2):
+    return Allocation(stages=[StageAlloc(2, 0.5, batch)],
+                      placement=Placement(per_stage=[[(0, 0.5), (0, 0.5)]]))
+
+
+def test_two_instances_beat_one_on_p99():
+    """A 2-instance stage completes the same burst with lower p99 than a
+    single instance — N_i concurrency through the thread pool is real."""
+    def p99(alloc):
+        eng = PipelineEngine([SleepStage()], allocation=alloc,
+                             qos_target=2.0, batch_timeout=0.005)
+        stats = eng.run_trace(_burst_trace(8))
+        assert stats.qos.count() == 8
+        return stats.qos.tail_latency()
+
+    p1 = p99(default_allocation(1, batch=2))       # 4 batches, serial
+    p2 = p99(_two_instance_alloc(batch=2))         # 2 deep, 2 wide
+    assert p2 < p1 * 0.8, (p1, p2)
+
+
+def test_live_reallocation_swap_mid_trace():
+    """CamelotRuntime-style reallocation applies to a RUNNING engine:
+    allocations swap between batches and the trace still completes."""
+    eng = PipelineEngine([SleepStage(service_time=0.04)],
+                         allocation=default_allocation(1, batch=2),
+                         qos_target=5.0, batch_timeout=0.005)
+    timer = threading.Timer(0.06,
+                            lambda: eng.apply_allocation(_two_instance_alloc()))
+    timer.start()
+    queries = _burst_trace(12)
+    stats = eng.run_trace(queries)
+    timer.join()
+    assert stats.qos.count() == 12
+    assert eng.swaps == 1
+    assert len(eng.alloc.placement.per_stage[0]) == 2
+
+
+def test_runtime_pushes_allocation_into_attached_engine():
+    class _FakeEngine:
+        def __init__(self):
+            self.applied = []
+
+        def apply_allocation(self, alloc):
+            self.applied.append(alloc)
+
+    rt = CamelotRuntime.__new__(CamelotRuntime)    # skip the SA solve
+    rt.rt = RuntimeConfig()
+    rt.peak_qps = 100.0
+    rt.peak_result = types.SimpleNamespace(
+        allocation=Allocation(stages=[StageAlloc(1, 1.0, 4)],
+                              placement=Placement(per_stage=[[(0, 1.0)]])),
+        feasible=True)
+    rt._load_est = 95.0
+    rt.current = rt.peak_result.allocation
+    rt.history = []
+    rt._engine = _FakeEngine()
+    alloc = rt.reallocate(now=0.0)
+    assert rt._engine.applied == [alloc]
+
+
+# --------------------------------------------------------------------------
+# config-default hygiene (satellite: shared-mutable-default fix)
+# --------------------------------------------------------------------------
+
+def test_allocator_sa_config_not_shared():
+    from repro.sim.workloads import camelot_suite
+    pipe = camelot_suite()["img-to-img"]
+    a1 = CamelotAllocator(pipe, None, RTX_2080TI, 1)
+    a1.sa.iterations = 7
+    a2 = CamelotAllocator(pipe, None, RTX_2080TI, 1)
+    assert a2.sa.iterations != 7
+
+
+def test_sim_config_not_shared():
+    from repro.sim.simulator import PipelineSimulator, SimConfig
+    from repro.sim import even_allocation
+    from repro.sim.workloads import camelot_suite
+    pipe = camelot_suite()["img-to-img"]
+    alloc, comm = even_allocation(pipe, RTX_2080TI, 2, batch=8)
+    s1 = PipelineSimulator(pipe, alloc, RTX_2080TI, comm)
+    s1.cfg.duration = 1.234
+    s2 = PipelineSimulator(pipe, alloc, RTX_2080TI, comm)
+    assert s2.cfg.duration != 1.234
+    assert SimConfig().duration != 1.234

@@ -1,9 +1,10 @@
 """Live serving engine: trace replay, both communication mechanisms,
-profiling feed into the predictor."""
+allocation-driven execution, profiling feed into the predictor."""
 import numpy as np
 import pytest
 
-from repro.core import RTX_2080TI, profile_from_engine
+from repro.core import HOST_STAGED, RTX_2080TI, profile_from_engine
+from repro.core.types import Allocation, Placement, StageAlloc
 from repro.serving import ModelStageServer, PipelineEngine, make_trace
 
 
@@ -40,6 +41,21 @@ def test_device_mechanism_zero_copy(stages):
                          batch_size=4, batch_timeout=0.02)
     stats = eng.run_trace(_fresh_trace(stages))
     assert eng.channels[0].transfers > 0     # handles passed, no bytes field
+
+
+def test_engine_consumes_allocation_with_placement(stages):
+    """The live engine executes the allocator's output: a 2-instance stage-0
+    with explicit placement, with per-edge auto mechanism selection."""
+    alloc = Allocation(
+        stages=[StageAlloc(2, 0.25, 4), StageAlloc(1, 0.5, 4)],
+        placement=Placement(per_stage=[[(0, 0.25), (0, 0.25)], [(0, 0.5)]]))
+    eng = PipelineEngine(stages, allocation=alloc, comm_mechanism="auto",
+                         qos_target=2.0, batch_timeout=0.02)
+    stats = eng.run_trace(_fresh_trace(stages))
+    assert stats.summary()["completed"] == 10
+    # the (B,) next-token payload sits below the Fig. 11 crossover, so the
+    # auto route must pick host-staging for this edge
+    assert eng.channels[0].picks[HOST_STAGED] > 0
 
 
 def test_profiling_feed_builds_profile(stages):
