@@ -12,6 +12,7 @@ sweep; default runs everything (matches the paper's evaluation section).
   fig19  — large scale, 16 devices           (§VIII-F, Fig. 19)
   overhead — SA/predict/comm-setup costs     (§VIII-G)
   diurnal — online load-tracking runtime     (beyond paper)
+  dag    — DAG services: diamond + backbone  (beyond paper)
   roofline — dry-run roofline table          (deliverable g)
   kernel — model-kernel microbenchmarks
 """
@@ -19,8 +20,8 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_artifact, bench_comm, bench_diurnal,
-                        bench_kernels, bench_min_resource,
+from benchmarks import (bench_artifact, bench_comm, bench_dag,
+                        bench_diurnal, bench_kernels, bench_min_resource,
                         bench_overhead, bench_pcie, bench_peak_load,
                         bench_predictor, bench_roofline, bench_scale)
 from benchmarks.common import emit
@@ -35,6 +36,7 @@ MODULES = {
     "fig19": bench_scale,
     "overhead": bench_overhead,
     "diurnal": bench_diurnal,
+    "dag": bench_dag,
     "roofline": bench_roofline,
     "kernel": bench_kernels,
 }

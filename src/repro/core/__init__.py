@@ -23,7 +23,8 @@ from repro.core.predictor import (PipelinePredictor, StagePredictor,
 from repro.core.qos import QoSTracker
 from repro.core.types import (RTX_2080TI, TPU_V5E_DEV, V100, Allocation,
                               DeviceSpec, MicroserviceProfile, Pipeline,
-                              Placement, StageAlloc)
+                              Placement, ServiceEdge, ServiceGraph,
+                              StageAlloc)
 
 __all__ = [
     "CamelotAllocator", "SAConfig", "SolveResult", "CommModel",
@@ -36,5 +37,5 @@ __all__ = [
     "PipelinePredictor", "StagePredictor", "collect_samples",
     "profile_from_engine", "QoSTracker", "RTX_2080TI", "TPU_V5E_DEV", "V100",
     "Allocation", "DeviceSpec", "MicroserviceProfile", "Pipeline",
-    "Placement", "StageAlloc",
+    "Placement", "ServiceEdge", "ServiceGraph", "StageAlloc",
 ]

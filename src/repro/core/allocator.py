@@ -13,6 +13,12 @@ aggregate global-memory bandwidth C·BW, global-memory capacity C·F
 (weights shared between same-stage co-located instances are handled by the
 deployment packer), and end-to-end QoS including inter-stage communication
 time under the chosen communication mechanism.
+
+Both policies are stated over a ``ServiceGraph`` (chains included as the
+degenerate DAG): Eq. 1's objective is the min aggregate throughput over
+all *nodes*, and Constraint-5's end-to-end latency is the **critical
+path** — the longest entry→exit path of node durations plus per-edge
+transfer times (for a chain this reduces to the paper's plain sum).
 """
 from __future__ import annotations
 
@@ -25,10 +31,9 @@ import numpy as np
 
 from repro.core.comm import CommModel
 from repro.core.deployment import pack_instances
-from repro.core.exec import edge_bytes
 from repro.core.predictor import PipelinePredictor
-from repro.core.types import (Allocation, DeviceSpec, Pipeline, Placement,
-                              StageAlloc)
+from repro.core.types import (Allocation, DeviceSpec, ServiceEdge,
+                              ServiceGraph, StageAlloc)
 
 QUOTA_STEP = 0.05
 QUOTA_MIN = 0.05
@@ -75,7 +80,7 @@ class SolveResult:
 
 
 class CamelotAllocator:
-    def __init__(self, pipeline: Pipeline, predictor: PipelinePredictor,
+    def __init__(self, pipeline: ServiceGraph, predictor: PipelinePredictor,
                  device: DeviceSpec, n_devices: int,
                  comm: Optional[CommModel] = None,
                  sa: Optional[SAConfig] = None):
@@ -124,24 +129,25 @@ class CamelotAllocator:
         total_mem = float(sum(ns[i] * foots[i] for i in range(n)))
         if total_mem > n_devices * dev.mem_capacity:
             return None
-        # Constraint-5 (QoS): Σ duration_i + Σ comm_i <= QoS target.
-        # Communication uses the global-memory mechanism when adjacent
-        # stages can co-locate (quota headroom on one device), else host.
-        comm_t = 0.0
-        for i in range(n - 1):
-            colocatable = (ps[i] + ps[i + 1]) <= 1.0 + 1e-9
-            comm_t += self.comm.transfer_time(
-                self._edge_bytes(i, batch),
-                same_device=colocatable and self.comm.global_memory_enabled)
-        latency = float(durations.sum()) + comm_t
+        # Constraint-5 (QoS): critical path of the DAG — the longest
+        # entry→exit path of node durations plus edge transfer times — must
+        # fit the QoS target.  Communication on an edge uses the
+        # global-memory mechanism when its endpoints can co-locate (quota
+        # headroom on one device), else host.  For a chain this is exactly
+        # the paper's Σ duration_i + Σ comm_i.
+        latency = self.pipeline.critical_path(
+            node_cost=lambda i: float(durations[i]),
+            edge_cost=lambda e: self._edge_comm_time(e, ps, batch))
         if latency > self.pipeline.qos_target * (1 - self.sa.qos_slack):
             return None
         return float(thpts.min()), float(ns @ ps), latency
 
-    def _edge_bytes(self, i: int, batch: int) -> float:
-        """Bytes passed from stage i to stage i+1 per batch (the same
-        sizing the execution core charges at runtime)."""
-        return edge_bytes(self.pipeline.stages[i], batch)
+    def _edge_comm_time(self, e: ServiceEdge, ps: np.ndarray,
+                        batch: int) -> float:
+        colocatable = (ps[e.src] + ps[e.dst]) <= 1.0 + 1e-9
+        return self.comm.transfer_time(
+            self.pipeline.edge_nbytes(e.src, e.dst, batch),
+            same_device=colocatable and self.comm.global_memory_enabled)
 
     # ------------------------------------------------------------------
     # Simulated annealing core (paper §VII-C description)
@@ -248,8 +254,6 @@ class CamelotAllocator:
         """Eq. 2: y = max(ΣC(i,s)/G, ΣM(i,s)/F) scaled to the target load."""
         dev = self.device
         n = self.pipeline.n_stages
-        qps_per_batch = [self.predictor.stages[i].throughput(batch, 1.0)
-                         for i in range(n)]
         # FLOP/s demand at `load` qps across stages
         flops_demand = sum(self.predictor.stages[i].flops(batch) / batch
                            * load for i in range(n))

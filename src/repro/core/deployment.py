@@ -13,7 +13,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import List, Optional, Set, Tuple
 
-from repro.core.types import (Allocation, DeviceSpec, Pipeline, Placement)
+from repro.core.types import (Allocation, DeviceSpec, Placement,
+                              ServiceGraph)
 
 
 @dataclass
@@ -29,10 +30,12 @@ class DeviceState:
         return (self.mem_free, self.quota_free)
 
 
-def pack_instances(alloc: Allocation, pipeline: Pipeline,
+def pack_instances(alloc: Allocation, pipeline: ServiceGraph,
                    predictor, device: DeviceSpec,
                    n_devices: int) -> Optional[Placement]:
-    """Place every instance; returns None if infeasible.
+    """Place every instance; returns None if infeasible.  Packing is
+    per-node (topology-free), so chains and DAGs share this code; ``si``
+    indexes the graph's node list.
 
     Memory accounting: first instance of stage s on a device pays
     weights + activations; further same-stage instances on that device pay

@@ -1,4 +1,4 @@
-"""Unified pipeline-execution core (paper §VI–§VII).
+"""Unified pipeline-execution core (paper §VI–§VII), generalised to DAGs.
 
 One scheduling state machine shared — verbatim, not duplicated — by the two
 execution worlds of this repo:
@@ -13,16 +13,34 @@ execution worlds of this repo:
 The core owns every *policy* decision so both worlds are charged
 identically:
 
-  - stage-0 admission and QoS-aware dynamic batching (dispatch a batch when
-    it is full OR the oldest query has waited past the timeout),
-  - per-stage FIFO ready queues for in-flight batches,
+  - entry-node admission and QoS-aware dynamic batching (dispatch a batch
+    when it is full OR the oldest query has waited past the timeout),
+  - per-node FIFO ready queues for in-flight batches,
   - multi-instance dispatch against an ``Allocation``'s ``Placement``
     (first free instance, FIFO batches — N_i concurrent instances per
-    stage),
+    node),
   - per-edge communication-mechanism selection via
     ``CommModel.crossover_bytes()`` (Fig. 11): host-staging below the
     crossover, global-memory hand-off above it, host forced when producer
     and consumers share no device.
+
+The DAG model (``repro.core.types.ServiceGraph``)
+-------------------------------------------------
+The topology is a service DAG, with the paper's linear chain as the
+special case (an ``int`` node count still builds a chain, so chain-era
+callers are unchanged).  Three graph-only behaviours:
+
+  - **batch identity**: every batch formed at admission gets a ``bid``; all
+    downstream copies of it (one per branch) carry that id and the same
+    ordered ``items`` list, so fan-in can re-associate branches.
+  - **fan-in join barrier** (``deliver``): a batch becomes ready at a node
+    only once the outputs of *all* predecessor nodes for its queries have
+    arrived, regardless of branch completion order.  The joined batch keeps
+    the entry-time item order (per-query ordering is preserved) and exposes
+    each branch's payload in ``ReadyBatch.inputs``.
+  - **exit join** (``complete_exit``): with several exit nodes a query is
+    complete only when every exit has produced it; the core tracks this so
+    both worlds record end-to-end latency at the same instant.
 
 The core is deliberately time-agnostic: callers pass ``now`` in, so the
 same code runs under a real clock and a simulated one.  It holds no locks —
@@ -33,17 +51,14 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple, Union
 
 from repro.core.comm import CommModel, select_mechanism
-from repro.core.types import Allocation, MicroserviceProfile, Placement
+from repro.core.types import (Allocation, Placement, ServiceEdge,
+                              ServiceGraph, edge_bytes)
 
-
-def edge_bytes(profile: MicroserviceProfile, count: int) -> float:
-    """Bytes crossing the stage_i -> stage_{i+1} edge for ``count`` queries
-    (half the stage's PCIe in+out traffic; 1 MB/query floor for profiles
-    that do not model host traffic)."""
-    return profile.host_bytes_per_query * count * 0.5 or 1e6 * count
+__all__ = ["edge_bytes", "BatchingPolicy", "StageInstance", "ReadyBatch",
+           "EdgeRoute", "ExecCore", "default_allocation"]
 
 
 @dataclass
@@ -70,7 +85,7 @@ class BatchingPolicy:
 
 @dataclass
 class StageInstance:
-    """One schedulable instance of a stage: a (device, quota) slot from the
+    """One schedulable instance of a node: a (device, quota) slot from the
     Placement.  ``bandwidth`` is simulator-side contention bookkeeping."""
     stage: int
     index: int
@@ -84,45 +99,85 @@ class StageInstance:
 
 @dataclass
 class ReadyBatch:
-    """A formed batch travelling through the pipeline.  ``items`` is opaque
-    to the core (Query objects in the live engine, arrival timestamps in
-    the simulator); ``data`` is the stage input (live: a jax.Array)."""
+    """A formed batch travelling through the service graph.  ``items`` is
+    opaque to the core (Query objects in the live engine, arrival
+    timestamps in the simulator); ``data`` is the node input (live: a
+    jax.Array).  ``bid`` identifies the admission-time batch across
+    branches; ``inputs`` maps predecessor node -> branch payload for
+    batches produced by a fan-in join."""
     stage: int
     items: List[Any]
     ready_time: float
     data: Any = None
+    bid: int = -1
+    inputs: Optional[Dict[int, Any]] = None
 
 
 @dataclass
 class EdgeRoute:
-    """Resolved routing decision for one batch over one pipeline edge."""
+    """Resolved routing decision for one batch over one graph edge."""
     mechanism: str
     same_device: bool
     nbytes: float
+    src: int = -1
+    dst: int = -1
 
 
 class ExecCore:
     """The shared scheduling state machine.
 
-    Construction takes a ``Placement`` (one ``StageInstance`` per placed
-    (device, quota) entry) — this is how the allocator's output drives
-    execution in both worlds."""
+    Construction takes the service topology — a ``ServiceGraph``, or an
+    ``int`` node count meaning the linear chain of that length — and a
+    ``Placement`` (one ``StageInstance`` per placed (device, quota) entry):
+    this is how the allocator's output drives execution in both worlds.
 
-    def __init__(self, n_stages: int, placement: Placement,
+    ``edge_nbytes`` overrides payload sizing; it is called as
+    ``edge_nbytes(edge, count)`` with the ``ServiceEdge`` being crossed.
+    Without it, a ``ServiceGraph`` topology prices edges itself
+    (``ServiceGraph.edge_nbytes``) and an int chain uses a 1 MB/query
+    default."""
+
+    def __init__(self, topology: Union[int, ServiceGraph],
+                 placement: Placement,
                  batching: BatchingPolicy, comm: Optional[CommModel] = None,
-                 edge_nbytes: Optional[Callable[[int, int], float]] = None):
-        assert len(placement.per_stage) == n_stages, \
-            "placement must cover every stage"
-        self.n_stages = n_stages
+                 edge_nbytes: Optional[Callable[[ServiceEdge, int],
+                                               float]] = None):
+        if isinstance(topology, int):
+            self.graph: Optional[ServiceGraph] = None
+            n = topology
+            self.preds = [[] if i == 0 else [i - 1] for i in range(n)]
+            self.succs = [[i + 1] if i + 1 < n else [] for i in range(n)]
+            self.entries = [0] if n else []
+            self.exits = [n - 1] if n else []
+            self.topo_order = list(range(n))
+            self._edges = {(i, i + 1): ServiceEdge(i, i + 1)
+                           for i in range(n - 1)}
+        else:
+            self.graph = topology
+            n = topology.n_nodes
+            self.preds = topology.preds
+            self.succs = topology.succs
+            self.entries = topology.entries
+            self.exits = topology.exits
+            self.topo_order = topology.topo_order
+            self._edges = {(e.src, e.dst): e for e in topology.edges}
+        assert len(placement.per_stage) == n, \
+            "placement must cover every node"
+        self.n_stages = n
         self.batching = batching
         self.comm = comm
-        self._edge_nbytes = edge_nbytes or (lambda e, c: 1e6 * c)
+        self._edge_nbytes = edge_nbytes
         self.stage_instances: List[List[StageInstance]] = []
         self._build_instances(placement)
-        # stage-0 accumulation: (arrival, item)
+        # entry admission: (arrival, item)
         self.pending: List[Tuple[float, Any]] = []
-        self.ready: List[deque] = [deque() for _ in range(n_stages)]
+        self.ready: List[deque] = [deque() for _ in range(n)]
         self.batches_formed = 0
+        # fan-in joins: (dst, bid) -> {src: payload}; items kept per join
+        self._joins: Dict[Tuple[int, int], Dict[int, Any]] = {}
+        self._join_items: Dict[Tuple[int, int], List[Any]] = {}
+        # exit joins: bid -> set of exits still owed
+        self._exit_open: Dict[int, Set[int]] = {}
 
     # ---- instances ----------------------------------------------------
 
@@ -130,7 +185,7 @@ class ExecCore:
         self.placement = placement
         self.stage_instances = []
         for si, placed in enumerate(placement.per_stage):
-            assert placed, f"stage {si} has no placed instance"
+            assert placed, f"node {si} has no placed instance"
             self.stage_instances.append([
                 StageInstance(si, k, dev, quota)
                 for k, (dev, quota) in enumerate(placed)])
@@ -147,7 +202,7 @@ class ExecCore:
     def instances(self) -> List[StageInstance]:
         return [i for st in self.stage_instances for i in st]
 
-    # ---- stage-0 admission & dynamic batching -------------------------
+    # ---- entry admission & dynamic batching ---------------------------
 
     def admit(self, item: Any, arrival: float) -> None:
         self.pending.append((arrival, item))
@@ -163,27 +218,77 @@ class ExecCore:
         return self.batching.deadline(self.pending[0][0])
 
     def form_batches(self, now: float) -> List[ReadyBatch]:
-        """Move pending queries into stage-0 ready batches per the
-        size/timeout policy.  Returns the newly formed batches so the live
+        """Move pending queries into entry-node ready batches per the
+        size/timeout policy.  Each admission-time batch gets a ``bid`` and
+        is seeded at EVERY entry node (one ReadyBatch per entry, sharing
+        bid and items).  Returns the newly formed batches so the live
         engine can attach input data before dispatch."""
         out: List[ReadyBatch] = []
         while self.pending and self.batching.should_dispatch(
                 len(self.pending), self.pending[0][0], now):
             take = self.pending[:self.batching.batch_size]
             del self.pending[:len(take)]
-            rb = ReadyBatch(stage=0, items=[it for _, it in take],
-                            ready_time=now)
-            self.ready[0].append(rb)
-            out.append(rb)
+            items = [it for _, it in take]
+            bid = self.batches_formed
+            self._exit_open[bid] = set(self.exits)
+            for node in self.entries:
+                rb = ReadyBatch(stage=node, items=items, ready_time=now,
+                                bid=bid)
+                self.ready[node].append(rb)
+                out.append(rb)
             self.batches_formed += 1
         return out
 
     def push_ready(self, stage: int, items: List[Any], now: float,
-                   data: Any = None) -> ReadyBatch:
-        """Queue a batch arriving at a downstream stage."""
-        rb = ReadyBatch(stage=stage, items=items, ready_time=now, data=data)
+                   data: Any = None, bid: int = -1) -> ReadyBatch:
+        """Queue a batch directly at a node, bypassing the fan-in barrier
+        (chain-era callers; single-predecessor nodes)."""
+        rb = ReadyBatch(stage=stage, items=items, ready_time=now, data=data,
+                        bid=bid)
         self.ready[stage].append(rb)
         return rb
+
+    # ---- fan-in join barrier ------------------------------------------
+
+    def deliver(self, src: int, dst: int, bid: int, items: List[Any],
+                now: float, data: Any = None) -> Optional[ReadyBatch]:
+        """One branch's output for batch ``bid`` arrives over ``src -> dst``.
+
+        Returns the joined ReadyBatch once ALL predecessors of ``dst`` have
+        delivered for this bid (out-of-order branch completion is fine —
+        the join holds early arrivals), else None.  The joined batch keeps
+        the first-arrival ``items`` order, so per-query ordering survives
+        the join."""
+        key = (dst, bid)
+        pending = self._joins.setdefault(key, {})
+        assert src not in pending, \
+            f"duplicate delivery over edge {src}->{dst} for batch {bid}"
+        pending[src] = data
+        self._join_items.setdefault(key, items)
+        if set(pending) != set(self.preds[dst]):
+            return None
+        inputs = self._joins.pop(key)
+        joined_items = self._join_items.pop(key)
+        rb = ReadyBatch(stage=dst, items=joined_items, ready_time=now,
+                        bid=bid, inputs=inputs,
+                        data=inputs[src] if len(inputs) == 1 else None)
+        self.ready[dst].append(rb)
+        return rb
+
+    # ---- exit join -----------------------------------------------------
+
+    def complete_exit(self, bid: int, node: int) -> bool:
+        """Record that exit ``node`` finished batch ``bid``; True when every
+        exit of the graph has — i.e. the batch's queries are end-to-end
+        complete (for a chain: immediately true at the last stage)."""
+        open_exits = self._exit_open.get(bid)
+        if open_exits is None:          # untracked bid (direct push_ready)
+            return True
+        open_exits.discard(node)
+        if open_exits:
+            return False
+        del self._exit_open[bid]
+        return True
 
     # ---- dispatch -----------------------------------------------------
 
@@ -195,7 +300,7 @@ class ExecCore:
 
     def dispatch_stage(self, stage: int, now: float,
                        ) -> List[Tuple[StageInstance, ReadyBatch]]:
-        """Assign queued batches of one stage to free instances (FIFO
+        """Assign queued batches of one node to free instances (FIFO
         batches, first free instance)."""
         out = []
         q = self.ready[stage]
@@ -210,10 +315,11 @@ class ExecCore:
         return out
 
     def dispatch(self, now: float) -> List[Tuple[StageInstance, ReadyBatch]]:
-        """Dispatch every stage; later stages first so a freed instance can
-        be reused for work already deeper in the pipeline."""
+        """Dispatch every node; deeper nodes first (reverse topological
+        order) so a freed instance can be reused for work already further
+        through the graph."""
         out = []
-        for si in range(self.n_stages - 1, -1, -1):
+        for si in reversed(self.topo_order):
             out.extend(self.dispatch_stage(si, now))
         return out
 
@@ -227,30 +333,51 @@ class ExecCore:
     def consumer_devices(self, stage: int) -> set:
         return {d for d, _ in self.placement.per_stage[stage]}
 
-    def route(self, edge: int, count: int, from_device: int) -> EdgeRoute:
-        """Mechanism selection for the edge stage ``edge`` -> ``edge+1``:
-        global-memory only when the producer's device also hosts a consumer
-        instance AND the payload is above the Fig. 11 crossover."""
-        nbytes = float(self._edge_nbytes(edge, count))
-        same = from_device in self.consumer_devices(edge + 1)
+    def edge_payload(self, src: int, dst: int, count: int) -> float:
+        """Bytes crossing ``src -> dst`` for ``count`` queries: the caller
+        override, the graph's per-edge sizing, or the 1 MB/query default."""
+        edge = self._edges[(src, dst)]
+        if self._edge_nbytes is not None:
+            return float(self._edge_nbytes(edge, count))
+        if self.graph is not None:
+            return float(self.graph.edge_nbytes(src, dst, count))
+        return 1e6 * count
+
+    def route(self, edge: int, count: int, from_device: int,
+              dst: Optional[int] = None) -> EdgeRoute:
+        """Mechanism selection for the edge ``edge -> dst`` (``dst``
+        defaults to the sole successor — the chain case): global-memory
+        only when the producer's device also hosts a consumer instance AND
+        the payload is above the Fig. 11 crossover."""
+        src = edge
+        if dst is None:
+            succs = self.succs[src]
+            assert len(succs) == 1, \
+                f"node {src} has {len(succs)} successors; pass dst explicitly"
+            dst = succs[0]
+        nbytes = self.edge_payload(src, dst, count)
+        same = from_device in self.consumer_devices(dst)
         mech = select_mechanism(self.comm, nbytes, same)
-        return EdgeRoute(mechanism=mech, same_device=same, nbytes=nbytes)
+        return EdgeRoute(mechanism=mech, same_device=same, nbytes=nbytes,
+                         src=src, dst=dst)
 
     # ---- progress -----------------------------------------------------
 
     def has_work(self) -> bool:
         return bool(self.pending) or any(self.ready) or \
+            bool(self._joins) or \
             any(i.busy for st in self.stage_instances for i in st)
 
     def queue_depths(self) -> List[int]:
         return [len(q) for q in self.ready]
 
 
-def default_allocation(n_stages: int, batch: int,
+def default_allocation(topology: Union[int, ServiceGraph], batch: int,
                        instances_per_stage: int = 1) -> Allocation:
     """A trivial placed allocation (everything on device 0, even quotas) for
     running an engine without an allocator in the loop."""
     from repro.core.types import StageAlloc
+    n_stages = topology if isinstance(topology, int) else topology.n_nodes
     quota = round(1.0 / max(n_stages * instances_per_stage, 1), 4)
     stages = [StageAlloc(n_instances=instances_per_stage, quota=quota,
                          batch=batch) for _ in range(n_stages)]

@@ -133,7 +133,11 @@ class StagePredictor:
 
 
 class PipelinePredictor:
-    """Per-stage predictors for one pipeline, built from offline profiling."""
+    """Per-node predictors for one service, built from offline profiling.
+
+    ``stages[i]`` is the predictor for node i of the ``ServiceGraph`` (the
+    allocator indexes by node id); a chain's stage order is the node order,
+    so chain-era callers are unchanged."""
 
     def __init__(self, stage_predictors: Sequence[StagePredictor]):
         self.stages = list(stage_predictors)
@@ -151,6 +155,16 @@ class PipelinePredictor:
             preds.append(StagePredictor(p.name, model_kind, seed=seed + i)
                          .fit(samples, profile=p))
         return cls(preds)
+
+    @classmethod
+    def from_graph(cls, graph, device: DeviceSpec, model_kind: str = "dt",
+                   noise: float = 0.03, seed: int = 0,
+                   batches: Sequence[int] = DEFAULT_BATCHES,
+                   ) -> "PipelinePredictor":
+        """Profile every node of a ``ServiceGraph`` (topology-agnostic —
+        solo-run profiling is per node)."""
+        return cls.from_profiles(graph.nodes, device, model_kind=model_kind,
+                                 noise=noise, seed=seed, batches=batches)
 
 
 def profile_from_engine(name: str, timings: Sequence[tuple], weights_bytes: float,

@@ -19,7 +19,7 @@ import numpy as np
 from repro.core.allocator import CamelotAllocator, SAConfig, SolveResult
 from repro.core.comm import CommModel
 from repro.core.predictor import PipelinePredictor
-from repro.core.types import Allocation, DeviceSpec, Pipeline
+from repro.core.types import Allocation, DeviceSpec, ServiceGraph
 
 
 @dataclass
@@ -49,7 +49,7 @@ class CamelotRuntime:
     the same runtime object manages both the simulated and the live world.
     """
 
-    def __init__(self, pipeline: Pipeline, predictor: PipelinePredictor,
+    def __init__(self, pipeline: ServiceGraph, predictor: PipelinePredictor,
                  device: DeviceSpec, n_devices: int, batch: int,
                  rt: Optional[RuntimeConfig] = None,
                  sa: Optional[SAConfig] = None):

@@ -13,11 +13,33 @@ Terminology mapping to the paper (§VII, Table II):
   - ``StageAlloc``      — (N_i, p_i, s): instances, per-instance quota,
                           batch size for stage i.
   - ``Placement``       — instance -> device packing (deployment scheme §VII-D).
+
+The service topology model
+--------------------------
+The paper states its model over a *linear* stage chain (stage i feeds
+stage i+1), but real GPU microservice applications are call **graphs** with
+fan-out and fan-in (ensemble branches, shared feature extractors).  The
+repo's core abstraction is therefore ``ServiceGraph``: a DAG whose nodes
+are ``MicroserviceProfile``s and whose explicit edge list carries per-edge
+payload sizing.  Every layer — execution core, allocator, packer,
+simulator, live engine — dispatches against this topology:
+
+  - Eq. 1's min-throughput objective becomes the min *aggregate node*
+    throughput over all nodes of the graph;
+  - Constraint-5's end-to-end latency becomes the **critical path** (the
+    longest entry→exit path of node durations plus edge transfer times);
+  - a batch advances over an edge only once all predecessor outputs for
+    its queries have arrived (fan-in join barrier).
+
+``Pipeline`` survives as a thin ``ServiceGraph.chain(...)`` constructor —
+the paper's linear chain is exactly the special case with edges
+``i -> i+1`` — so all chain-shaped workloads, tests and benchmarks are
+unchanged.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -106,16 +128,156 @@ class MicroserviceProfile:
         return batch / self.duration(batch, quota, device)
 
 
-@dataclass
-class Pipeline:
-    """An end-to-end user-facing service: an ordered chain of stages."""
-    name: str
-    stages: List[MicroserviceProfile]
-    qos_target: float = 0.25            # end-to-end 99%-ile target (seconds)
+def edge_bytes(profile: MicroserviceProfile, count: int) -> float:
+    """Default payload sizing for an edge leaving ``profile``'s node: half
+    the node's PCIe in+out traffic per query.  Profiles that do not model
+    host traffic get an explicit 1 MB/query floor (a zero-byte edge would
+    make every transfer free and hide the mechanism choice entirely)."""
+    per_query = profile.host_bytes_per_query * 0.5
+    if per_query <= 0.0:
+        per_query = 1e6
+    return per_query * count
+
+
+@dataclass(frozen=True)
+class ServiceEdge:
+    """One directed call edge ``src -> dst`` of a ServiceGraph.
+
+    ``payload_bytes_per_query`` overrides the default sizing (half the
+    source node's PCIe traffic, see ``edge_bytes``) — fan-out edges often
+    carry different payloads (e.g. a feature vector to one branch, a
+    thumbnail to another)."""
+    src: int
+    dst: int
+    payload_bytes_per_query: Optional[float] = None
+
+
+class ServiceGraph:
+    """An end-to-end user-facing service: a DAG of microservice nodes.
+
+    Nodes are ``MicroserviceProfile``s indexed 0..n-1; ``edges`` is an
+    explicit directed edge list.  Entry nodes (no predecessors) admit
+    queries; exit nodes (no successors) complete them — a query finishes
+    only when *every* exit has produced its output.  The linear chain of
+    the paper is the special case built by ``ServiceGraph.chain`` (and the
+    back-compat ``Pipeline`` constructor).
+
+    Derived topology (predecessors, successors, topological order,
+    entries/exits) is computed once at construction; the graph is
+    validated to be acyclic with no dangling node indices.
+    """
+
+    def __init__(self, name: str, nodes: Sequence[MicroserviceProfile],
+                 edges: Sequence[ServiceEdge], qos_target: float = 0.25):
+        self.name = name
+        self.nodes: List[MicroserviceProfile] = list(nodes)
+        self.edges: List[ServiceEdge] = list(edges)
+        self.qos_target = qos_target    # end-to-end 99%-ile target (seconds)
+        n = len(self.nodes)
+        assert n > 0, "a ServiceGraph needs at least one node"
+        self.preds: List[List[int]] = [[] for _ in range(n)]
+        self.succs: List[List[int]] = [[] for _ in range(n)]
+        self._edge_map: Dict[Tuple[int, int], ServiceEdge] = {}
+        for e in self.edges:
+            assert 0 <= e.src < n and 0 <= e.dst < n, f"dangling edge {e}"
+            assert (e.src, e.dst) not in self._edge_map, f"duplicate edge {e}"
+            self._edge_map[(e.src, e.dst)] = e
+            self.succs[e.src].append(e.dst)
+            self.preds[e.dst].append(e.src)
+        self.entries: List[int] = [i for i in range(n) if not self.preds[i]]
+        self.exits: List[int] = [i for i in range(n) if not self.succs[i]]
+        assert self.entries, f"{name}: graph has a cycle (no entry node)"
+        self.topo_order: List[int] = self._toposort()
+
+    def _toposort(self) -> List[int]:
+        indeg = [len(p) for p in self.preds]
+        order = [i for i in range(len(self.nodes)) if indeg[i] == 0]
+        for u in order:                  # Kahn's algorithm; order grows
+            for v in self.succs[u]:
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    order.append(v)
+        assert len(order) == len(self.nodes), f"{self.name}: cycle detected"
+        return order
+
+    # ---- chain special case -------------------------------------------
+
+    @classmethod
+    def chain(cls, name: str, stages: Sequence[MicroserviceProfile],
+              qos_target: float = 0.25) -> "ServiceGraph":
+        """The paper's shape: stage i feeds stage i+1."""
+        return cls(name, stages,
+                   [ServiceEdge(i, i + 1) for i in range(len(stages) - 1)],
+                   qos_target=qos_target)
+
+    @property
+    def is_chain(self) -> bool:
+        return all(len(p) <= 1 for p in self.preds) and \
+            all(len(s) <= 1 for s in self.succs) and \
+            len(self.entries) == 1 and len(self.edges) == len(self.nodes) - 1
+
+    # ---- back-compat stage view ---------------------------------------
+
+    @property
+    def stages(self) -> List[MicroserviceProfile]:
+        """Node list under its historical name (chain-era callers)."""
+        return self.nodes
 
     @property
     def n_stages(self) -> int:
-        return len(self.stages)
+        return len(self.nodes)
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.nodes)
+
+    # ---- per-edge payloads and path metrics ---------------------------
+
+    def edge(self, src: int, dst: int) -> ServiceEdge:
+        return self._edge_map[(src, dst)]
+
+    def edge_nbytes(self, src: int, dst: int, count: int) -> float:
+        """Bytes crossing ``src -> dst`` for ``count`` queries: the edge's
+        explicit payload sizing, else the source node's default.  Graphs
+        built with placeholder (None) nodes — the live engine's topology
+        view, where profiles live in the stage servers — price edges at
+        the 1 MB/query default."""
+        e = self._edge_map[(src, dst)]
+        if e.payload_bytes_per_query is not None:
+            return e.payload_bytes_per_query * count
+        if self.nodes[e.src] is None:
+            return 1e6 * count
+        return edge_bytes(self.nodes[e.src], count)
+
+    def critical_path(self, node_cost: Callable[[int], float],
+                      edge_cost: Callable[[ServiceEdge], float] = None,
+                      ) -> float:
+        """Longest entry→exit path: sum of node costs plus edge costs along
+        it (Constraint-5's end-to-end latency over a DAG; for a chain this
+        reduces to the paper's plain sum)."""
+        ec = edge_cost or (lambda e: 0.0)
+        best = [0.0] * len(self.nodes)
+        for u in self.topo_order:
+            incoming = [best[p] + ec(self._edge_map[(p, u)])
+                        for p in self.preds[u]]
+            best[u] = node_cost(u) + (max(incoming) if incoming else 0.0)
+        return max(best[x] for x in self.exits)
+
+    def __repr__(self) -> str:
+        return (f"ServiceGraph({self.name!r}, nodes={len(self.nodes)}, "
+                f"edges={[(e.src, e.dst) for e in self.edges]})")
+
+
+class Pipeline(ServiceGraph):
+    """An ordered chain of stages — thin ``ServiceGraph.chain`` constructor
+    kept so every chain-era workload/test/benchmark builds unchanged."""
+
+    def __init__(self, name: str, stages: Sequence[MicroserviceProfile],
+                 qos_target: float = 0.25):
+        super().__init__(
+            name, stages,
+            [ServiceEdge(i, i + 1) for i in range(len(stages) - 1)],
+            qos_target=qos_target)
 
 
 @dataclass

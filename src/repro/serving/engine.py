@@ -1,15 +1,22 @@
-"""Live mini serving engine: runs REAL JAX models as microservice pipelines.
+"""Live mini serving engine: runs REAL JAX models as microservice graphs.
 
 This is the reduced-scale twin of the simulator, and since the
 unified-execution refactor it is built on the SAME scheduling core
 (``repro.core.exec.ExecCore``) the simulator uses: the engine consumes an
 ``Allocation`` + ``Placement`` from the allocator and runs N_i concurrent
-instances per stage — a thread pool around the jitted calls, which works
+instances per node — a thread pool around the jitted calls, which works
 because ``block_until_ready`` releases the GIL — with QoS-aware dynamic
 batching and per-edge communication-mechanism selection
 (``CommModel.crossover_bytes``, paper Fig. 11): ``DeviceHandoff`` passes the
 stage-output ``jax.Array`` by reference (global-memory mechanism, §VI-B);
 ``HostStagedChannel`` forces the device→host→device round trip (§VI-A).
+
+Topology is a ``ServiceGraph`` (``graph=`` argument; default: the linear
+chain over the given stage servers).  Fan-out sends one payload per
+out-edge through that edge's channel; fan-in waits on the core's join
+barrier and feeds the consumer a deterministic, branch-order-independent
+combination of the predecessor outputs; with several exit nodes a query
+completes only when every exit has produced it.
 
 It validates Camelot's mechanisms end-to-end and produces the real step
 timings that calibrate the simulator's profiles (``profile_stage_timings``
@@ -24,7 +31,7 @@ import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +42,7 @@ from repro.core.comm import CommModel, EdgeChannel
 from repro.core.exec import (BatchingPolicy, ExecCore, ReadyBatch,
                              StageInstance, default_allocation)
 from repro.core.qos import QoSTracker
-from repro.core.types import RTX_2080TI, Allocation
+from repro.core.types import RTX_2080TI, Allocation, ServiceGraph
 from repro.models import init_params, serve_prefill
 
 
@@ -131,13 +138,33 @@ class ServeStats:
         }
 
 
-class PipelineEngine:
-    """Executes a pipeline of stage servers over a query trace, driven by
-    the shared ``ExecCore``.
+class _EdgeChannels(dict):
+    """Per-edge live channels, addressable by ``(src, dst)`` or by position
+    in the graph's edge list (``channels[0]`` is the first edge — for a
+    chain, the stage-0 -> stage-1 hop, as before the DAG refactor)."""
 
+    def __init__(self, graph: ServiceGraph, comm: CommModel,
+                 force: Optional[str]):
+        super().__init__()
+        self._order = [(e.src, e.dst) for e in graph.edges]
+        for key in self._order:
+            self[key] = EdgeChannel(comm, force=force)
+
+    def __getitem__(self, key):
+        if isinstance(key, int):
+            key = self._order[key]
+        return dict.__getitem__(self, key)
+
+
+class PipelineEngine:
+    """Executes a service graph of stage servers over a query trace, driven
+    by the shared ``ExecCore``.
+
+    ``graph`` gives the topology (node i is served by ``stages[i]``);
+    omitted, the stages form the linear chain of the paper.
     ``allocation`` (an ``Allocation`` with a ``Placement``) decides how many
-    concurrent instances each stage runs and on which (logical) device; when
-    omitted, a trivial 1-instance-per-stage allocation is built.
+    concurrent instances each node runs and on which (logical) device; when
+    omitted, a trivial 1-instance-per-node allocation is built.
     ``comm_mechanism``: "auto" routes each edge payload via the crossover
     rule; "device"/"host" pin the mechanism for A/B comparisons.
     """
@@ -146,9 +173,16 @@ class PipelineEngine:
                  qos_target: float = 2.0, batch_size: int = 4,
                  batch_timeout: float = 0.2,
                  allocation: Optional[Allocation] = None,
-                 comm_model: Optional[CommModel] = None):
+                 comm_model: Optional[CommModel] = None,
+                 graph: Optional[ServiceGraph] = None):
         assert comm_mechanism in ("auto", "device", "host")
         self.stages = list(stages)
+        if graph is None:
+            graph = ServiceGraph.chain(
+                "engine", [None] * len(self.stages), qos_target=qos_target)
+        assert graph.n_nodes == len(self.stages), \
+            "graph nodes and stage servers must correspond 1:1"
+        self.graph = graph
         self.comm_mechanism = comm_mechanism
         self.qos_target = qos_target
         self.batch_timeout = batch_timeout
@@ -160,8 +194,7 @@ class PipelineEngine:
         self.alloc = allocation
         self.batch_size = allocation.stages[0].batch
         force = None if comm_mechanism == "auto" else comm_mechanism
-        self.channels = [EdgeChannel(self.comm_model, force=force)
-                         for _ in range(len(self.stages) - 1)]
+        self.channels = _EdgeChannels(graph, self.comm_model, force)
         self._pending_alloc: Optional[Allocation] = None
         self._alloc_lock = threading.Lock()
         self._core: Optional[ExecCore] = None
@@ -209,7 +242,7 @@ class PipelineEngine:
         stats = ServeStats(qos=QoSTracker(self.qos_target))
         for st in self.stages:
             st.warmup(self.batch_size)
-        core = ExecCore(len(self.stages), self.alloc.placement,
+        core = ExecCore(self.graph, self.alloc.placement,
                         BatchingPolicy(self.batch_size, self.batch_timeout),
                         comm=self.comm_model)
         self._core = core
@@ -278,6 +311,20 @@ class PipelineEngine:
             out, err = None, e
         completions.put((inst, rb, out, time.perf_counter() - t0, err))
 
+    def _fanin_data(self, node: int, inputs: Dict[int, jax.Array]) -> jax.Array:
+        """Consumer input from the joined predecessor outputs: the branch
+        token ids are summed in predecessor-id order (commutative, so the
+        result is independent of branch completion order) and consumed as a
+        token prefix — for a single predecessor this is the chain contract
+        unchanged."""
+        nxt = self.stages[node]
+        arrs = [inputs[p] for p in sorted(inputs)]
+        handed = arrs[0]
+        for a in arrs[1:]:
+            handed = handed + a
+        return jnp.tile(handed[:, None] % nxt.cfg.vocab_size,
+                        (1, nxt.seq_len))
+
     def _complete(self, ev, core: ExecCore, stats: ServeStats,
                   start: float) -> None:
         inst, rb, out, dt, err = ev
@@ -285,19 +332,24 @@ class PipelineEngine:
         if err is not None:
             raise err
         stats.compute_time += dt
-        si = rb.stage
+        u = rb.stage
         now = time.perf_counter() - start
-        if si + 1 < len(self.stages):
-            same = inst.device in core.consumer_devices(si + 1)
-            t0 = time.perf_counter()
-            handed = self.channels[si].send(out, same_device=same)
-            stats.comm_time += time.perf_counter() - t0
-            # next stage consumes previous outputs as a token prefix
-            nxt = self.stages[si + 1]
-            x = jnp.tile(handed[:, None] % nxt.cfg.vocab_size,
-                         (1, nxt.seq_len))
-            core.push_ready(si + 1, rb.items, now, data=x)
-        else:
+        succs = core.succs[u]
+        if succs:
+            # fan-out: one payload per out-edge, each routed by its own
+            # channel; fan-in consumers become ready once the core's join
+            # barrier has every branch
+            for v in succs:
+                same = inst.device in core.consumer_devices(v)
+                t0 = time.perf_counter()
+                handed = self.channels[(u, v)].send(out, same_device=same)
+                stats.comm_time += time.perf_counter() - t0
+                joined = core.deliver(u, v, rb.bid, rb.items, now,
+                                      data=handed)
+                if joined is not None:
+                    joined.data = self._fanin_data(v, joined.inputs)
+        elif core.complete_exit(rb.bid, u):
+            # every exit node has produced this batch: queries complete
             for q in rb.items:
                 q.done = now
                 stats.qos.record(now - q.arrival)

@@ -1,7 +1,12 @@
 """Policies under test: Camelot + the paper's comparison points.
 
-Each policy returns (Allocation incl. placement, CommModel) for a pipeline on
-``n_devices`` devices:
+Each policy returns (Allocation incl. placement, CommModel) for a service
+graph on ``n_devices`` devices.  All of them size and place *per node*, so
+chains and DAGs are charged through the identical code: the baselines see
+``graph.n_stages`` nodes and the simulator/engine applies the topology
+(fan-out transfers, fan-in joins, multi-exit completion) on top of their
+allocations.  Camelot itself is graph-aware through ``CamelotAllocator``
+(critical-path Constraint-5, per-edge comm).
 
   * ``even_allocation`` (EA) — splits every device evenly between the stages;
     no pipeline awareness, host-staged communication.
@@ -23,15 +28,16 @@ import numpy as np
 from repro.core.allocator import CamelotAllocator, SAConfig
 from repro.core.comm import CommModel
 from repro.core.predictor import PipelinePredictor
-from repro.core.types import (Allocation, DeviceSpec, Pipeline, Placement,
-                              StageAlloc)
+from repro.core.types import (Allocation, DeviceSpec, Placement,
+                              ServiceGraph, StageAlloc)
 
 
 def _placed(stages, per_stage) -> Allocation:
     return Allocation(stages=stages, placement=Placement(per_stage=per_stage))
 
 
-def even_allocation(pipeline: Pipeline, device: DeviceSpec, n_devices: int,
+def even_allocation(pipeline: ServiceGraph, device: DeviceSpec,
+                    n_devices: int,
                     batch: int) -> Tuple[Allocation, CommModel]:
     n = pipeline.n_stages
     quota = round(1.0 / n, 4)
@@ -42,7 +48,7 @@ def even_allocation(pipeline: Pipeline, device: DeviceSpec, n_devices: int,
                                                  global_memory_enabled=False)
 
 
-def standalone(pipeline: Pipeline, device: DeviceSpec, n_devices: int,
+def standalone(pipeline: ServiceGraph, device: DeviceSpec, n_devices: int,
                batch: int) -> Tuple[Allocation, CommModel]:
     n = pipeline.n_stages
     assert n_devices >= n, "standalone needs one device per stage"
@@ -52,7 +58,7 @@ def standalone(pipeline: Pipeline, device: DeviceSpec, n_devices: int,
                                                  global_memory_enabled=False)
 
 
-def laius(pipeline: Pipeline, predictor: PipelinePredictor,
+def laius(pipeline: ServiceGraph, predictor: PipelinePredictor,
           device: DeviceSpec, n_devices: int, batch: int,
           ) -> Tuple[Allocation, CommModel]:
     """Per-device throughput balancing from offline solo profiles."""
@@ -78,7 +84,7 @@ def laius(pipeline: Pipeline, predictor: PipelinePredictor,
                                                  global_memory_enabled=False)
 
 
-def camelot(pipeline: Pipeline, predictor: PipelinePredictor,
+def camelot(pipeline: ServiceGraph, predictor: PipelinePredictor,
             device: DeviceSpec, n_devices: int, batch: int,
             sa: Optional[SAConfig] = None,
             bandwidth_constraint: bool = True,
@@ -92,14 +98,14 @@ def camelot(pipeline: Pipeline, predictor: PipelinePredictor,
     return res.allocation, comm, res
 
 
-def camelot_nc(pipeline: Pipeline, predictor: PipelinePredictor,
+def camelot_nc(pipeline: ServiceGraph, predictor: PipelinePredictor,
                device: DeviceSpec, n_devices: int, batch: int,
                sa: Optional[SAConfig] = None):
     return camelot(pipeline, predictor, device, n_devices, batch, sa=sa,
                    bandwidth_constraint=False)
 
 
-def camelot_min_resource(pipeline: Pipeline, predictor: PipelinePredictor,
+def camelot_min_resource(pipeline: ServiceGraph, predictor: PipelinePredictor,
                          device: DeviceSpec, n_devices: int, batch: int,
                          load: float, sa: Optional[SAConfig] = None,
                          bandwidth_constraint: bool = True):

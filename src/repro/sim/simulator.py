@@ -1,4 +1,4 @@
-"""Discrete-event datacenter simulator for GPU-microservice pipelines.
+"""Discrete-event datacenter simulator for GPU-microservice service graphs.
 
 The simulator is the *physics*: ground-truth durations from
 MicroserviceProfile curves, runtime global-memory-bandwidth contention on
@@ -8,15 +8,20 @@ communication mechanism.  Policies under test only choose the allocation +
 placement + mechanism; the simulator charges them the consequences.
 
 Since the unified-execution refactor, every *scheduling* decision —
-stage-0 dynamic batching, per-stage ready queues, free-instance dispatch
-against the ``Placement``, and per-edge mechanism selection via
-``CommModel.crossover_bytes()`` — lives in ``repro.core.exec.ExecCore``,
-the same code path the live serving engine runs.  This file only advances
-virtual time and charges durations/transfer costs.
+entry-node dynamic batching, per-node ready queues, free-instance dispatch
+against the ``Placement``, per-edge mechanism selection via
+``CommModel.crossover_bytes()``, and the DAG fan-in/exit join barriers —
+lives in ``repro.core.exec.ExecCore``, the same code path the live serving
+engine runs.  This file only advances virtual time and charges
+durations/transfer costs.
 
-Event flow per batch: [arrive & batch at stage-0 queue] -> for each stage:
-wait for a free instance -> compute (duration × contention factor) ->
-transfer to next stage (mechanism-dependent) -> ... -> complete.
+Topology is a ``ServiceGraph`` (the paper's linear ``Pipeline`` is the
+chain special case and simulates bit-for-bit as before).  Event flow per
+batch: [arrive & batch at the entry queues] -> per node: wait for a free
+instance -> compute (duration × contention factor) -> transfer to each
+successor (mechanism-dependent, one event per out-edge) -> fan-in join at
+nodes with several predecessors -> ... -> complete once every exit node
+has produced the batch.
 """
 from __future__ import annotations
 
@@ -28,10 +33,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.comm import HOST_STAGED, CommModel, mechanism_time
-from repro.core.exec import BatchingPolicy, ExecCore, edge_bytes
+from repro.core.exec import BatchingPolicy, ExecCore
 from repro.core.qos import QoSTracker
-from repro.core.types import (Allocation, DeviceSpec, MicroserviceProfile,
-                              Pipeline, Placement)
+from repro.core.types import Allocation, DeviceSpec, ServiceGraph
 
 
 @dataclass
@@ -61,7 +65,7 @@ class SimResult:
 
 
 class PipelineSimulator:
-    def __init__(self, pipeline: Pipeline, allocation: Allocation,
+    def __init__(self, pipeline: ServiceGraph, allocation: Allocation,
                  device: DeviceSpec, comm: CommModel,
                  sim: Optional[SimConfig] = None):
         assert allocation.placement is not None, "allocation must be placed"
@@ -76,17 +80,15 @@ class PipelineSimulator:
     def run(self, offered_qps: float) -> SimResult:
         cfg = self.cfg
         rng = np.random.default_rng(cfg.seed)
-        pipe = self.pipeline
-        n_stages = pipe.n_stages
-        qos = QoSTracker(pipe.qos_target)
+        graph = self.pipeline
+        qos = QoSTracker(graph.qos_target)
 
         batch_size = self.alloc.stages[0].batch
         core = ExecCore(
-            n_stages, self.alloc.placement,
+            graph, self.alloc.placement,
             BatchingPolicy(batch_size,
-                           cfg.batch_timeout_frac * pipe.qos_target),
-            comm=self.comm,
-            edge_nbytes=lambda e, c: edge_bytes(pipe.stages[e], c))
+                           cfg.batch_timeout_frac * graph.qos_target),
+            comm=self.comm)
         device_busy: Dict[int, float] = {}
         host_streams: Dict[int, int] = {}
 
@@ -114,7 +116,7 @@ class PipelineSimulator:
 
         # ---- physics: charge a dispatched batch its compute time ------
         def start_compute(inst, rb, now):
-            prof = pipe.stages[inst.stage]
+            prof = graph.nodes[inst.stage]
             b = len(rb.items)
             base = prof.duration(b, inst.quota, self.device)
             inst.bandwidth = prof.bandwidth(b, inst.quota, self.device)
@@ -132,7 +134,8 @@ class PipelineSimulator:
 
         def flush(now):
             core.form_batches(now)
-            dispatch(0, now)
+            for node in core.entries:
+                dispatch(node, now)
 
         # ---- main loop -------------------------------------------------
         completed = 0
@@ -153,33 +156,43 @@ class PipelineSimulator:
             elif kind == "compute_done":
                 inst, rb, dur = payload
                 core.release(inst, busy_for=dur)
-                si = rb.stage
-                if si + 1 < n_stages:
-                    # per-edge mechanism selection is the core's call;
-                    # the simulator only charges the modelled cost
-                    route = core.route(si, len(rb.items), inst.device)
-                    used_host = route.mechanism == HOST_STAGED
-                    if used_host:
-                        host_streams[inst.device] = \
-                            host_streams.get(inst.device, 0) + 1
-                    t = mechanism_time(
-                        self.comm, route.mechanism, route.nbytes,
-                        concurrent=max(host_streams.get(inst.device, 0), 1))
-                    push(now + t, "transfer_done",
-                         (si + 1, rb.items, used_host, inst.device))
-                else:
+                u = rb.stage
+                succs = core.succs[u]
+                if succs:
+                    # per-edge mechanism selection is the core's call; the
+                    # simulator only charges the modelled cost — one
+                    # transfer event per out-edge (fan-out)
+                    for v in succs:
+                        route = core.route(u, len(rb.items), inst.device,
+                                           dst=v)
+                        used_host = route.mechanism == HOST_STAGED
+                        if used_host:
+                            host_streams[inst.device] = \
+                                host_streams.get(inst.device, 0) + 1
+                        t = mechanism_time(
+                            self.comm, route.mechanism, route.nbytes,
+                            concurrent=max(host_streams.get(inst.device, 0),
+                                           1))
+                        push(now + t, "transfer_done",
+                             (u, v, rb.bid, rb.items, used_host,
+                              inst.device))
+                elif core.complete_exit(rb.bid, u):
+                    # every exit node has produced this batch: the queries
+                    # are end-to-end complete
                     for at in rb.items:
                         if at >= cfg.warmup:
                             qos.record(now - at)
                         completed += 1
-                dispatch(si, now)
+                dispatch(u, now)
             elif kind == "transfer_done":
-                nxt, items, used_host, from_dev = payload
+                src, dst, bid, items, used_host, from_dev = payload
                 if used_host:
                     host_streams[from_dev] = max(
                         0, host_streams.get(from_dev, 0) - 1)
-                core.push_ready(nxt, items, now)
-                dispatch(nxt, now)
+                # fan-in join barrier: the batch only becomes ready at
+                # ``dst`` once every predecessor branch has delivered
+                if core.deliver(src, dst, bid, items, now) is not None:
+                    dispatch(dst, now)
 
         horizon = max(cfg.duration - cfg.warmup, 1e-9)
         return SimResult(

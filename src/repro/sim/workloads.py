@@ -1,11 +1,18 @@
 """Camelot suite (paper §III): the four real 2-stage pipelines plus the
-parametric artifact benchmark (compute-/memory-/PCIe-intensive stages).
+parametric artifact benchmark (compute-/memory-/PCIe-intensive stages) and
+DAG-topology services beyond the paper's chain shape.
 
 Real-system profiles are derived from the model zoo: per-query FLOPs come
 from the architecture's analytic parameter counts (2·N_active per token ×
 tokens per query), memory traffic from weight + activation reads, PCIe
 traffic from the query payload.  Constants are sized so solo durations land
 in the paper's regime (tens of ms per stage on a 2080Ti at mid batch).
+
+``dag_suite`` adds non-chain call graphs (§"beyond the paper"): a diamond
+ensemble (one extractor fanning out to two branches joined by a fusion
+node) and a shared-backbone fan-out (one backbone feeding several task
+heads, each an exit node).  They exercise the fan-in join barrier, the
+multi-exit completion rule, and the critical-path Constraint-5.
 """
 from __future__ import annotations
 
@@ -13,7 +20,7 @@ from typing import Dict, List, Sequence
 
 from repro.configs import active_param_count, get_config
 from repro.core.types import (RTX_2080TI, DeviceSpec, MicroserviceProfile,
-                              Pipeline)
+                              Pipeline, ServiceEdge, ServiceGraph)
 
 
 def _model_stage(name: str, arch: str, tokens_per_query: int,
@@ -78,6 +85,73 @@ def camelot_suite(device: DeviceSpec = RTX_2080TI) -> Dict[str, Pipeline]:
             _model_stage("text-translation", "whisper-medium", 64,
                          txt_payload, weights_scale=0.3, serial_frac=0.10),
         ], qos_target=0.25),
+    }
+
+
+# --------------------------------------------------------------------------
+# DAG services (beyond the paper's chains)
+# --------------------------------------------------------------------------
+
+def diamond_service(device: DeviceSpec = RTX_2080TI,
+                    qos_target: float = 0.30) -> ServiceGraph:
+    """Ensemble diamond: extract -> {caption, classify} -> fuse.
+
+    One feature extractor fans its embedding out to two independent
+    branches; a light fusion node joins them (the fan-in barrier releases a
+    batch only when both branch outputs arrived).  Edge payloads: the fat
+    feature vector goes to both branches, each branch returns a small
+    result to the fusion node."""
+    feat_payload = 4096 * 4.0
+    result_payload = 256 * 4.0
+    nodes = [
+        _model_stage("extract", "qwen1.5-0.5b", 96, 3 * 224 * 224 * 4.0,
+                     weights_scale=0.4, serial_frac=0.05),
+        _model_stage("caption", "xlstm-1.3b", 24, feat_payload,
+                     weights_scale=0.10, serial_frac=0.18),
+        _model_stage("classify", "qwen3-0.6b", 16, feat_payload,
+                     weights_scale=0.15, serial_frac=0.08),
+        _model_stage("fuse", "qwen1.5-0.5b", 8, result_payload,
+                     weights_scale=0.05, serial_frac=0.10, overhead=1e-3),
+    ]
+    edges = [
+        ServiceEdge(0, 1, payload_bytes_per_query=feat_payload),
+        ServiceEdge(0, 2, payload_bytes_per_query=feat_payload),
+        ServiceEdge(1, 3, payload_bytes_per_query=result_payload),
+        ServiceEdge(2, 3, payload_bytes_per_query=result_payload),
+    ]
+    return ServiceGraph("diamond", nodes, edges, qos_target=qos_target)
+
+
+def shared_backbone_service(n_heads: int = 3,
+                            device: DeviceSpec = RTX_2080TI,
+                            qos_target: float = 0.30) -> ServiceGraph:
+    """Shared feature backbone fanning out to ``n_heads`` task heads.
+
+    Every head is an exit node: a query completes only once ALL heads have
+    produced their output (the multi-exit completion rule), so the service
+    latency is the backbone plus the slowest head."""
+    feat_payload = 4096 * 4.0
+    nodes = [_model_stage("backbone", "qwen1.5-0.5b", 96,
+                          3 * 224 * 224 * 4.0, weights_scale=0.4,
+                          serial_frac=0.05)]
+    edges = []
+    head_archs = ["qwen3-0.6b", "xlstm-1.3b", "qwen1.5-0.5b"]
+    for h in range(n_heads):
+        nodes.append(_model_stage(
+            f"head-{h}", head_archs[h % len(head_archs)], 16 + 8 * h,
+            feat_payload, weights_scale=0.08, serial_frac=0.10))
+        edges.append(ServiceEdge(0, 1 + h,
+                                 payload_bytes_per_query=feat_payload))
+    return ServiceGraph(f"backbone-{n_heads}h", nodes, edges,
+                        qos_target=qos_target)
+
+
+def dag_suite(device: DeviceSpec = RTX_2080TI) -> Dict[str, ServiceGraph]:
+    """Non-chain services charged through the same allocator → packer →
+    simulator/engine path as the paper's pipelines."""
+    return {
+        "diamond": diamond_service(device),
+        "backbone-3h": shared_backbone_service(3, device),
     }
 
 

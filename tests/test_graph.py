@@ -1,0 +1,345 @@
+"""ServiceGraph semantics across the stack: topology validation, fan-in
+join barriers under out-of-order branch completion, multi-exit completion,
+critical-path Constraint-5 vs simulator-measured latency, chain
+equivalence with the pre-DAG linear engine/simulator, and a diamond
+end-to-end through allocator -> packer -> simulator AND live engine."""
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import (RTX_2080TI, BatchingPolicy, CamelotAllocator,
+                        CommModel, ExecCore, PipelinePredictor, SAConfig,
+                        ServiceEdge, ServiceGraph, edge_bytes)
+from repro.core.types import (Allocation, MicroserviceProfile, Pipeline,
+                              Placement, StageAlloc)
+from repro.serving import PipelineEngine, Query
+from repro.sim import PipelineSimulator, SimConfig, dag_suite, even_allocation
+from repro.sim.workloads import artifact_pipelines, camelot_suite
+
+
+def _prof(name, flops=10e9, host=1e6):
+    return MicroserviceProfile(
+        name=name, flops_per_query=flops, mem_bytes_per_query=40e6,
+        host_bytes_per_query=host, weights_bytes=500e6,
+        act_bytes_per_query=24e6, overhead=1e-3, serial_frac=0.05)
+
+
+def _diamond(qos=0.5):
+    nodes = [_prof("extract"), _prof("caption", flops=20e9),
+             _prof("classify", flops=5e9), _prof("fuse", flops=2e9)]
+    edges = [ServiceEdge(0, 1), ServiceEdge(0, 2),
+             ServiceEdge(1, 3), ServiceEdge(2, 3)]
+    return ServiceGraph("diamond", nodes, edges, qos_target=qos)
+
+
+# --------------------------------------------------------------------------
+# topology
+# --------------------------------------------------------------------------
+
+def test_chain_is_special_case():
+    stages = [_prof("a"), _prof("b"), _prof("c")]
+    g = ServiceGraph.chain("svc", stages, qos_target=0.3)
+    assert g.is_chain and g.entries == [0] and g.exits == [2]
+    assert g.topo_order == [0, 1, 2]
+    # Pipeline IS a chain ServiceGraph: old callers get graph semantics
+    p = Pipeline("svc", stages, qos_target=0.3)
+    assert isinstance(p, ServiceGraph) and p.is_chain
+    assert p.n_stages == 3 and p.stages is p.nodes
+    assert [(e.src, e.dst) for e in p.edges] == [(0, 1), (1, 2)]
+    assert not _diamond().is_chain
+
+
+def test_graph_validation():
+    with pytest.raises(AssertionError):          # cycle
+        ServiceGraph("cyc", [_prof("a"), _prof("b")],
+                     [ServiceEdge(0, 1), ServiceEdge(1, 0)])
+    with pytest.raises(AssertionError):          # dangling index
+        ServiceGraph("bad", [_prof("a")], [ServiceEdge(0, 3)])
+    with pytest.raises(AssertionError):          # duplicate edge
+        ServiceGraph("dup", [_prof("a"), _prof("b")],
+                     [ServiceEdge(0, 1), ServiceEdge(0, 1)])
+
+
+def test_critical_path_picks_longest_branch():
+    g = _diamond()
+    cp = g.critical_path(node_cost=lambda i: [1.0, 5.0, 2.0, 1.0][i])
+    assert cp == pytest.approx(1.0 + 5.0 + 1.0)  # through the slow branch
+    cp_e = g.critical_path(node_cost=lambda i: 1.0,
+                           edge_cost=lambda e: 10.0 if e.dst == 2 else 0.1)
+    assert cp_e == pytest.approx(1.0 + 10.0 + 1.0 + 0.1 + 1.0)
+    # chain reduces to the plain sum
+    ch = ServiceGraph.chain("c", [_prof("a"), _prof("b")])
+    assert ch.critical_path(lambda i: 2.0, lambda e: 0.5) == \
+        pytest.approx(4.5)
+
+
+def test_edge_bytes_explicit_fallback():
+    # profiles that model host traffic: half in+out per query
+    assert edge_bytes(_prof("x", host=4e6), 3) == pytest.approx(6e6)
+    # no host traffic modelled: explicit 1 MB/query floor
+    assert edge_bytes(_prof("x", host=0.0), 3) == pytest.approx(3e6)
+    g = _diamond()
+    assert g.edge_nbytes(0, 1, 2) == pytest.approx(1e6)  # half of 1 MB x2
+    g2 = ServiceGraph("o", g.nodes, [ServiceEdge(0, 1, 7e3)] +
+                      [e for e in g.edges if (e.src, e.dst) != (0, 1)])
+    assert g2.edge_nbytes(0, 1, 2) == pytest.approx(14e3)  # override
+
+
+# --------------------------------------------------------------------------
+# fan-in join barrier (core level)
+# --------------------------------------------------------------------------
+
+def _graph_core(g, batch=2, timeout=0.0):
+    n = g.n_nodes
+    placement = Placement(per_stage=[[(0, round(1.0 / n, 4))]
+                                     for _ in range(n)])
+    return ExecCore(g, placement, BatchingPolicy(batch, timeout))
+
+
+def test_fanin_join_out_of_order():
+    core = _graph_core(_diamond())
+    core.admit("q0", 0.0)
+    core.admit("q1", 0.0)
+    [rb] = core.form_batches(0.0)
+    assert rb.stage == 0 and rb.bid == 0
+    # the LATER branch (classify, node 2) finishes FIRST
+    assert core.deliver(2, 3, rb.bid, rb.items, 1.0, data="from-2") is None
+    assert core.has_work()                       # join holds the batch
+    assert len(core.ready[3]) == 0
+    joined = core.deliver(1, 3, rb.bid, rb.items, 2.0, data="from-1")
+    assert joined is not None and joined.stage == 3
+    assert joined.items == ["q0", "q1"]          # per-query order preserved
+    assert joined.inputs == {1: "from-1", 2: "from-2"}
+    assert len(core.ready[3]) == 1
+    # a second batch joins independently of the first
+    core.admit("q2", 0.0)
+    core.admit("q3", 0.0)
+    [rb2] = core.form_batches(0.0)
+    assert rb2.bid == 1
+    assert core.deliver(1, 3, rb2.bid, rb2.items, 3.0) is None
+    assert core.deliver(2, 3, rb2.bid, rb2.items, 3.5) is not None
+
+
+def test_fanin_rejects_duplicate_branch_delivery():
+    core = _graph_core(_diamond())
+    core.admit("q", 0.0)
+    core.admit("q2", 0.0)
+    [rb] = core.form_batches(0.0)
+    core.deliver(1, 3, rb.bid, rb.items, 1.0)
+    with pytest.raises(AssertionError):
+        core.deliver(1, 3, rb.bid, rb.items, 1.1)
+
+
+def test_multi_exit_completion():
+    g = ServiceGraph("fan", [_prof("root"), _prof("h0"), _prof("h1")],
+                     [ServiceEdge(0, 1), ServiceEdge(0, 2)])
+    core = _graph_core(g)
+    core.admit("a", 0.0)
+    core.admit("b", 0.0)
+    [rb] = core.form_batches(0.0)
+    assert not core.complete_exit(rb.bid, 1)     # one head done: not yet
+    assert core.complete_exit(rb.bid, 2)         # both heads: complete
+    # chains complete at their single exit immediately
+    cc = ExecCore(2, Placement(per_stage=[[(0, 0.5)], [(0, 0.5)]]),
+                  BatchingPolicy(1, 0.0))
+    cc.admit("x", 0.0)
+    [crb] = cc.form_batches(0.0)
+    assert cc.complete_exit(crb.bid, 1)
+
+
+def test_route_on_placeholder_node_graph():
+    """Engine-shaped graphs carry None profiles (the models live in the
+    stage servers): the core must price their edges at the 1 MB/query
+    default instead of dereferencing the missing profile."""
+    g = ServiceGraph.chain("engine", [None, None], qos_target=2.0)
+    core = ExecCore(g, Placement(per_stage=[[(0, 0.5)], [(0, 0.5)]]),
+                    BatchingPolicy(2, 0.0), comm=CommModel(RTX_2080TI))
+    r = core.route(0, 4, from_device=0)
+    assert r.nbytes == pytest.approx(4e6)
+    assert g.edge_nbytes(0, 1, 4) == pytest.approx(4e6)
+
+
+def test_route_requires_dst_on_fanout():
+    core = _graph_core(_diamond())
+    r = core.route(0, 4, from_device=0, dst=1)
+    assert (r.src, r.dst) == (0, 1) and r.same_device
+    with pytest.raises(AssertionError):          # ambiguous successor
+        core.route(0, 4, from_device=0)
+    # single-successor nodes keep the chain-era call form
+    r2 = core.route(1, 4, from_device=0)
+    assert (r2.src, r2.dst) == (1, 3)
+
+
+# --------------------------------------------------------------------------
+# chain equivalence: the DAG core must reproduce PR 1's linear results
+# --------------------------------------------------------------------------
+
+# exact values measured on the pre-DAG (PR 1) simulator at these configs
+_PR1_SNAPSHOT = {
+    "img-to-img": (0.08064410520203903, 0.05453416021788585, 215, 36.0),
+    "p2+c2+m2": (0.11991235245279838, 0.08107560788407363, 317, 52.6),
+}
+
+
+@pytest.mark.parametrize("name,qps", [("img-to-img", 40.0),
+                                      ("p2+c2+m2", 60.0)])
+def test_chain_simulation_bit_for_bit(name, qps):
+    pipe = (camelot_suite() | artifact_pipelines())[name]
+    for topo in (pipe, ServiceGraph.chain(pipe.name, pipe.nodes,
+                                          qos_target=pipe.qos_target)):
+        alloc, comm = even_allocation(topo, RTX_2080TI, 2, batch=8)
+        r = PipelineSimulator(topo, alloc, RTX_2080TI, comm,
+                              sim=SimConfig(duration=6.0, warmup=1.0,
+                                            seed=0)).run(qps)
+        assert (r.p99, r.mean_latency, r.completed, r.achieved_qps) == \
+            _PR1_SNAPSHOT[name]
+
+
+# --------------------------------------------------------------------------
+# allocator: critical-path Constraint-5 vs simulated latency on a diamond
+# --------------------------------------------------------------------------
+
+def test_eval_critical_path_matches_simulator_on_diamond():
+    g = _diamond(qos=1.0)
+    # noise-free predictor on the sample grid -> DT reproduces ground truth
+    pred = PipelinePredictor.from_graph(g, RTX_2080TI, noise=0.0)
+    comm = CommModel(RTX_2080TI)
+    alloc = CamelotAllocator(g, pred, RTX_2080TI, n_devices=1, comm=comm)
+    ns = np.ones(4, dtype=np.int64)
+    ps = np.full(4, 0.25)
+    batch = 1
+    ev = alloc._eval(ns, ps, batch, n_devices=1)
+    assert ev is not None
+    _, _, predicted_latency = ev
+    # the critical path must run through the slow branch, not sum both
+    durs = [pred.stages[i].duration(batch, 0.25) for i in range(4)]
+    assert predicted_latency < sum(durs)
+    assert predicted_latency > durs[0] + max(durs[1], durs[2]) + durs[3]
+
+    stages = [StageAlloc(1, 0.25, batch) for _ in range(4)]
+    placement = Placement(per_stage=[[(0, 0.25)] for _ in range(4)])
+    a = Allocation(stages=stages, placement=placement)
+    sim = PipelineSimulator(g, a, RTX_2080TI, comm,
+                            sim=SimConfig(duration=8.0, warmup=1.0, seed=0,
+                                          contention_noise=0.0))
+    r = sim.run(3.0)                 # low load: no queueing, batch=1
+    assert r.qos.count() > 10
+    assert r.mean_latency == pytest.approx(predicted_latency, rel=0.15)
+
+
+def test_allocator_end_to_end_on_dag_suite():
+    for name, g in dag_suite().items():
+        pred = PipelinePredictor.from_graph(g, RTX_2080TI,
+                                            batches=(1, 4, 8, 16))
+        comm = CommModel(RTX_2080TI)
+        res = CamelotAllocator(g, pred, RTX_2080TI, 4, comm=comm,
+                               sa=SAConfig(iterations=300)
+                               ).solve_max_load(batch=8)
+        assert res.feasible, name
+        assert res.allocation.placement is not None
+        assert len(res.allocation.placement.per_stage) == g.n_nodes
+        r = PipelineSimulator(g, res.allocation, RTX_2080TI, comm,
+                              sim=SimConfig(duration=4.0, warmup=0.5)
+                              ).run(min(res.objective * 0.4, 40.0))
+        assert r.completed > 0, name
+        assert r.p99 <= g.qos_target * 2, (name, r.p99)
+
+
+# --------------------------------------------------------------------------
+# live engine on DAGs
+# --------------------------------------------------------------------------
+
+class RecordingStage:
+    """Deterministic GIL-releasing stage; records the token prefixes it was
+    fed so joins can be asserted on real data flow."""
+
+    def __init__(self, service_time=0.01, out_val=1, seq_len=8, vocab=64):
+        self.service_time = service_time
+        self.out_val = out_val
+        self.seq_len = seq_len
+        self.cfg = types.SimpleNamespace(vocab_size=vocab)
+        self.calls = 0
+        self.seen = []
+
+    def warmup(self, batch):
+        pass
+
+    def process(self, tokens):
+        time.sleep(self.service_time)
+        self.calls += 1
+        self.seen.append(np.asarray(tokens)[:, 0].copy())
+        return np.full((tokens.shape[0],), self.out_val, np.int32)
+
+
+def _diamond_engine(branch_times=(0.05, 0.01), batch=2):
+    g = ServiceGraph("diamond", [None] * 4,
+                     [ServiceEdge(0, 1), ServiceEdge(0, 2),
+                      ServiceEdge(1, 3), ServiceEdge(2, 3)], qos_target=5.0)
+    stages = [RecordingStage(0.01, out_val=1),
+              RecordingStage(branch_times[0], out_val=3),
+              RecordingStage(branch_times[1], out_val=5),
+              RecordingStage(0.01, out_val=7)]
+    alloc = Allocation(stages=[StageAlloc(1, 0.25, batch) for _ in range(4)],
+                       placement=Placement(
+                           per_stage=[[(0, 0.25)] for _ in range(4)]))
+    eng = PipelineEngine(stages, allocation=alloc, qos_target=5.0,
+                         batch_timeout=0.01, graph=g)
+    return eng, stages
+
+
+def _burst(n):
+    return [Query(qid=i, arrival=0.0, tokens=np.zeros(8, np.int32))
+            for i in range(n)]
+
+
+def test_engine_diamond_join_under_slow_branch():
+    """Branch 1 is 5x slower than branch 2: the fuse node must still see
+    BOTH branch outputs (sum 3+5=8) for every batch, in entry order."""
+    eng, stages = _diamond_engine(branch_times=(0.05, 0.01))
+    queries = _burst(6)
+    stats = eng.run_trace(queries)
+    assert stats.qos.count() == 6
+    assert stats.batches == 3
+    assert [s.calls for s in stages] == [3, 3, 3, 3]
+    for prefix in stages[3].seen:                # fuse inputs: 3 + 5 = 8
+        assert (prefix == 8).all()
+    assert all(q.done is not None for q in queries)
+    # per-query ordering: completion order of qids follows entry batches
+    done_order = [q.qid for q in sorted(queries, key=lambda q: q.done)]
+    assert done_order == sorted(done_order)
+
+
+def test_engine_multi_exit_completes_once_all_heads_done():
+    g = ServiceGraph("fan", [None] * 3,
+                     [ServiceEdge(0, 1), ServiceEdge(0, 2)], qos_target=5.0)
+    stages = [RecordingStage(0.01, out_val=1),
+              RecordingStage(0.04, out_val=2),
+              RecordingStage(0.01, out_val=4)]
+    alloc = Allocation(stages=[StageAlloc(1, 0.3, 2) for _ in range(3)],
+                       placement=Placement(
+                           per_stage=[[(0, 0.3)] for _ in range(3)]))
+    eng = PipelineEngine(stages, allocation=alloc, qos_target=5.0,
+                         batch_timeout=0.01, graph=g)
+    stats = eng.run_trace(_burst(4))
+    assert stats.qos.count() == 4                # recorded once, not twice
+    assert stats.batches == 2
+    assert stages[1].calls == 2 and stages[2].calls == 2
+
+
+def test_engine_chain_default_unchanged():
+    """graph=None still builds the linear chain: same completions and the
+    same number of stage calls as an explicit chain graph."""
+    def run(graph):
+        stages = [RecordingStage(0.01, out_val=2),
+                  RecordingStage(0.01, out_val=3)]
+        eng = PipelineEngine(stages, qos_target=5.0, batch_size=2,
+                             batch_timeout=0.01, graph=graph)
+        stats = eng.run_trace(_burst(4))
+        return stats.qos.count(), [s.calls for s in stages], \
+            [s.seen[0][0] for s in stages]
+
+    implicit = run(None)
+    explicit = run(ServiceGraph.chain("c", [None, None], qos_target=5.0))
+    assert implicit == explicit == (4, [2, 2], [0, 2])

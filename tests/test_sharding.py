@@ -20,6 +20,7 @@ from repro.models import abstract_cache, abstract_params
 def test_rules_cover_every_leaf(arch, mode, batch, seq):
     cfg = get_config(arch, reduced=True)
     mesh = make_host_mesh()          # 1 CPU device: (1, 1) mesh
+    axis_names = set(mesh.axis_names)
     rules = ShardingRules(cfg, mesh, mode, batch, seq)
     params = abstract_params(cfg)
     sh = rules.params_shardings(params)
@@ -29,12 +30,31 @@ def test_rules_cover_every_leaf(arch, mode, batch, seq):
     for leaf, s in zip(flat_p, flat_s):
         spec = s.spec
         assert len(spec) <= leaf.ndim, (leaf.shape, spec)
+        # structural validity: every named entry references a real mesh
+        # axis, no mesh axis is consumed twice by one spec, and a sharded
+        # dimension divides evenly by the PRODUCT of its axis sizes (the
+        # host mesh is (1,1), so the dividing coverage with real axis
+        # sizes lives in the 16-fake-device subprocess test below)
+        used = []
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            shard_n = 1
+            for ax in names:
+                assert ax in axis_names, (leaf.shape, spec, ax)
+                assert ax not in used, f"axis {ax} used twice in {spec}"
+                used.append(ax)
+                shard_n *= mesh.shape[ax]
+            assert leaf.shape[dim] % shard_n == 0, (leaf.shape, spec)
     if mode == "decode":
         cache = abstract_cache(cfg, batch, seq)
         csh = rules.cache_shardings(cache)
         assert len(jax.tree.leaves(cache)) == len(
             jax.tree.leaves(csh, is_leaf=lambda x: hasattr(x, "spec")))
-    rules.activation_rules()         # must build without error
+    acts = rules.activation_rules()  # must build without error
+    assert isinstance(acts, dict) and acts, "activation rules must be" \
+        " a non-empty mapping"
 
 
 def test_pure_dp_for_attention_free_train():
@@ -67,12 +87,18 @@ psh = rules.params_shardings(params)
 batch = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32),
          "labels": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
 bsh = rules.batch_shardings(batch)
+total_param_bytes = sum(l.size * l.dtype.itemsize
+                        for l in jax.tree.leaves(params))
 with mesh:
     lowered = jax.jit(lambda p, b: forward_train(p, b, cfg),
                       in_shardings=(psh, bsh)).lower(params, batch)
     compiled = lowered.compile()
 ma = compiled.memory_analysis()
-print(json.dumps({"ok": True, "temp": ma.temp_size_in_bytes}))
+print(json.dumps({"ok": True, "temp": ma.temp_size_in_bytes,
+                  "arg_bytes": ma.argument_size_in_bytes,
+                  "out_bytes": ma.output_size_in_bytes,
+                  "total_param_bytes": total_param_bytes,
+                  "n_devices": len(jax.devices())}))
 """
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
@@ -82,6 +108,14 @@ print(json.dumps({"ok": True, "temp": ma.temp_size_in_bytes}))
     assert out.returncode == 0, out.stderr[-2000:]
     rec = json.loads(out.stdout.strip().splitlines()[-1])
     assert rec["ok"]
+    assert rec["n_devices"] == 16, "XLA_FLAGS fake-device count not applied"
+    # the compile must report real per-device numbers, and sharding must
+    # leave each device with LESS than the full (replicated) parameter set
+    assert rec["temp"] >= 0
+    assert rec["out_bytes"] > 0
+    assert 0 < rec["arg_bytes"] < rec["total_param_bytes"], \
+        f"per-device arguments {rec['arg_bytes']} not sharded below " \
+        f"replicated {rec['total_param_bytes']}"
 
 
 @pytest.mark.slow
