@@ -13,6 +13,7 @@ sweep; default runs everything (matches the paper's evaluation section).
   overhead — SA/predict/comm-setup costs     (§VIII-G)
   diurnal — online load-tracking runtime     (beyond paper)
   dag    — DAG services: diamond + backbone  (beyond paper)
+  alloc  — policy hot path: scalar vs vectorized allocator, sim events/s
   roofline — dry-run roofline table          (deliverable g)
   kernel — model-kernel microbenchmarks
 """
@@ -20,7 +21,7 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_artifact, bench_comm, bench_dag,
+from benchmarks import (bench_alloc, bench_artifact, bench_comm, bench_dag,
                         bench_diurnal, bench_kernels, bench_min_resource,
                         bench_overhead, bench_pcie, bench_peak_load,
                         bench_predictor, bench_roofline, bench_scale)
@@ -37,6 +38,7 @@ MODULES = {
     "overhead": bench_overhead,
     "diurnal": bench_diurnal,
     "dag": bench_dag,
+    "alloc": bench_alloc,
     "roofline": bench_roofline,
     "kernel": bench_kernels,
 }

@@ -19,12 +19,13 @@ from repro.core.mlmodels import (DecisionTreeRegressor, LinearRegression,
                                  RandomForestRegressor,
                                  mean_absolute_percentage_error)
 from repro.core.predictor import (PipelinePredictor, StagePredictor,
-                                  collect_samples, profile_from_engine)
+                                  TabulatedStagePredictor, collect_samples,
+                                  profile_from_engine)
 from repro.core.qos import QoSTracker
 from repro.core.types import (RTX_2080TI, TPU_V5E_DEV, V100, Allocation,
-                              DeviceSpec, MicroserviceProfile, Pipeline,
-                              Placement, ServiceEdge, ServiceGraph,
-                              StageAlloc)
+                              CompiledTopology, DeviceSpec,
+                              MicroserviceProfile, Pipeline, Placement,
+                              ServiceEdge, ServiceGraph, StageAlloc)
 
 __all__ = [
     "CamelotAllocator", "SAConfig", "SolveResult", "CommModel",
@@ -34,8 +35,9 @@ __all__ = [
     "default_allocation", "edge_bytes", "pack_instances",
     "placement_summary", "DecisionTreeRegressor", "LinearRegression",
     "RandomForestRegressor", "mean_absolute_percentage_error",
-    "PipelinePredictor", "StagePredictor", "collect_samples",
-    "profile_from_engine", "QoSTracker", "RTX_2080TI", "TPU_V5E_DEV", "V100",
-    "Allocation", "DeviceSpec", "MicroserviceProfile", "Pipeline",
-    "Placement", "ServiceEdge", "ServiceGraph", "StageAlloc",
+    "PipelinePredictor", "StagePredictor", "TabulatedStagePredictor",
+    "collect_samples", "profile_from_engine", "QoSTracker", "RTX_2080TI",
+    "TPU_V5E_DEV", "V100", "Allocation", "CompiledTopology", "DeviceSpec",
+    "MicroserviceProfile", "Pipeline", "Placement", "ServiceEdge",
+    "ServiceGraph", "StageAlloc",
 ]

@@ -19,6 +19,24 @@ degenerate DAG): Eq. 1's objective is the min aggregate throughput over
 all *nodes*, and Constraint-5's end-to-end latency is the **critical
 path** — the longest entry→exit path of node durations plus per-edge
 transfer times (for a chain this reduces to the paper's plain sum).
+
+The policy hot path (``SAConfig.mode``)
+---------------------------------------
+Camelot is a *runtime* system: the allocator re-solves as load shifts, so
+solve_time is itself a serving-path cost.  The default ``"vectorized"``
+mode is population-based annealing: per temperature step it proposes a
+population of K candidate moves and evaluates ALL of them against
+Constraints 1–4 as batched array ops over per-solve lookup tables
+(duration/bandwidth/throughput over the ``QUOTA_STEP`` quota grid — exact
+on-grid, see the tabulation contract in ``predictor.py``), Constraint-5 as
+one batched numpy longest-path pass over the graph's ``CompiledTopology``,
+and per-device packability through a memoized quota-multiset FFD fast
+path; an exhaustive 6n-neighbourhood greedy polish then runs the incumbent
+to a local optimum.  ``"scalar"`` keeps the paper-faithful one-candidate-
+per-iteration loop (and is the benchmark baseline in
+``benchmarks/bench_alloc.py``); both modes search the identical constraint
+landscape, and the regression suite pins vectorized objectives at >= the
+scalar snapshots on every chain/DAG workload.
 """
 from __future__ import annotations
 
@@ -32,11 +50,15 @@ import numpy as np
 from repro.core.comm import CommModel
 from repro.core.deployment import pack_instances
 from repro.core.predictor import PipelinePredictor
-from repro.core.types import (Allocation, DeviceSpec, ServiceEdge,
-                              ServiceGraph, StageAlloc)
+from repro.core.types import (QUOTA_GRID, QUOTA_STEP, Allocation, DeviceSpec,
+                              ServiceEdge, ServiceGraph, StageAlloc)
 
-QUOTA_STEP = 0.05
-QUOTA_MIN = 0.05
+QUOTA_MIN = QUOTA_STEP
+
+# per-move instance/quota-index deltas for the vectorized move kernel
+# (moves 4/5 rescale the quota separately, see _apply_moves)
+_MOVE_DN = np.array([1, -1, 0, 0, 1, -1], np.int64)
+_MOVE_DQ = np.array([0, 0, 1, -1, 0, 0], np.int64)
 
 
 @dataclass
@@ -52,6 +74,25 @@ class SAConfig:
     # paper's Constraint-5 only sums stage durations — without this slack the
     # solver picks zero-headroom points that violate p99 under load
     qos_slack: float = 0.45
+    # "vectorized": population-based annealing over batched table lookups
+    # (the runtime hot path); "scalar": the paper-faithful per-candidate
+    # loop, kept as compatibility mode and benchmark baseline.
+    mode: str = "vectorized"
+    # candidates evaluated per vectorized step (one batched _eval_many)
+    population: int = 128
+    # independent annealing walkers sharing that candidate budget: each
+    # walker argmax-selects among population/walkers proposals and does its
+    # own Metropolis accept, so the population keeps exploring distinct
+    # basins instead of collapsing onto one incumbent
+    walkers: int = 16
+    # each candidate applies 1..max_mutations random moves (compound jumps:
+    # a population step can cross several single-move hops at once, so far
+    # fewer Python-level steps reach the same states as the scalar walk);
+    # steps = ceil(iterations * max_mutations / population) keeps the
+    # proposed-mutation budget aligned with the scalar iteration count
+    max_mutations: int = 4
+    # cap on greedy 6n-neighbourhood polish rounds after annealing
+    polish_rounds: int = 64
 
 
 def _ffd_fits(quotas: Sequence[float], n_devices: int) -> bool:
@@ -69,6 +110,52 @@ def _ffd_fits(quotas: Sequence[float], n_devices: int) -> bool:
     return True
 
 
+def _ffd_fits_units(counts: Sequence[int], n_devices: int) -> bool:
+    """``_ffd_fits`` on the integer quota lattice: ``counts[s]`` instances
+    of size ``(s+1)·QUOTA_STEP`` into bins of capacity ``len(counts)``
+    units.  Equal-size items placed item-by-item by FFD fill bin after bin
+    greedily, so batching whole size classes per bin gives the identical
+    verdict at a fraction of the per-instance loop (and exactly — no float
+    tolerance needed on the lattice).  Plain-int hot loop: callers pass a
+    Python list."""
+    units = len(counts)
+    bins = [units] * n_devices
+    for s in range(units - 1, -1, -1):
+        c = counts[s]
+        if not c:
+            continue
+        size = s + 1
+        for i in range(n_devices):
+            free = bins[i]
+            if free >= size:
+                take = free // size
+                if take > c:
+                    take = c
+                bins[i] = free - take * size
+                c -= take
+                if not c:
+                    break
+        if c:
+            return False
+    return True
+
+
+@dataclass
+class _PolicyTables:
+    """Per-solve lookup tables for the vectorized hot path: every metric
+    tabulated over the QUOTA_STEP quota grid per node, plus per-edge
+    transfer-time constants (they depend only on the batch)."""
+    grid: np.ndarray                    # (G,) quota grid
+    dur: np.ndarray                     # (n, G) durations
+    bw: np.ndarray                      # (n, G) bandwidth usage
+    thpt: np.ndarray                    # (n, G) per-instance throughput
+    foots: np.ndarray                   # (n,) memory footprints
+    edge_src: np.ndarray                # (E,) edge source nodes
+    edge_dst: np.ndarray                # (E,) edge destination nodes
+    edge_t_colo: np.ndarray             # (E,) transfer time if co-locatable
+    edge_t_host: np.ndarray             # (E,) transfer time via host
+
+
 @dataclass
 class SolveResult:
     allocation: Allocation
@@ -77,6 +164,10 @@ class SolveResult:
     solve_time: float
     iterations: int
     history: List[float] = field(default_factory=list)
+    # seconds of predictor model inference charged by this solve (the
+    # stages' accumulated ``predict_time`` delta) and the mode that ran
+    predictor_time: float = 0.0
+    mode: str = "scalar"
 
 
 class CamelotAllocator:
@@ -92,6 +183,26 @@ class CamelotAllocator:
         # per-instance default: a shared mutable SAConfig default would let
         # one allocator's tweaks (e.g. bandwidth_constraint) leak into all
         self.sa = sa if sa is not None else SAConfig()
+        # vectorized-mode caches: per-batch lookup tables and the FFD
+        # quota-multiset memo (packability depends only on the multiset of
+        # instance quotas and the device count, so SA revisits hit).  Both
+        # live for the allocator's lifetime — periodic re-solves
+        # (CamelotRuntime) reuse them for free; the memo is size-capped and
+        # ``invalidate_caches`` drops everything after a predictor re-fit.
+        self._tables_cache: dict = {}
+        self._ffd_memo: dict = {}
+
+    #: entries kept in the FFD memo before it is reset (a long-running
+    #: runtime re-solving for months must not grow without bound; one entry
+    #: is ~100 B, so the cap is ~50 MB worst case)
+    FFD_MEMO_MAX = 500_000
+
+    def invalidate_caches(self) -> None:
+        """Drop the per-batch tables and the FFD memo.  Call after the
+        predictor is re-fit (fresh profiling data): the tables hold the old
+        models' outputs and have no other invalidation path."""
+        self._tables_cache.clear()
+        self._ffd_memo.clear()
 
     # ------------------------------------------------------------------
     # Constraint / objective evaluation for a candidate V
@@ -155,6 +266,19 @@ class CamelotAllocator:
 
     def _anneal(self, batch: int, n_devices: int, objective: str,
                 required_load: Optional[float] = None) -> SolveResult:
+        assert self.sa.mode in ("vectorized", "scalar"), self.sa.mode
+        solver = self._anneal_vec if self.sa.mode == "vectorized" \
+            else self._anneal_scalar
+        pt0 = self.predictor.total_predict_time() \
+            if hasattr(self.predictor, "total_predict_time") else 0.0
+        res = solver(batch, n_devices, objective, required_load)
+        if hasattr(self.predictor, "total_predict_time"):
+            res.predictor_time = self.predictor.total_predict_time() - pt0
+        res.mode = self.sa.mode
+        return res
+
+    def _anneal_scalar(self, batch: int, n_devices: int, objective: str,
+                       required_load: Optional[float] = None) -> SolveResult:
         t_start = time.perf_counter()
         rng = np.random.default_rng(self.sa.seed)
         n = self.pipeline.n_stages
@@ -232,6 +356,296 @@ class CamelotAllocator:
                     for i in range(n)],
             predicted_min_throughput=ev[0] if feasible else 0.0,
             predicted_latency=ev[2] if feasible else float("inf"))
+        if feasible:
+            alloc.placement = pack_instances(
+                alloc, self.pipeline, self.predictor, self.device, n_devices)
+            feasible = alloc.placement is not None
+        return SolveResult(allocation=alloc,
+                           objective=best_score if feasible else -math.inf,
+                           feasible=feasible,
+                           solve_time=time.perf_counter() - t_start,
+                           iterations=sa.iterations, history=history)
+
+    # ------------------------------------------------------------------
+    # Vectorized hot path: per-solve tables + batched candidate evaluation
+    # ------------------------------------------------------------------
+
+    def _policy_tables(self, batch: int) -> "_PolicyTables":
+        """Per-(batch) lookup tables: every metric over the QUOTA_STEP grid
+        for every node (one batched predictor call each — exact on-grid for
+        tabulated predictors), plus per-edge transfer-time constants.
+        Cached: re-solves at the same batch (diurnal tracking, Eq. 3's
+        device sweep) pay zero model inference."""
+        tab = self._tables_cache.get(batch)
+        if tab is not None:
+            return tab
+        grid = QUOTA_GRID
+        n, g = self.pipeline.n_stages, len(grid)
+        stages = self.predictor.stages
+        dur = np.empty((n, g))
+        bw = np.empty((n, g))
+        thpt = np.empty((n, g))
+        for i, st in enumerate(stages):
+            dur[i] = st.quota_row("duration", batch, grid)
+            bw[i] = st.quota_row("bandwidth", batch, grid)
+            thpt[i] = st.quota_row("throughput", batch, grid)
+        foots = np.array([st.footprint(batch) for st in stages])
+        edges = self.pipeline.edges
+        e_src = np.array([e.src for e in edges], np.int64)
+        e_dst = np.array([e.dst for e in edges], np.int64)
+        t_host = np.empty(len(edges))
+        t_colo = np.empty(len(edges))
+        for k, e in enumerate(edges):
+            nb = self.pipeline.edge_nbytes(e.src, e.dst, batch)
+            t_host[k] = self.comm.transfer_time(nb, same_device=False)
+            t_colo[k] = self.comm.transfer_time(nb, same_device=True) \
+                if self.comm.global_memory_enabled else t_host[k]
+        tab = _PolicyTables(grid=grid, dur=dur, bw=bw, thpt=thpt,
+                            foots=foots, edge_src=e_src, edge_dst=e_dst,
+                            edge_t_colo=t_colo, edge_t_host=t_host)
+        self._tables_cache[batch] = tab
+        return tab
+
+    def _ffd_cached(self, counts: List[int], n_devices: int) -> bool:
+        """Memoized per-device packability.  ``counts`` is the per-quota-
+        level instance histogram — both the canonical multiset key
+        (permuted stage assignments collapse onto one entry) and the
+        integer-FFD input."""
+        key = (n_devices, tuple(counts))
+        hit = self._ffd_memo.get(key)
+        if hit is None:
+            hit = _ffd_fits_units(counts, n_devices)
+            if len(self._ffd_memo) >= self.FFD_MEMO_MAX:
+                self._ffd_memo.clear()
+            self._ffd_memo[key] = hit
+        return hit
+
+    def _eval_many(self, NS: np.ndarray, QI: np.ndarray,
+                   tab: "_PolicyTables", n_devices: int):
+        """Constraints 1–5 for K candidates at once.  Returns
+        (min_throughput (K,), total_quota (K,), latency (K,),
+        feasible (K,) bool) — the batched counterpart of ``_eval``."""
+        dev = self.device
+        k, n = NS.shape
+        ar = np.arange(n)
+        PS = tab.grid[QI]
+        dur = tab.dur[ar, QI]                               # (K, n)
+        thpt_min = (NS * tab.thpt[ar, QI]).min(axis=1)
+        quota = (NS * PS).sum(axis=1)
+        # Constraint-1 (aggregate), Constraint-2, Constraint-3, Constraint-4
+        feas = quota <= n_devices * 1.0 + 1e-9
+        feas &= NS.sum(axis=1) <= n_devices * dev.max_instances
+        if self.sa.bandwidth_constraint:
+            feas &= (NS * tab.bw[ar, QI]).sum(axis=1) \
+                <= n_devices * dev.mem_bandwidth
+        feas &= (NS * tab.foots).sum(axis=1) <= n_devices * dev.mem_capacity
+        # Constraint-5: one batched longest-path pass over the compiled DAG
+        if len(tab.edge_src):
+            colo = PS[:, tab.edge_src] + PS[:, tab.edge_dst] <= 1.0 + 1e-9
+            ecost = np.where(colo, tab.edge_t_colo, tab.edge_t_host)
+        else:
+            ecost = None
+        lat = self.pipeline.critical_path_arrays(dur, ecost)
+        feas &= lat <= self.pipeline.qos_target * (1 - self.sa.qos_slack)
+        # Constraint-1 refined (per-device packability).  Sufficient
+        # condition first: FFD fills every opened bin past (1 - q_max), so
+        # sum <= (1 - q_max)·D always packs — those rows skip the real FFD.
+        # Survivors build their per-quota-level instance histograms in ONE
+        # scatter-add, then hit the memoized integer-FFD check.
+        q_max = PS.max(axis=1)
+        rows = np.flatnonzero(feas & (quota > (1.0 - q_max) * n_devices))
+        if rows.size:
+            hist = np.zeros((len(rows), len(tab.grid)), np.int64)
+            np.add.at(hist, (np.arange(len(rows))[:, None], QI[rows]),
+                      NS[rows])
+            for j, counts in zip(rows, hist.tolist()):
+                feas[j] = self._ffd_cached(counts, n_devices)
+        return thpt_min, quota, lat, feas
+
+    @staticmethod
+    def _apply_moves(NS: np.ndarray, QI: np.ndarray, rows: np.ndarray,
+                     i: np.ndarray, mv: np.ndarray, max_inst: int,
+                     g: int) -> None:
+        """Apply move ``mv[r]`` to stage ``i[r]`` of candidate row
+        ``rows[r]``, in place.  Moves mirror the scalar neighbourhood: ±1
+        instance, ±1 quota step, and the two quota-preserving scale-out/in
+        compounds."""
+        cn, cq = NS[rows, i], QI[rows, i]
+        # instance delta per move type (0: +1, 1: -1, 4: scale-out, 5: in)
+        tn = np.clip(cn + _MOVE_DN[mv], 1, max_inst)
+        tq = cq + _MOVE_DQ[mv]
+        scaled = mv >= 4             # rescale quota to keep N·p ~constant
+        if scaled.any():
+            tq[scaled] = np.rint(
+                (cq[scaled] + 1) * cn[scaled] / tn[scaled]).astype(
+                    np.int64) - 1
+        NS[rows, i] = tn
+        QI[rows, i] = np.clip(tq, 0, g - 1)
+
+    def _neighbourhood(self, ns: np.ndarray, qi: np.ndarray, max_inst: int,
+                       g: int):
+        """Every single-stage move from one state: the full 6n candidate
+        fan used by the greedy polish."""
+        n = len(ns)
+        NS = np.repeat(ns[None], 6 * n, axis=0)
+        QI = np.repeat(qi[None], 6 * n, axis=0)
+        r = np.arange(6 * n)
+        self._apply_moves(NS, QI, r, r % n, r // n, max_inst, g)
+        return NS, QI
+
+    def _anneal_vec(self, batch: int, n_devices: int, objective: str,
+                    required_load: Optional[float] = None) -> SolveResult:
+        t_start = time.perf_counter()
+        sa = self.sa
+        rng = np.random.default_rng(sa.seed)
+        n = self.pipeline.n_stages
+        tab = self._policy_tables(batch)
+        g = len(tab.grid)
+        max_inst = n_devices * self.device.max_instances
+
+        def scores(ev):
+            thpt, quota, lat, feas = ev
+            if objective == "max_load":
+                return np.where(feas, thpt, -np.inf)
+            s = np.where(feas, -quota, -np.inf)
+            if required_load is not None:
+                s = np.where(thpt >= required_load, s, -np.inf)
+            return s
+
+        # population: W independent walkers with diversified seeds.
+        # Walker 0 starts from the scalar path's initial state (even
+        # allocation, one instance per stage); a few walkers start from
+        # closed-form throughput-BALANCED seeds — per stage the most
+        # quota-efficient grid level (argmax f/p, shifted for variety) with
+        # instance counts sized so every stage's aggregate throughput is
+        # equal and the quota budget is spent (N_i ∝ 1/f_i) — and the rest
+        # are spread across the quota grid at the device-saturating
+        # instance count.  The many-instances-at-small-quota optima are a
+        # long random walk from the even init but one hop from these seeds;
+        # a seed that violates a constraint still works (its walker simply
+        # accepts the first feasible mutation it proposes).
+        k = max(1, int(sa.population))
+        w = int(np.clip(sa.walkers, 1, k))
+        c = max(1, k // w)                   # proposals per walker per step
+        n_mut = max(1, int(sa.max_mutations))
+        p0 = min(1.0, n_devices / n)
+        qi0 = int(np.clip(round(p0 / QUOTA_STEP), 1, g)) - 1
+        levels = np.round(np.linspace(0, qi0, w)).astype(np.int64)
+        levels[0] = qi0                      # walker 0 = scalar init
+        QI_cur = np.repeat(levels[:, None], n, axis=1)
+        NS_cur = np.clip(n_devices // (n * tab.grid[QI_cur]), 1,
+                         max_inst).astype(np.int64)
+        NS_cur[0] = 1
+        eff_qi = np.argmax(tab.thpt / tab.grid, axis=1)
+        for wi, off in zip(range(1, w), range(0, 4)):
+            qi_b = np.clip(eff_qi + off, 0, g - 1)
+            f = tab.thpt[np.arange(n), qi_b]
+            t_bal = n_devices / (tab.grid[qi_b] / f).sum()
+            QI_cur[wi] = qi_b
+            NS_cur[wi] = np.clip(np.rint(t_bal / f).astype(np.int64), 1,
+                                 max_inst)
+        cur = scores(self._eval_many(NS_cur, QI_cur, tab, n_devices))
+        j0 = int(np.argmax(cur))
+        best_ns, best_qi = NS_cur[j0].copy(), QI_cur[j0].copy()
+        best_score = float(cur[j0])
+        history: List[float] = []
+        wr = np.arange(w)
+
+        # align the proposed-mutation budget with the scalar iteration count
+        steps = max(1, -(-sa.iterations * n_mut // (w * c)))  # ceil division
+        for it in range(steps):
+            temp = sa.t0 * (sa.t_end / sa.t0) ** (it / max(steps - 1, 1))
+            NS = np.repeat(NS_cur, c, axis=0)        # (W·C, n), walker-major
+            QI = np.repeat(QI_cur, c, axis=0)
+            # compound candidates: each row stacks 1..max_mutations random
+            # single moves, so one population step can jump several hops of
+            # the scalar walk at once
+            muts = rng.integers(1, n_mut + 1, size=w * c)
+            for t in range(n_mut):
+                rows = np.flatnonzero(muts > t)
+                if not len(rows):
+                    break
+                self._apply_moves(NS, QI, rows,
+                                  rng.integers(n, size=len(rows)),
+                                  rng.integers(6, size=len(rows)),
+                                  max_inst, g)
+            s_flat = scores(self._eval_many(NS, QI, tab, n_devices))
+            s = s_flat.reshape(w, c)
+            # candidate selection anneals from explorative to greedy: while
+            # hot, a walker Metropolis-tests a RANDOM feasible proposal
+            # (the scalar walk's behaviour — argmax here would commit every
+            # walker to the nearest basin); when cold it takes its best
+            jc = np.argmax(s, axis=1)                # per-walker best
+            explore = rng.random(w) < min(temp, 1.0)
+            if explore.any():
+                jr = rng.integers(c, size=w)
+                # fall back to argmax when the random pick is infeasible
+                jc = np.where(explore & np.isfinite(s[wr, jr]), jr, jc)
+            sj = s[wr, jc]
+            picked = wr * c + jc
+            # vectorized Metropolis per walker (a walker whose current
+            # state is infeasible accepts any feasible candidate)
+            finite = np.isfinite(sj)
+            cur_ok = np.isfinite(cur)
+            cur_safe = np.where(cur_ok, cur, 0.0)
+            gap = np.where(cur_ok, sj - cur_safe, np.inf)
+            with np.errstate(invalid="ignore"):
+                prob = np.exp(np.minimum(
+                    gap / np.maximum(temp * np.abs(cur_safe) + 1e-12,
+                                     1e-12), 0.0))
+            accept = finite & ((gap >= 0) | (rng.random(w) < prob))
+            rows = picked[accept]
+            NS_cur[accept] = NS[rows]
+            QI_cur[accept] = QI[rows]
+            cur[accept] = sj[accept]
+            # best-so-far tracks the whole evaluated population, not just
+            # the walker-picked rows — exploration picks discard strong
+            # candidates for the WALKER state, never for the incumbent
+            jb = int(np.argmax(s_flat))
+            if np.isfinite(s_flat[jb]) and (s_flat[jb] > best_score
+                                            or not np.isfinite(best_score)):
+                best_score = float(s_flat[jb])
+                best_ns, best_qi = NS[jb].copy(), QI[jb].copy()
+            history.append(best_score)
+
+        # greedy polish: exhaust the 6n single-move neighbourhood of the
+        # incumbent until it is locally optimal (cheap — one batched eval
+        # per round).  Ties on the objective break towards LOWER total
+        # quota: plateau moves (e.g. scale-out at unchanged min-throughput)
+        # free quota that later rounds spend on the bottleneck stage, and
+        # strictly decreasing quota on plateaus rules out cycles.
+        if np.isfinite(best_score):
+            best_quota = float(
+                (best_ns * tab.grid[best_qi]).sum())
+            for _ in range(max(0, sa.polish_rounds)):
+                NS, QI = self._neighbourhood(best_ns, best_qi, max_inst, g)
+                ev = self._eval_many(NS, QI, tab, n_devices)
+                s = scores(ev)
+                j = int(np.argmax(s))
+                if np.isfinite(s[j]) and s[j] > best_score + 1e-12:
+                    pass                             # strict improvement
+                else:
+                    ties = np.flatnonzero(
+                        np.isfinite(s) & (s >= best_score - 1e-12))
+                    if not ties.size:
+                        break
+                    j = int(ties[np.argmin(ev[1][ties])])
+                    if ev[1][j] >= best_quota - 1e-12:
+                        break                        # local optimum
+                best_score = float(s[j])
+                best_quota = float(ev[1][j])
+                best_ns, best_qi = NS[j].copy(), QI[j].copy()
+                history.append(best_score)
+
+        ns, ps = best_ns, tab.grid[best_qi]
+        thpt, quota, lat, feas = self._eval_many(
+            best_ns[None], best_qi[None], tab, n_devices)
+        feasible = bool(feas[0])
+        alloc = Allocation(
+            stages=[StageAlloc(int(ns[i]), float(ps[i]), batch)
+                    for i in range(n)],
+            predicted_min_throughput=float(thpt[0]) if feasible else 0.0,
+            predicted_latency=float(lat[0]) if feasible else float("inf"))
         if feasible:
             alloc.placement = pack_instances(
                 alloc, self.pipeline, self.predictor, self.device, n_devices)

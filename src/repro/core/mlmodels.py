@@ -5,6 +5,16 @@ scratch on numpy (no sklearn in this environment).
 The paper evaluates all three (Fig. 12) and picks the Decision Tree for
 duration/bandwidth/throughput (accuracy of RF at ~1/5 the inference cost) and
 LR for FLOPs / memory footprint (exactly linear in batch size).
+
+Inference is the allocator's hot path (~4·n predictor calls per SA
+candidate), so trees are *flattened* after fit into parallel node arrays
+(``feature_``/``threshold_``/``value_``/``left_``/``right_``) and
+``predict`` walks all rows level-by-level with masked numpy indexing —
+no Python recursion per row.  A forest stacks every tree's node arrays
+into one arena so all trees advance together in a single (T, N) index
+update per level.  The array walk takes the same ``<=`` branches as the
+node-by-node reference walk, so predictions are bit-identical
+(``_predict_recursive`` is kept for exactly that assertion).
 """
 from __future__ import annotations
 
@@ -69,7 +79,32 @@ class DecisionTreeRegressor:
         x = np.asarray(x, np.float64)
         y = np.asarray(y, np.float64)
         self.root = self._build(x, y, 0)
+        self._flatten()
         return self
+
+    def _flatten(self) -> None:
+        """Lower the node tree into parallel arrays (preorder indexing);
+        leaves carry ``left_ == right_ == -1``."""
+        feats, thrs, vals, lefts, rights = [], [], [], [], []
+
+        def emit(node: _Node) -> int:
+            idx = len(feats)
+            feats.append(node.feature)
+            thrs.append(node.threshold)
+            vals.append(node.value)
+            lefts.append(-1)
+            rights.append(-1)
+            if not node.is_leaf:
+                lefts[idx] = emit(node.left)
+                rights[idx] = emit(node.right)
+            return idx
+
+        emit(self.root)
+        self.feature_ = np.array(feats, np.int64)
+        self.threshold_ = np.array(thrs, np.float64)
+        self.value_ = np.array(vals, np.float64)
+        self.left_ = np.array(lefts, np.int64)
+        self.right_ = np.array(rights, np.int64)
 
     def _best_split(self, x, y):
         n, d = x.shape
@@ -119,6 +154,23 @@ class DecisionTreeRegressor:
         return node
 
     def predict(self, x: np.ndarray) -> np.ndarray:
+        """Batched array-walk prediction: every row descends one level per
+        masked update (≤ max_depth iterations total, no per-row recursion)."""
+        x = np.asarray(x, np.float64)
+        idx = np.zeros(len(x), np.int64)
+        rows = np.arange(len(x))
+        while True:
+            left = self.left_[idx]
+            live = left >= 0
+            if not live.any():
+                break
+            at = idx[live]
+            go_left = x[rows[live], self.feature_[at]] <= self.threshold_[at]
+            idx[live] = np.where(go_left, left[live], self.right_[at])
+        return self.value_[idx]
+
+    def _predict_recursive(self, x: np.ndarray) -> np.ndarray:
+        """Reference node-by-node walk (tests pin ``predict`` against it)."""
         x = np.asarray(x, np.float64)
         out = np.empty(len(x))
         for i, row in enumerate(x):
@@ -158,10 +210,40 @@ class RandomForestRegressor:
                 max_features=max_feats, seed=self.seed + t + 1)
             tree.fit(x[idx], y[idx])
             self.trees.append(tree)
+        self._stack()
         return self
 
+    def _stack(self) -> None:
+        """Concatenate every tree's flattened node arrays into one arena
+        (child indices rebased) so predict advances all trees at once."""
+        offsets = np.cumsum([0] + [len(t.value_) for t in self.trees])
+        self._roots = offsets[:-1]
+        self._feature = np.concatenate([t.feature_ for t in self.trees])
+        self._threshold = np.concatenate([t.threshold_ for t in self.trees])
+        self._value = np.concatenate([t.value_ for t in self.trees])
+        self._left = np.concatenate(
+            [np.where(t.left_ >= 0, t.left_ + off, -1)
+             for t, off in zip(self.trees, offsets)])
+        self._right = np.concatenate(
+            [np.where(t.right_ >= 0, t.right_ + off, -1)
+             for t, off in zip(self.trees, offsets)])
+
     def predict(self, x: np.ndarray) -> np.ndarray:
-        return np.mean([t.predict(x) for t in self.trees], axis=0)
+        """One (T, N) masked index update per tree level — the whole forest
+        descends together, then tree outputs reduce in a single mean."""
+        x = np.asarray(x, np.float64)
+        n = len(x)
+        idx = np.repeat(self._roots[:, None], n, axis=1)        # (T, N)
+        cols = np.broadcast_to(np.arange(n), idx.shape)
+        while True:
+            left = self._left[idx]
+            live = left >= 0
+            if not live.any():
+                break
+            at = idx[live]
+            go_left = x[cols[live], self._feature[at]] <= self._threshold[at]
+            idx[live] = np.where(go_left, left[live], self._right[at])
+        return self._value[idx].mean(axis=0)
 
 
 def mean_absolute_percentage_error(y_true, y_pred) -> float:

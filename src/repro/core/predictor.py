@@ -9,6 +9,18 @@ Training samples come from solo-run profiling (paper: nvprof/Nsight offline;
 here: the ground-truth curves sampled with measurement noise, or real step
 timings from the live serving engine at reduced scale — see
 ``profile_from_engine``).
+
+The tabulation contract (policy hot path)
+-----------------------------------------
+The allocator only ever queries quotas on the ``QUOTA_STEP`` grid and batch
+sizes from the profiling lattice, so ``TabulatedStagePredictor`` precomputes
+duration/bandwidth/throughput over the full (batch-lattice × quota-grid)
+product once per ``fit`` — a handful of batched model calls — and serves
+**on-grid lookups exactly** (the tables store the model's own outputs, and
+the DT is piecewise constant, so a lookup is bit-identical to a fresh model
+call at that point).  Off-grid queries fall back to the underlying model
+transparently.  ``quota_row`` hands the allocator a whole per-quota table
+row so its candidate evaluation is pure numpy indexing.
 """
 from __future__ import annotations
 
@@ -21,10 +33,12 @@ import numpy as np
 from repro.core.mlmodels import (DecisionTreeRegressor, LinearRegression,
                                  RandomForestRegressor,
                                  mean_absolute_percentage_error)
-from repro.core.types import DeviceSpec, MicroserviceProfile
+from repro.core.types import QUOTA_GRID, DeviceSpec, MicroserviceProfile
 
 DEFAULT_BATCHES = (1, 2, 4, 8, 16, 32, 64, 128)
-DEFAULT_QUOTAS = tuple(np.round(np.arange(0.05, 1.01, 0.05), 2))
+# profiling quota axis == the allocator's decision lattice (types.QUOTA_GRID)
+# so tabulated predictors serve every allocator query from the table
+DEFAULT_QUOTAS = tuple(QUOTA_GRID.tolist())
 
 
 @dataclass
@@ -45,13 +59,16 @@ def collect_samples(profile: MicroserviceProfile, device: DeviceSpec,
     rng = np.random.default_rng(seed)
     out = []
     for b in batches:
+        mem = profile.mem_bytes(b)
         for q in quotas:
+            # deterministic ground truth: one curve evaluation per (b, q);
+            # only the measurement-noise draw varies across repeats
+            d = profile.duration(b, q, device)
             for _ in range(repeats):
-                d = profile.duration(b, q, device)
                 d_obs = d * float(1 + rng.normal(0, noise))
                 out.append(ProfileSample(
                     batch=b, quota=q, duration=d_obs,
-                    bandwidth=profile.mem_bytes(b) / d_obs,
+                    bandwidth=mem / d_obs,
                     throughput=b / d_obs))
     return out
 
@@ -69,6 +86,12 @@ class StagePredictor:
         self._footprint_lr = LinearRegression()
         self.fit_errors: Dict[str, float] = {}
         self.predict_time: float = 0.0
+        self.predict_calls: int = 0
+
+    def reset_counters(self) -> None:
+        """Zero the accumulated inference-time/call counters."""
+        self.predict_time = 0.0
+        self.predict_calls = 0
 
     def _new_model(self):
         if self.model_kind == "lr":
@@ -111,8 +134,27 @@ class StagePredictor:
         t0 = time.perf_counter()
         v = float(self._models[key].predict(
             np.array([[batch, quota]], np.float64))[0])
-        self.predict_time = time.perf_counter() - t0
+        self.predict_time += time.perf_counter() - t0
+        self.predict_calls += 1
         return max(v, 1e-9)
+
+    def predict_many(self, key: str, x: np.ndarray) -> np.ndarray:
+        """Batched model inference over N (batch, quota) rows — one array
+        walk instead of N scalar calls."""
+        t0 = time.perf_counter()
+        v = np.maximum(self._models[key].predict(
+            np.asarray(x, np.float64)), 1e-9)
+        self.predict_time += time.perf_counter() - t0
+        self.predict_calls += len(v)
+        return v
+
+    def quota_row(self, key: str, batch: int,
+                  quotas: Sequence[float]) -> np.ndarray:
+        """Model predictions for one batch size across a quota vector (the
+        allocator's per-solve table row)."""
+        q = np.asarray(quotas, np.float64)
+        x = np.column_stack([np.full(len(q), batch, np.float64), q])
+        return self.predict_many(key, x)
 
     def duration(self, batch: int, quota: float) -> float:
         return self._predict("duration", batch, quota)
@@ -132,6 +174,78 @@ class StagePredictor:
             np.array([[batch]], np.float64))[0])
 
 
+class TabulatedStagePredictor(StagePredictor):
+    """StagePredictor with O(1) on-grid inference.
+
+    ``fit`` additionally tabulates every metric over the (batch-lattice ×
+    quota-grid) product in a few batched model calls.  Scalar queries that
+    land on the grid (the allocator's only access pattern — quotas are
+    multiples of ``QUOTA_STEP``, batches come from the profiling lattice)
+    are answered by pure numpy indexing and are **exact**: the tables hold
+    the model's own outputs and the DT is piecewise constant.  Anything
+    off-grid silently falls back to the model, so this is a drop-in
+    replacement for StagePredictor everywhere.
+    """
+
+    #: quota grid — must stay aligned with the allocator's QUOTA_STEP grid
+    GRID_DECIMALS = 2
+
+    def __init__(self, name: str, model_kind: str = "dt", seed: int = 0,
+                 quotas: Sequence[float] = DEFAULT_QUOTAS):
+        super().__init__(name, model_kind, seed=seed)
+        self.grid_quotas = np.round(np.asarray(quotas, np.float64),
+                                    self.GRID_DECIMALS)
+        self._quota_step = float(self.grid_quotas[0])
+        self.grid_batches: Dict[int, int] = {}
+        self._tables: Dict[str, np.ndarray] = {}
+
+    def fit(self, samples: Sequence[ProfileSample],
+            profile: Optional[MicroserviceProfile] = None,
+            holdout: float = 0.3) -> "TabulatedStagePredictor":
+        super().fit(samples, profile=profile, holdout=holdout)
+        batches = sorted({s.batch for s in samples})
+        self.grid_batches = {int(b): i for i, b in enumerate(batches)}
+        bb, qq = np.meshgrid(np.asarray(batches, np.float64),
+                             self.grid_quotas, indexing="ij")
+        x = np.column_stack([bb.ravel(), qq.ravel()])
+        shape = (len(batches), len(self.grid_quotas))
+        for key in ("duration", "bandwidth", "throughput"):
+            self._tables[key] = self.predict_many(key, x).reshape(shape)
+        self.reset_counters()             # table build is fit cost, not
+        return self                       # inference cost
+
+    def _grid_index(self, batch: float, quota: float) -> Optional[tuple]:
+        bi = self.grid_batches.get(int(batch)) \
+            if float(batch) == int(batch) else None
+        if bi is None:
+            return None
+        qi = int(round(quota / self._quota_step)) - 1
+        if 0 <= qi < len(self.grid_quotas) and \
+                abs(self.grid_quotas[qi] - quota) < 1e-6:
+            return bi, qi
+        return None
+
+    def _predict(self, key: str, batch: float, quota: float) -> float:
+        hit = self._grid_index(batch, quota)
+        if hit is None:                       # off-grid: model fallback
+            return super()._predict(key, batch, quota)
+        self.predict_calls += 1
+        return float(self._tables[key][hit])
+
+    def quota_row(self, key: str, batch: int,
+                  quotas: Sequence[float]) -> np.ndarray:
+        """Whole-grid lookup when ``quotas`` IS the table's quota grid (the
+        allocator's per-solve request); otherwise defer to the model."""
+        q = np.round(np.asarray(quotas, np.float64), self.GRID_DECIMALS)
+        bi = self.grid_batches.get(int(batch)) \
+            if float(batch) == int(batch) else None
+        if bi is not None and len(q) == len(self.grid_quotas) and \
+                np.array_equal(q, self.grid_quotas):
+            self.predict_calls += len(q)
+            return self._tables[key][bi].copy()
+        return super().quota_row(key, batch, quotas)
+
+
 class PipelinePredictor:
     """Per-node predictors for one service, built from offline profiling.
 
@@ -142,17 +256,33 @@ class PipelinePredictor:
     def __init__(self, stage_predictors: Sequence[StagePredictor]):
         self.stages = list(stage_predictors)
 
+    def total_predict_time(self) -> float:
+        """Accumulated model-inference seconds across every stage (the
+        allocator reports the delta per solve in ``SolveResult``)."""
+        return sum(s.predict_time for s in self.stages)
+
+    def total_predict_calls(self) -> int:
+        return sum(s.predict_calls for s in self.stages)
+
+    def reset_counters(self) -> None:
+        for s in self.stages:
+            s.reset_counters()
+
     @classmethod
     def from_profiles(cls, profiles: Sequence[MicroserviceProfile],
                       device: DeviceSpec, model_kind: str = "dt",
                       noise: float = 0.03, seed: int = 0,
                       batches: Sequence[int] = DEFAULT_BATCHES,
-                      ) -> "PipelinePredictor":
+                      tabulate: bool = True) -> "PipelinePredictor":
+        """``tabulate=True`` (default) builds ``TabulatedStagePredictor``s —
+        identical predictions (on-grid lookups are exact), O(1) hot path.
+        Pass False for the scalar baseline (e.g. benchmarking)."""
+        mk = TabulatedStagePredictor if tabulate else StagePredictor
         preds = []
         for i, p in enumerate(profiles):
             samples = collect_samples(p, device, noise=noise, seed=seed + i,
                                       batches=batches)
-            preds.append(StagePredictor(p.name, model_kind, seed=seed + i)
+            preds.append(mk(p.name, model_kind, seed=seed + i)
                          .fit(samples, profile=p))
         return cls(preds)
 
@@ -160,11 +290,12 @@ class PipelinePredictor:
     def from_graph(cls, graph, device: DeviceSpec, model_kind: str = "dt",
                    noise: float = 0.03, seed: int = 0,
                    batches: Sequence[int] = DEFAULT_BATCHES,
-                   ) -> "PipelinePredictor":
+                   tabulate: bool = True) -> "PipelinePredictor":
         """Profile every node of a ``ServiceGraph`` (topology-agnostic —
         solo-run profiling is per node)."""
         return cls.from_profiles(graph.nodes, device, model_kind=model_kind,
-                                 noise=noise, seed=seed, batches=batches)
+                                 noise=noise, seed=seed, batches=batches,
+                                 tabulate=tabulate)
 
 
 def profile_from_engine(name: str, timings: Sequence[tuple], weights_bytes: float,

@@ -44,6 +44,15 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 
+# The canonical compute-quota lattice shared by the allocator's decision
+# space and the predictor's tabulation: multiples of QUOTA_STEP up to a
+# full device.  Single definition — the tabulated fast path relies on the
+# allocator's grid and the predictor's table axis being bit-identical.
+QUOTA_STEP = 0.05
+QUOTA_GRID = np.round(
+    np.arange(1, int(round(1.0 / QUOTA_STEP)) + 1) * QUOTA_STEP, 2)
+
+
 @dataclass(frozen=True)
 class DeviceSpec:
     name: str = "rtx2080ti"
@@ -140,6 +149,18 @@ def edge_bytes(profile: MicroserviceProfile, count: int) -> float:
 
 
 @dataclass(frozen=True)
+class CompiledTopology:
+    """A ServiceGraph's structure lowered to numpy index arrays, in
+    topological order — the form the allocator's vectorized longest-path
+    pass consumes (``ServiceGraph.compiled`` builds and caches it)."""
+    topo: np.ndarray                    # (n,) node ids, topologically sorted
+    exits: np.ndarray                   # (n_exits,) exit node ids
+    pred_nodes: List[np.ndarray]        # per node: predecessor node ids
+    pred_edges: List[np.ndarray]        # per node: edge ids (into .edges),
+                                        # aligned with pred_nodes
+
+
+@dataclass(frozen=True)
 class ServiceEdge:
     """One directed call edge ``src -> dst`` of a ServiceGraph.
 
@@ -178,16 +199,19 @@ class ServiceGraph:
         self.preds: List[List[int]] = [[] for _ in range(n)]
         self.succs: List[List[int]] = [[] for _ in range(n)]
         self._edge_map: Dict[Tuple[int, int], ServiceEdge] = {}
-        for e in self.edges:
+        self._edge_index: Dict[Tuple[int, int], int] = {}
+        for k, e in enumerate(self.edges):
             assert 0 <= e.src < n and 0 <= e.dst < n, f"dangling edge {e}"
             assert (e.src, e.dst) not in self._edge_map, f"duplicate edge {e}"
             self._edge_map[(e.src, e.dst)] = e
+            self._edge_index[(e.src, e.dst)] = k
             self.succs[e.src].append(e.dst)
             self.preds[e.dst].append(e.src)
         self.entries: List[int] = [i for i in range(n) if not self.preds[i]]
         self.exits: List[int] = [i for i in range(n) if not self.succs[i]]
         assert self.entries, f"{name}: graph has a cycle (no entry node)"
         self.topo_order: List[int] = self._toposort()
+        self._compiled: Optional["CompiledTopology"] = None
 
     def _toposort(self) -> List[int]:
         indeg = [len(p) for p in self.preds]
@@ -249,6 +273,23 @@ class ServiceGraph:
             return 1e6 * count
         return edge_bytes(self.nodes[e.src], count)
 
+    @property
+    def compiled(self) -> "CompiledTopology":
+        """Topology lowered to index arrays (built once, cached): per-node
+        predecessor/edge id arrays in topological order, plus the exit set.
+        This is what lets Constraint-5 evaluate as a batched numpy
+        longest-path pass instead of per-candidate Python lambdas."""
+        if self._compiled is None:
+            self._compiled = CompiledTopology(
+                topo=np.asarray(self.topo_order, np.int64),
+                exits=np.asarray(self.exits, np.int64),
+                pred_nodes=[np.asarray(self.preds[u], np.int64)
+                            for u in range(len(self.nodes))],
+                pred_edges=[np.asarray(
+                    [self._edge_index[(p, u)] for p in self.preds[u]],
+                    np.int64) for u in range(len(self.nodes))])
+        return self._compiled
+
     def critical_path(self, node_cost: Callable[[int], float],
                       edge_cost: Callable[[ServiceEdge], float] = None,
                       ) -> float:
@@ -262,6 +303,28 @@ class ServiceGraph:
                         for p in self.preds[u]]
             best[u] = node_cost(u) + (max(incoming) if incoming else 0.0)
         return max(best[x] for x in self.exits)
+
+    def critical_path_arrays(self, node_costs: np.ndarray,
+                             edge_costs: Optional[np.ndarray] = None,
+                             ) -> np.ndarray:
+        """Batched ``critical_path``: ``node_costs`` is ``(..., n_nodes)``
+        and ``edge_costs`` ``(..., n_edges)`` (edge order = ``self.edges``);
+        returns the ``(...)`` longest entry→exit path per leading row.  One
+        numpy pass over the compiled topo arrays evaluates every candidate
+        allocation at once."""
+        nc = np.asarray(node_costs, np.float64)
+        ct = self.compiled
+        best = np.zeros_like(nc)
+        for u in ct.topo:
+            pn = ct.pred_nodes[u]
+            if len(pn):
+                inc = best[..., pn]
+                if edge_costs is not None:
+                    inc = inc + edge_costs[..., ct.pred_edges[u]]
+                best[..., u] = nc[..., u] + inc.max(axis=-1)
+            else:
+                best[..., u] = nc[..., u]
+        return best[..., ct.exits].max(axis=-1)
 
     def __repr__(self) -> str:
         return (f"ServiceGraph({self.name!r}, nodes={len(self.nodes)}, "

@@ -146,12 +146,51 @@ def shared_backbone_service(n_heads: int = 3,
                         qos_target=qos_target)
 
 
+def ensemble_service(n_branches: int = 3,
+                     device: DeviceSpec = RTX_2080TI,
+                     qos_target: float = 0.45) -> ServiceGraph:
+    """Six-node ensemble: extract -> {3 branches} -> fuse -> render.
+
+    The deepest DAG in the suite (path length 4, plus a 3-way fan-in): the
+    policy-hot-path benchmark uses it as the stress case for the allocator
+    — 6 nodes means a 12-dimensional decision vector and 7 edges on the
+    critical-path evaluation."""
+    feat_payload = 4096 * 4.0
+    result_payload = 256 * 4.0
+    nodes = [
+        _model_stage("extract", "qwen1.5-0.5b", 96, 3 * 224 * 224 * 4.0,
+                     weights_scale=0.4, serial_frac=0.05),
+    ]
+    edges = []
+    branch_archs = ["qwen3-0.6b", "xlstm-1.3b", "qwen1.5-0.5b"]
+    for b in range(n_branches):
+        nodes.append(_model_stage(
+            f"branch-{b}", branch_archs[b % len(branch_archs)], 16 + 8 * b,
+            feat_payload, weights_scale=0.08, serial_frac=0.10))
+        edges.append(ServiceEdge(0, 1 + b,
+                                 payload_bytes_per_query=feat_payload))
+    fuse = len(nodes)
+    nodes.append(_model_stage("fuse", "qwen1.5-0.5b", 8, result_payload,
+                              weights_scale=0.05, serial_frac=0.10,
+                              overhead=1e-3))
+    for b in range(n_branches):
+        edges.append(ServiceEdge(1 + b, fuse,
+                                 payload_bytes_per_query=result_payload))
+    nodes.append(_model_stage("render", "qwen1.5-0.5b", 32, result_payload,
+                              weights_scale=0.1, serial_frac=0.08))
+    edges.append(ServiceEdge(fuse, fuse + 1,
+                             payload_bytes_per_query=result_payload))
+    return ServiceGraph(f"ensemble-{len(nodes)}", nodes, edges,
+                        qos_target=qos_target)
+
+
 def dag_suite(device: DeviceSpec = RTX_2080TI) -> Dict[str, ServiceGraph]:
     """Non-chain services charged through the same allocator → packer →
     simulator/engine path as the paper's pipelines."""
     return {
         "diamond": diamond_service(device),
         "backbone-3h": shared_backbone_service(3, device),
+        "ensemble-6": ensemble_service(3, device),
     }
 
 
