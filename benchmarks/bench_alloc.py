@@ -24,13 +24,11 @@ from typing import Dict, List
 
 from benchmarks.common import Row, emit
 
-from repro.core import (CamelotAllocator, CommModel, PipelinePredictor,
-                        RTX_2080TI, SAConfig)
-from repro.sim import (PipelineSimulator, SimConfig, camelot_suite,
-                       dag_suite, even_allocation)
+from repro.camelot import CamelotSession, ClusterSpec, SAConfig
+from repro.sim import PipelineSimulator, SimConfig, workload_specs
 
 SIX_NODE = "ensemble-6"
-# head-to-head configs: (graph, n_devices, batch).  The 6-node DAG runs on
+# head-to-head configs: (spec, n_devices, batch).  The 6-node DAG runs on
 # 6 devices — at 4 the scalar walk never reaches feasibility from its even
 # init (the vectorized path does; that asymmetry is reported separately).
 _DEVICES = {SIX_NODE: 6}
@@ -38,24 +36,21 @@ _BATCH = 8
 
 
 def _workloads(quick: bool):
-    dags = dag_suite()
-    chains = camelot_suite()
+    specs = workload_specs()
     if quick:
-        return {SIX_NODE: dags[SIX_NODE], "img-to-img": chains["img-to-img"]}
-    return {**chains, **dags}
+        return {SIX_NODE: specs[SIX_NODE],
+                "img-to-img": specs["img-to-img"]}
+    return specs
 
 
-def _solve_pair(graph, n_devices: int, iterations: int) -> Dict:
-    comm = CommModel(RTX_2080TI)
+def _solve_pair(spec, n_devices: int, iterations: int) -> Dict:
     out = {}
     for mode, tabulate in (("scalar", False), ("vectorized", True)):
-        pred = PipelinePredictor.from_graph(graph, RTX_2080TI,
-                                            tabulate=tabulate)
-        alloc = CamelotAllocator(graph, pred, RTX_2080TI, n_devices,
-                                 comm=comm,
-                                 sa=SAConfig(iterations=iterations, seed=0,
-                                             mode=mode))
-        res = alloc.solve_max_load(batch=_BATCH)
+        sess = CamelotSession(spec, ClusterSpec(devices=n_devices))
+        sess.profile(tabulate=tabulate)
+        res = sess.solve(policy="max-peak", batch=_BATCH,
+                         sa=SAConfig(iterations=iterations, seed=0,
+                                     mode=mode))
         out[mode] = {
             "feasible": res.feasible,
             "objective": res.objective if res.feasible else None,
@@ -79,18 +74,19 @@ def _sim_throughput(quick: bool) -> Dict:
     wide allocation (many instances — where the per-dispatch scan hurts).
     Best of ``repeats`` fresh runs per mode (the event count is identical,
     only the wall time varies)."""
-    from repro.sim import artifact_pipelines
-    pipe = artifact_pipelines()["p2+c2+m2"]        # 3 stages
-    n_devices = 16                                 # 48 instances: a scale
+    spec = workload_specs(include_artifacts=True)["p2+c2+m2"]  # 3 stages
+    cluster = ClusterSpec(devices=16)              # 48 instances: a scale
     qps = 1500.0                                   # where the scan matters
-    alloc, comm = even_allocation(pipe, RTX_2080TI, n_devices, batch=4)
+    sess = CamelotSession(spec, cluster, batch=4)
+    res = sess.solve(policy="even")
+    pipe, alloc, comm = sess.graph, res.allocation, res.comm
     repeats = 2 if quick else 3
     out = {}
     for inc in (True, False):
         walls = []
         for _ in range(repeats):
             sim = PipelineSimulator(
-                pipe, alloc, RTX_2080TI, comm,
+                pipe, alloc, cluster.device_spec, comm,
                 sim=SimConfig(duration=4.0, warmup=0.5, seed=0,
                               incremental_bw=inc))
             t0 = time.perf_counter()
@@ -113,10 +109,9 @@ def run(quick: bool = False, iterations: int = 2000) -> List[Row]:
     rows: List[Row] = []
     report = {"iterations": iterations, "batch": _BATCH, "workloads": {},
               "sim": {}}
-    dag_names = set(dag_suite())
-    for name, graph in _workloads(quick).items():
-        nd = _DEVICES.get(name, 4 if name in dag_names else 2)
-        pair = _solve_pair(graph, nd, iterations)
+    for name, spec in _workloads(quick).items():
+        nd = _DEVICES.get(name, 2 if spec.is_chain else 4)
+        pair = _solve_pair(spec, nd, iterations)
         report["workloads"][name] = pair
         v, s = pair["vectorized"], pair["scalar"]
         rows.append((f"alloc/{name}/scalar", s["solve_time_s"] * 1e6,

@@ -1,56 +1,43 @@
 """DAG-topology services through the full stack (beyond the paper's
-chains): peak supported load of the diamond ensemble and the
-shared-backbone fan-out under Camelot vs the even-allocation baseline,
-plus the allocator's critical-path latency against the simulator's
-measured mean at moderate load."""
+chains), driven by the `repro.camelot` facade: one ``CamelotSession`` per
+DAG spec charges Camelot max-peak vs the even-allocation baseline (both
+from the policy registry), plus the allocator's critical-path latency
+against the simulator's measured mean at moderate load."""
 from __future__ import annotations
 
-from repro.core import (RTX_2080TI, CamelotAllocator, CommModel,
-                        PipelinePredictor, SAConfig)
-from repro.sim import (PipelineSimulator, SimConfig, dag_suite,
-                       even_allocation, find_peak_load)
+from repro.camelot import CamelotSession, ClusterSpec, SAConfig
+from repro.sim import SimConfig, workload_specs
 
 from benchmarks.common import Row
 
 
 def run(quick: bool = False) -> list:
     rows: list[Row] = []
-    n_devices = 2 if quick else 4
+    cluster = ClusterSpec(devices=2 if quick else 4)
     iters = 300 if quick else 1200
     # the peak search needs >=5 recorded queries at the 1-2 qps low end,
     # so even the quick sim must run a few seconds past warmup
     sim_cfg = SimConfig(duration=6.0 if quick else 10.0, warmup=1.0)
-    for name, graph in dag_suite().items():
-        pred = PipelinePredictor.from_graph(graph, RTX_2080TI)
-        comm = CommModel(RTX_2080TI)
-        alloc = CamelotAllocator(graph, pred, RTX_2080TI, n_devices,
-                                 comm=comm, sa=SAConfig(iterations=iters))
-        res = alloc.solve_max_load(batch=8)
+    specs = workload_specs()
+    for name in [n for n, s in specs.items() if not s.is_chain]:
+        sess = CamelotSession(specs[name], cluster, batch=8)
+        res = sess.solve(policy="max-peak", sa=SAConfig(iterations=iters))
         if not res.feasible:
             rows.append((f"dag/{name}/camelot", 0.0, "infeasible"))
             continue
-
-        def mk_camelot(r=res, g=graph, c=comm):
-            return PipelineSimulator(g, r.allocation, RTX_2080TI, c,
-                                     sim=sim_cfg)
-
-        peak_c, _ = find_peak_load(mk_camelot, graph.qos_target, lo=2.0,
+        peak_c, _ = sess.find_peak(result=res, sim=sim_cfg, lo=2.0,
                                    hi=res.objective * 2)
         rows.append((f"dag/{name}/camelot", res.solve_time * 1e6,
                      f"peak_qps={peak_c:.0f}"))
 
-        ea_alloc, ea_comm = even_allocation(graph, RTX_2080TI, n_devices,
-                                            batch=8)
-
-        def mk_ea(a=ea_alloc, g=graph, c=ea_comm):
-            return PipelineSimulator(g, a, RTX_2080TI, c, sim=sim_cfg)
-
-        peak_ea, _ = find_peak_load(mk_ea, graph.qos_target, lo=2.0)
+        res_ea = sess.solve(policy="even")
+        peak_ea, _ = sess.find_peak(result=res_ea, sim=sim_cfg, lo=2.0)
         rows.append((f"dag/{name}/even", 0.0, f"peak_qps={peak_ea:.0f}"))
 
         # Constraint-5 critical path vs simulator-measured latency at
         # half the predicted peak (low queueing): should be commensurate
-        r = mk_camelot().run(max(res.objective * 0.4, 1.0))
+        r = sess.simulate(load=max(res.objective * 0.4, 1.0), result=res,
+                          sim=sim_cfg)
         rows.append((f"dag/{name}/latency", r.mean_latency * 1e6,
                      f"predicted_cp={res.allocation.predicted_latency:.4f}"
                      f",sim_mean={r.mean_latency:.4f}"))

@@ -1,53 +1,49 @@
 """Paper Fig. 14 (+15): supported peak load of the four suite benchmarks
-under EA / Laius / Camelot across batch sizes, with the 99%-ile latency held
-at the QoS target; also emits Camelot's chosen allocation (Fig. 15)."""
+under EA / Laius / Camelot across batch sizes, with the 99%-ile latency
+held at the QoS target; also emits Camelot's chosen allocation (Fig. 15).
+
+All three strategies dispatch through the `repro.camelot` policy registry
+("even" / "laius" / "max-peak"), so adding a policy row here is one
+registry name."""
 from __future__ import annotations
 
 from benchmarks.common import Row
-from repro.core import PipelinePredictor, RTX_2080TI
-from repro.sim import (PipelineSimulator, SimConfig, camelot,
-                       camelot_suite, even_allocation, find_peak_load, laius)
+from repro.camelot import CamelotSession, ClusterSpec
+from repro.sim import SimConfig, workload_specs
 
 N_DEVICES = 2
+POLICIES = {"ea": "even", "laius": "laius", "camelot": "max-peak"}
 
 
 def run(quick: bool = False) -> list[Row]:
     rows: list[Row] = []
-    suite = camelot_suite()
+    specs = workload_specs()
     scfg = SimConfig(duration=6.0 if quick else 12.0, warmup=1.0, seed=0)
     batches = (16,) if quick else (4, 8, 16, 32)
-    names = ("img-to-img", "text-to-text") if quick else tuple(suite)
+    names = ("img-to-img", "text-to-text") if quick else \
+        ("img-to-img", "img-to-text", "text-to-img", "text-to-text")
+    cluster = ClusterSpec(devices=N_DEVICES)
     for pname in names:
-        pipe = suite[pname]
-        pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI)
+        sess = CamelotSession(specs[pname], cluster)
+        sess.profile()
         for batch in batches:
             peaks = {}
-            for policy in ("ea", "laius", "camelot"):
-                if policy == "ea":
-                    alloc, comm = even_allocation(pipe, RTX_2080TI,
-                                                  N_DEVICES, batch)
-                elif policy == "laius":
-                    alloc, comm = laius(pipe, pred, RTX_2080TI, N_DEVICES,
-                                        batch)
-                else:
-                    alloc, comm, res = camelot(pipe, pred, RTX_2080TI,
-                                               N_DEVICES, batch)
-                    if not res.feasible or alloc.placement is None:
-                        # batch too large for the QoS budget: report 0
-                        rows.append((f"fig14/{pname}/b{batch}/camelot", 0.0,
-                                     "infeasible at this batch size"))
-                        peaks[policy] = 0.0
-                        continue
-                mk = lambda a=alloc, c=comm: PipelineSimulator(
-                    pipe, a, RTX_2080TI, c, scfg)
-                peak, res = find_peak_load(mk, pipe.qos_target)
-                peaks[policy] = peak
-                rows.append((f"fig14/{pname}/b{batch}/{policy}", peak,
-                             f"p99norm={res.normalized_p99:.2f}"))
-                if policy == "camelot":
+            for label, policy in POLICIES.items():
+                res = sess.solve(policy=policy, batch=batch)
+                if not res.feasible or res.allocation.placement is None:
+                    # batch too large for the QoS budget: report 0
+                    rows.append((f"fig14/{pname}/b{batch}/{label}", 0.0,
+                                 "infeasible at this batch size"))
+                    peaks[label] = 0.0
+                    continue
+                peak, r = sess.find_peak(result=res, sim=scfg)
+                peaks[label] = peak
+                rows.append((f"fig14/{pname}/b{batch}/{label}", peak,
+                             f"p99norm={r.normalized_p99:.2f}"))
+                if label == "camelot":
                     detail = ";".join(
                         f"N={s.n_instances} p={s.quota:.2f}"
-                        for s in alloc.stages)
+                        for s in res.allocation.stages)
                     rows.append((f"fig15/{pname}/b{batch}", 0.0, detail))
             rows.append((
                 f"fig14/{pname}/b{batch}/gain_vs_ea",

@@ -1,0 +1,44 @@
+"""Spec round-trip check: every workload in ``repro.sim.workloads`` (the
+four chain services, the DAG suite, and all 27 artifact pipelines) must
+survive ``ServiceSpec.from_dict(spec.to_dict()) == spec`` and lower back
+onto a graph with identical topology and QoS target.  Registered as
+``specs`` in run.py and run as a CI step — the declarative layer's
+serialisation contract must hold for every workload the repo ships."""
+from __future__ import annotations
+
+import json
+
+from repro.camelot import ServiceSpec
+from repro.sim import workload_specs
+
+from benchmarks.common import Row
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    specs = workload_specs(include_artifacts=not quick)
+    failures = []
+    for name, spec in specs.items():
+        # dict round-trip (and through JSON: the dicts must be plain data)
+        back = ServiceSpec.from_dict(spec.to_dict())
+        json_back = ServiceSpec.from_dict(json.loads(json.dumps(
+            spec.to_dict())))
+        graph = back.build()
+        ok = (back == spec and json_back == spec
+              and graph.name == spec.name
+              and len(graph.nodes) == spec.n_nodes
+              and [(e.src, e.dst) for e in graph.edges]
+              == [(e.src, e.dst) for e in spec.edges]
+              and graph.qos_target == spec.qos_target)
+        if not ok:
+            failures.append(name)
+    rows.append(("specs/roundtrip", float(len(specs)),
+                 f"workloads={len(specs)};failures={failures or 'none'}"))
+    if failures:
+        raise AssertionError(f"spec round-trip failed for {failures}")
+    return rows
+
+
+if __name__ == "__main__":           # CI entry point: exits non-zero on a
+    from benchmarks.common import emit   # broken round-trip
+    emit(run())

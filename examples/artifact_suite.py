@@ -1,13 +1,15 @@
-"""Artifact-benchmark study (paper §VIII-E): build p_i+c_j+m_k pipelines,
-allocate with Camelot vs EA, and report simulated peak loads.
+"""Artifact-benchmark study (paper §VIII-E) through the `repro.camelot`
+facade: each p_i+c_j+m_k pipeline is a ``ServiceSpec``, one
+``CamelotSession`` per pipeline charges the even-allocation baseline and
+Camelot max-peak through the policy registry, and the simulated peak loads
+are compared.
 
 Run:  PYTHONPATH=src python examples/artifact_suite.py [--full]
 """
 import argparse
 
-from repro.core import PipelinePredictor, RTX_2080TI
-from repro.sim import (PipelineSimulator, SimConfig, artifact_pipelines,
-                       camelot, even_allocation, find_peak_load)
+from repro.camelot import CamelotSession, ClusterSpec
+from repro.sim import SimConfig, workload_specs
 
 
 def main():
@@ -15,29 +17,27 @@ def main():
     ap.add_argument("--full", action="store_true", help="all 27 pipelines")
     args = ap.parse_args()
 
-    pipes = artifact_pipelines()
-    names = list(pipes) if args.full else \
+    specs = workload_specs(include_artifacts=True)
+    names = [n for n in specs if "+" in n] if args.full else \
         ["p1+c1+m1", "p1+c3+m1", "p3+c1+m2", "p2+c2+m2"]
     scfg = SimConfig(duration=8.0, warmup=1.0, seed=0)
+    cluster = ClusterSpec(devices=2)
     print(f"{'pipeline':12s} {'EA qps':>9s} {'Camelot qps':>12s} {'gain':>7s}"
           f"  allocation")
     gains = []
     for name in names:
-        pipe = pipes[name]
-        pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI)
-        a_ea, c_ea = even_allocation(pipe, RTX_2080TI, 2, 16)
-        a_cm, c_cm, res = camelot(pipe, pred, RTX_2080TI, 2, 16)
-        if not res.feasible:
+        sess = CamelotSession(specs[name], cluster, batch=16)
+        res_ea = sess.solve(policy="even")
+        res_cm = sess.solve(policy="max-peak")
+        if not res_cm.feasible:
             print(f"{name:12s}  infeasible")
             continue
-        p_ea, _ = find_peak_load(lambda: PipelineSimulator(
-            pipe, a_ea, RTX_2080TI, c_ea, scfg), pipe.qos_target)
-        p_cm, _ = find_peak_load(lambda: PipelineSimulator(
-            pipe, a_cm, RTX_2080TI, c_cm, scfg), pipe.qos_target)
+        p_ea, _ = sess.find_peak(result=res_ea, sim=scfg)
+        p_cm, _ = sess.find_peak(result=res_cm, sim=scfg)
         gain = p_cm / max(p_ea, 1e-9) - 1
         gains.append(gain)
         detail = " ".join(f"({s.n_instances}x{s.quota:.2f})"
-                          for s in a_cm.stages)
+                          for s in res_cm.allocation.stages)
         print(f"{name:12s} {p_ea:9.0f} {p_cm:12.0f} {gain * 100:6.0f}%  "
               f"{detail}")
     if gains:

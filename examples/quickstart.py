@@ -1,78 +1,74 @@
-"""Quickstart: the full Camelot loop in one page.
+"""Quickstart: the full Camelot loop through the `repro.camelot` facade.
 
-1. profile two REAL (reduced) models on the live engine,
-2. fit the per-stage performance predictor (decision trees),
-3. solve the two allocation policies (max-load / min-resource),
-4. validate the allocation in the datacenter simulator,
-5. replay the solved allocation on the LIVE engine — both worlds run the
-   same execution core (repro.core.exec), so the allocation drops in as-is.
+One declarative entry point instead of five hand-wired layers: a workload
+is a ``ServiceSpec`` (pure data, dict round-trippable), the cluster is a
+``ClusterSpec``, and a ``CamelotSession`` owns the lifecycle —
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+    sess = CamelotSession(spec, ClusterSpec(devices=2))
+    sess.profile()                         # fit per-node predictors
+    res = sess.solve(policy="max-peak")    # any registered policy
+    low = sess.solve(policy="min-resource", load=...)
+    sim = sess.simulate(load=...)          # datacenter simulator
+    eng = sess.serve()                     # LIVE engine, real models
+    eng.run_trace(sess.make_trace(...))
+
+The same ten lines drive the paper's linear chain AND a fan-out/fan-in
+DAG — new workloads are new specs, not new plumbing.
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--queries 10]
 """
-from repro.core import (CamelotAllocator, PipelinePredictor, RTX_2080TI,
-                        SAConfig, profile_from_engine)
-from repro.core.types import Pipeline
-from repro.serving import ModelStageServer, PipelineEngine, make_trace
-from repro.sim import PipelineSimulator, SimConfig, find_peak_load
-from repro.sim.baselines import camelot
+import argparse
+
+from repro.camelot import CamelotSession, ClusterSpec, SAConfig
+from repro.sim import workload_specs
 
 
-def main():
-    # -- 1. live profiling (paper: nvprof offline profiling) ------------
-    print("== profiling reduced models on the live engine ==")
-    stages = [ModelStageServer("summarize", "qwen3-0.6b", seq_len=16),
-              ModelStageServer("translate", "qwen1.5-0.5b", seq_len=16)]
-    profiles = []
-    for st in stages:
-        timings = st.profile_stage_timings(batches=(1, 2, 4), repeats=2)
-        print(f"  {st.name}: " + ", ".join(
-            f"b={b}:{t * 1e3:.1f}ms" for b, t in timings))
-        profiles.append(profile_from_engine(
-            st.name, timings, weights_bytes=1.2e9, act_bytes_per_query=2e7,
-            device=RTX_2080TI, host_bytes_per_query=2e6))
-    pipeline = Pipeline("quickstart", profiles, qos_target=0.4)
+def run_workload(spec, queries: int) -> None:
+    kind = "chain" if spec.is_chain else "DAG"
+    print(f"== {spec.name} ({kind}: {spec.n_nodes} nodes, "
+          f"{len(spec.edges)} edges, QoS {spec.qos_target * 1e3:.0f} ms) ==")
 
-    # -- 2. predictor ----------------------------------------------------
-    pred = PipelinePredictor.from_profiles(profiles, RTX_2080TI)
-    for sp in pred.stages:
+    sess = CamelotSession(spec, ClusterSpec(devices=2), batch=8)
+    sess.profile()
+    for sp in sess.predictor.stages:
         print(f"  predictor[{sp.name}] holdout MAPE: " + ", ".join(
             f"{k}={v * 100:.1f}%" for k, v in sp.fit_errors.items()))
 
-    # -- 3. allocation ---------------------------------------------------
-    print("== solving allocations (2 devices) ==")
-    alloc = CamelotAllocator(pipeline, pred, RTX_2080TI, n_devices=2,
-                             sa=SAConfig(iterations=1500, seed=0))
-    peak = alloc.solve_max_load(batch=8)
-    print(f"  max-load: {peak.objective:.0f} qps predicted, alloc="
+    # -- solve: peak capability, then right-size for 30% of it -----------
+    peak = sess.solve(policy="max-peak", sa=SAConfig(iterations=1200))
+    print(f"  max-peak: {peak.objective:.0f} qps predicted, alloc="
           f"{[(s.n_instances, s.quota) for s in peak.allocation.stages]} "
           f"({peak.solve_time * 1e3:.0f} ms solve)")
-    low = alloc.solve_min_resource(batch=8, load=peak.objective * 0.3)
+    low = sess.solve(policy="min-resource", load=peak.objective * 0.3,
+                     sa=SAConfig(iterations=1200))
     print(f"  min-resource @30% load: total quota "
           f"{low.allocation.total_quota():.2f} GPUs "
           f"(peak used {peak.allocation.total_quota():.2f})")
 
-    # -- 4. simulate -----------------------------------------------------
-    print("== validating in the simulator ==")
-    a, comm, _ = camelot(pipeline, pred, RTX_2080TI, 2, 8)
-    mk = lambda: PipelineSimulator(pipeline, a, RTX_2080TI, comm,
-                                   SimConfig(duration=8.0, warmup=1.0))
-    qps, res = find_peak_load(mk, pipeline.qos_target)
-    print(f"  simulated peak {qps:.0f} qps at p99/QoS = "
-          f"{res.normalized_p99:.2f}")
+    # -- validate the peak allocation in the simulator -------------------
+    r = sess.simulate(load=peak.objective * 0.5, result=peak)
+    print(f"  simulated @50% peak: p99/QoS = {r.normalized_p99:.2f} "
+          f"({r.completed} completed)")
 
-    # -- 5. run the solved allocation LIVE -------------------------------
-    if low.feasible and low.allocation.placement is not None:
-        print("== replaying the min-resource allocation on the live engine ==")
-        eng = PipelineEngine(stages, allocation=low.allocation,
-                             comm_mechanism="auto", qos_target=0.4,
-                             batch_timeout=0.05)
-        trace = make_trace(16, qps=20.0, seq_len=16,
-                           vocab=stages[0].cfg.vocab_size, seed=5)
-        s = eng.run_trace(trace).summary()
-        n_inst = [len(p) for p in low.allocation.placement.per_stage]
-        print(f"  instances/stage {n_inst} | live p99 {s['p99'] * 1e3:.1f} ms"
-              f" | completed {s['completed']} | "
-              f"edge-0 picks {eng.channels[0].picks}")
+    # -- run the min-resource allocation LIVE (real reduced models) ------
+    if not low.feasible or low.allocation.placement is None:
+        print("  min-resource infeasible at this load — skipping live replay")
+        return
+    eng = sess.serve(result=low)
+    s = eng.run_trace(sess.make_trace(queries, qps=20.0, seed=5)).summary()
+    n_inst = [len(p) for p in low.allocation.placement.per_stage]
+    print(f"  live replay: instances/node {n_inst} | "
+          f"p99 {s['p99'] * 1e3:.1f} ms | completed {s['completed']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=10,
+                    help="queries per live replay")
+    args = ap.parse_args()
+    specs = workload_specs()
+    run_workload(specs["text-to-text"], args.queries)   # the paper's chain
+    run_workload(specs["diamond"], args.queries)        # fan-out/fan-in DAG
 
 
 if __name__ == "__main__":

@@ -16,18 +16,24 @@ Run:  PYTHONPATH=src python examples/serve_pipeline.py [--queries 32] [--dag]
 """
 import argparse
 
+from repro.camelot import ClusterSpec
 from repro.core.types import (Allocation, Placement, ServiceEdge,
                               ServiceGraph, StageAlloc)
 from repro.serving import ModelStageServer, PipelineEngine, make_trace
 
 
-def build_allocation(n_stages: int, instances: int, batch: int) -> Allocation:
+def build_allocation(n_stages: int, instances: int, batch: int,
+                     cluster: ClusterSpec = ClusterSpec(devices=1),
+                     ) -> Allocation:
     """Stage 0 gets ``instances`` concurrent instances, the rest one each —
-    the shape the Camelot allocator produces for a front-heavy pipeline."""
+    the shape the Camelot allocator produces for a front-heavy pipeline.
+    Quotas snap onto the cluster's ``quota_step`` lattice (floored, so the
+    per-device sum stays packable) — the same grid the allocator solves
+    over, so this demo allocation is valid under its constraints."""
     per_stage, stages = [], []
     for si in range(n_stages):
         n_i = instances if si == 0 else 1
-        quota = round(1.0 / (n_stages * n_i), 4)
+        quota = cluster.quantize(1.0 / (n_stages * n_i))
         stages.append(StageAlloc(n_instances=n_i, quota=quota, batch=batch))
         per_stage.append([(0, quota) for _ in range(n_i)])
     return Allocation(stages=stages, placement=Placement(per_stage=per_stage))

@@ -1,0 +1,223 @@
+"""``CamelotSession``: the whole Camelot lifecycle behind one object.
+
+The paper's value proposition is a single runtime owning the loop —
+profile, predict, contention-aware allocate, place, and serve under a
+99%-ile QoS target.  The session is that loop as an API: construct it from
+declarative specs, then
+
+    sess = CamelotSession(service_spec, ClusterSpec(devices=2))
+    sess.profile()                         # fit the per-node predictors
+    res = sess.solve(policy="max-peak")    # any registered policy
+    sim = sess.simulate(load=res.objective * 0.5)   # datacenter simulator
+    eng = sess.serve()                     # LIVE engine, same allocation
+    sess.reallocate(now)                   # online loop via CamelotRuntime
+
+Every step delegates to the existing layers (``PipelinePredictor``,
+``CamelotAllocator`` through the policy registry, ``PipelineSimulator``,
+``PipelineEngine``, ``CamelotRuntime``); the session only owns the wiring,
+so hand-wired callers and the facade produce identical results.
+"""
+from __future__ import annotations
+
+from typing import List, Mapping, Optional, Sequence, Tuple
+
+from repro.camelot.policies import get_policy
+from repro.camelot.specs import ClusterSpec, QoSSpec, ServiceSpec
+from repro.core.allocator import SolveResult
+from repro.core.predictor import (DEFAULT_BATCHES, PipelinePredictor,
+                                  ProfileSample, StagePredictor,
+                                  TabulatedStagePredictor)
+from repro.core.runtime import CamelotRuntime, RuntimeConfig
+from repro.core.types import Allocation, ServiceGraph
+from repro.sim.simulator import (PipelineSimulator, SimConfig, SimResult,
+                                 find_peak_load)
+
+
+class CamelotSession:
+    """One service on one cluster under one QoS objective.
+
+    ``service`` may be a ``ServiceSpec``, a plain dict (lowered through
+    ``ServiceSpec.from_dict``), or an already-built ``ServiceGraph``
+    (lifted through ``ServiceSpec.from_graph`` — the migration path for
+    chain-era callers)."""
+
+    def __init__(self, service, cluster: Optional[ClusterSpec] = None,
+                 qos: Optional[QoSSpec] = None, batch: int = 8,
+                 seed: int = 0):
+        if isinstance(service, ServiceGraph):
+            service = ServiceSpec.from_graph(service)
+        elif isinstance(service, Mapping):
+            service = ServiceSpec.from_dict(service)
+        assert isinstance(service, ServiceSpec), service
+        self.service = service
+        self.cluster = cluster if cluster is not None else ClusterSpec()
+        self.qos = qos if qos is not None else QoSSpec()
+        self.batch = batch
+        self.seed = seed
+        self.graph: ServiceGraph = service.build(self.qos)
+        self.predictor: Optional[PipelinePredictor] = None
+        self.last_result: Optional[SolveResult] = None
+        self.results: List[SolveResult] = []
+        self._runtime: Optional[CamelotRuntime] = None
+        self._stages = None               # live stage servers, set by serve()
+
+    @property
+    def qos_target(self) -> float:
+        return self.qos.resolve_target(self.service)
+
+    # ---- 1. profile / predict ------------------------------------------
+
+    def profile(self, model_kind: str = "dt", noise: float = 0.03,
+                seed: Optional[int] = None,
+                batches: Sequence[int] = DEFAULT_BATCHES,
+                tabulate: bool = True) -> PipelinePredictor:
+        """Solo-run profile every node and fit its performance models
+        (paper §VII-A).  Identical to hand-wiring
+        ``PipelinePredictor.from_graph`` — same seeds, same samples."""
+        self.predictor = PipelinePredictor.from_graph(
+            self.graph, self.cluster.device_spec, model_kind=model_kind,
+            noise=noise, seed=self.seed if seed is None else seed,
+            batches=batches, tabulate=tabulate)
+        return self.predictor
+
+    def fit_from_samples(self, samples_per_node:
+                         Sequence[Sequence[ProfileSample]],
+                         model_kind: str = "dt",
+                         tabulate: bool = True) -> PipelinePredictor:
+        """Fit the predictors from pre-collected ``ProfileSample``s (real
+        profiler output) instead of the analytic ground-truth curves —
+        ``samples_per_node[i]`` trains node i's predictor."""
+        assert len(samples_per_node) == self.service.n_nodes, \
+            "need one sample list per service node"
+        mk = TabulatedStagePredictor if tabulate else StagePredictor
+        preds = []
+        for i, samples in enumerate(samples_per_node):
+            node = self.graph.nodes[i]
+            preds.append(mk(node.name, model_kind, seed=self.seed + i)
+                         .fit(samples, profile=node))
+        self.predictor = PipelinePredictor(preds)
+        return self.predictor
+
+    def _require_predictor(self) -> PipelinePredictor:
+        if self.predictor is None:
+            self.profile()
+        return self.predictor
+
+    # ---- 2. solve ------------------------------------------------------
+
+    def solve(self, policy="max-peak", batch: Optional[int] = None,
+              **kwargs) -> SolveResult:
+        """Run a registered policy (or a Policy instance) against the
+        session's specs.  Extra keyword arguments go to the policy
+        (e.g. ``load=`` for min-resource, ``sa=`` for an SA override)."""
+        pol = get_policy(policy)
+        res = pol.solve(self.service, self._require_predictor(),
+                        self.cluster, self.qos,
+                        batch=self.batch if batch is None else batch,
+                        **kwargs)
+        self.last_result = res
+        self.results.append(res)
+        return res
+
+    def _resolve_result(self, result: Optional[SolveResult]) -> SolveResult:
+        res = result if result is not None else self.last_result
+        if res is None:
+            res = self.solve()
+        return res
+
+    # ---- 3. simulate ---------------------------------------------------
+
+    def _make_sim(self, res: SolveResult,
+                  sim: Optional[SimConfig]) -> PipelineSimulator:
+        assert res.feasible and res.allocation.placement is not None, \
+            f"result of policy {res.policy or '?'} is not placeable"
+        return PipelineSimulator(
+            self.graph, res.allocation, self.cluster.device_spec,
+            res.comm if res.comm is not None else self.cluster.comm_model(),
+            sim=sim)
+
+    def simulate(self, load: Optional[float] = None,
+                 sim: Optional[SimConfig] = None,
+                 result: Optional[SolveResult] = None) -> SimResult:
+        """Charge the (last) solved allocation in the discrete-event
+        simulator at ``load`` qps (default: ``QoSSpec.load``'s level)."""
+        res = self._resolve_result(result)
+        if load is None:
+            if self.qos.load is None:
+                raise ValueError("simulate needs a load: pass load=... or "
+                                 "set QoSSpec.load")
+            load = self.qos.load.qps
+        return self._make_sim(res, sim).run(float(load))
+
+    def find_peak(self, sim: Optional[SimConfig] = None,
+                  result: Optional[SolveResult] = None, lo: float = 1.0,
+                  hi: float = 4096.0) -> Tuple[float, SimResult]:
+        """Binary-search the highest load whose simulated p99 meets the
+        QoS target (paper §IV-A methodology)."""
+        res = self._resolve_result(result)
+        return find_peak_load(lambda: self._make_sim(res, sim),
+                              self.qos_target, lo=lo, hi=hi)
+
+    # ---- 4. serve (live) -----------------------------------------------
+
+    def serve(self, stages=None, result: Optional[SolveResult] = None,
+              comm_mechanism: str = "auto", batch_timeout: float = 0.05,
+              seq_len: int = 16):
+        """A live ``PipelineEngine`` running the solved allocation on REAL
+        (reduced) models.  ``stages`` maps node i to its stage server;
+        omitted, servers are built from each node's model-zoo ``arch``."""
+        from repro.serving import ModelStageServer, PipelineEngine
+        res = self._resolve_result(result)
+        assert res.feasible and res.allocation.placement is not None, \
+            "cannot serve an infeasible allocation"
+        if stages is None:
+            missing = [n.name for n in self.graph.nodes if n.arch is None]
+            if missing:
+                raise ValueError(
+                    f"nodes {missing} carry no model-zoo arch; pass "
+                    "stage servers explicitly")
+            stages = [ModelStageServer(n.name, n.arch, seq_len=seq_len)
+                      for n in self.graph.nodes]
+        self._stages = list(stages)
+        return PipelineEngine(
+            self._stages, comm_mechanism=comm_mechanism,
+            qos_target=self.qos_target, batch_timeout=batch_timeout,
+            allocation=res.allocation,
+            comm_model=res.comm if res.comm is not None
+            else self.cluster.comm_model(),
+            graph=self.graph)
+
+    def make_trace(self, n: int, qps: float, seed: int = 0):
+        """A query trace shaped for the served entry node (vocab/seq_len
+        from its stage server) — call after ``serve()``."""
+        from repro.serving import make_trace
+        assert self._stages is not None, "serve() first — the trace needs " \
+            "the entry stage's vocabulary"
+        entry = self._stages[self.graph.entries[0]]
+        return make_trace(n, qps=qps, seq_len=entry.seq_len,
+                          vocab=entry.cfg.vocab_size, seed=seed)
+
+    # ---- 5. online runtime ---------------------------------------------
+
+    def runtime(self, rt: Optional[RuntimeConfig] = None,
+                sa=None) -> CamelotRuntime:
+        """The online reallocation loop (lazily built; solves the peak
+        allocation once on first use)."""
+        if self._runtime is None:
+            self._runtime = CamelotRuntime(
+                self.graph, self._require_predictor(),
+                self.cluster.device_spec, self.cluster.devices, self.batch,
+                rt=rt, sa=sa, comm=self.cluster.comm_model())
+        return self._runtime
+
+    def observe(self, qps: float) -> None:
+        self.runtime().observe(qps)
+
+    def reallocate(self, now: float = 0.0) -> Allocation:
+        """Delegate to ``CamelotRuntime.reallocate``: re-solve for the
+        current load estimate (warm-started from the previous allocation)
+        and push the result into an attached live engine."""
+        return self.runtime().reallocate(now)
+
+    def attach_engine(self, engine) -> None:
+        self.runtime().attach_engine(engine)

@@ -1,0 +1,276 @@
+"""Declarative control-plane specs: the data half of the ``repro.camelot``
+facade.
+
+Three frozen dataclasses describe a deployment completely:
+
+  * ``ServiceSpec`` — WHAT runs: the microservice DAG (nodes + explicit
+    edges with per-edge payload sizing; a chain shorthand covers the
+    paper's linear pipelines).
+  * ``ClusterSpec`` — WHERE it runs: device model and count, the compute
+    quota lattice, PCIe/interconnect bandwidths, and whether the
+    global-memory hand-off mechanism (paper §VI-B) is available.
+  * ``QoSSpec``    — HOW WELL it must run: tail percentile, end-to-end
+    latency target, and the offered-load model (``LoadSpec``).
+
+Every spec round-trips through plain dicts (``to_dict``/``from_dict`` with
+``spec == Spec.from_dict(spec.to_dict())``), so workloads and benchmark
+configurations are data — JSON/YAML-serialisable, diffable, and buildable
+without touching the internal layers.  ``ServiceSpec.build`` lowers the
+declarative form onto the executable ``ServiceGraph`` the allocator,
+simulator and live engine consume.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import asdict, dataclass, replace
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+from repro.core.comm import CommModel
+from repro.core.qos import QoSTracker
+from repro.core.types import (QUOTA_STEP, RTX_2080TI, TPU_V5E_DEV, V100,
+                              DeviceSpec, MicroserviceProfile, Pipeline,
+                              ServiceEdge, ServiceGraph)
+
+#: devices addressable by name in ``ClusterSpec.from_dict``
+KNOWN_DEVICES: Dict[str, DeviceSpec] = {
+    d.name: d for d in (RTX_2080TI, V100, TPU_V5E_DEV)}
+
+
+def _chain_edges(n_nodes: int) -> Tuple[ServiceEdge, ...]:
+    return tuple(ServiceEdge(i, i + 1) for i in range(n_nodes - 1))
+
+
+@dataclass(frozen=True)
+class ServiceSpec:
+    """A user-facing service as pure data: nodes, edges, QoS target.
+
+    ``nodes`` are ``MicroserviceProfile``s (already frozen dataclasses);
+    ``edges`` are ``ServiceEdge``s whose optional
+    ``payload_bytes_per_query`` overrides the default payload sizing.
+    ``from_dict`` accepts ``"edges": "chain"`` (or simply omits the key)
+    as the linear-pipeline shorthand.
+    """
+    name: str
+    nodes: Tuple[MicroserviceProfile, ...]
+    edges: Tuple[ServiceEdge, ...]
+    qos_target: float = 0.25           # end-to-end 99%-ile target (seconds)
+
+    def __post_init__(self):
+        object.__setattr__(self, "nodes", tuple(self.nodes))
+        object.__setattr__(self, "edges", tuple(self.edges))
+
+    # ---- constructors --------------------------------------------------
+
+    @classmethod
+    def chain(cls, name: str, nodes: Sequence[MicroserviceProfile],
+              qos_target: float = 0.25) -> "ServiceSpec":
+        """The paper's shape: node i feeds node i+1."""
+        return cls(name, tuple(nodes), _chain_edges(len(nodes)), qos_target)
+
+    @classmethod
+    def from_graph(cls, graph: ServiceGraph) -> "ServiceSpec":
+        """Lift an executable ``ServiceGraph``/``Pipeline`` back to data."""
+        return cls(graph.name, tuple(graph.nodes), tuple(graph.edges),
+                   graph.qos_target)
+
+    # ---- derived -------------------------------------------------------
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def is_chain(self) -> bool:
+        return self.edges == _chain_edges(len(self.nodes))
+
+    def build(self, qos: Optional["QoSSpec"] = None) -> ServiceGraph:
+        """Lower to the executable graph (``Pipeline`` for pure chains so
+        chain-era ``isinstance`` checks keep working).  ``qos`` overrides
+        the spec's latency target when it carries one."""
+        target = self.qos_target
+        if qos is not None and qos.latency_target is not None:
+            target = qos.latency_target
+        if self.is_chain:
+            return Pipeline(self.name, list(self.nodes), qos_target=target)
+        return ServiceGraph(self.name, list(self.nodes), list(self.edges),
+                            qos_target=target)
+
+    # ---- dict round-trip ----------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "qos_target": self.qos_target,
+            "nodes": [asdict(n) for n in self.nodes],
+            "edges": [asdict(e) for e in self.edges],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "ServiceSpec":
+        nodes = tuple(n if isinstance(n, MicroserviceProfile)
+                      else MicroserviceProfile(**n) for n in d["nodes"])
+        edges = d.get("edges", "chain")
+        if isinstance(edges, str):
+            if edges != "chain":
+                raise ValueError(f"unknown edges shorthand {edges!r}")
+            edges = _chain_edges(len(nodes))
+        else:
+            edges = tuple(e if isinstance(e, ServiceEdge)
+                          else ServiceEdge(**e) for e in edges)
+        return cls(d["name"], nodes, edges,
+                   qos_target=float(d.get("qos_target", 0.25)))
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """The accelerator fleet as data.
+
+    ``device`` carries the per-device model (compute, memory, MPS instance
+    limit, PCIe host link); ``pcie_total``/``pcie_stream`` override its
+    host-link bandwidths without redefining the whole device;
+    ``ici_bandwidth``/``ici_latency`` price the device-to-device
+    interconnect (NVLink/ICI); ``quota_step`` is the compute-quota lattice
+    every allocation snaps to (``quantize``).  NOTE: the SA solver's
+    decision lattice is the module-wide ``QUOTA_STEP`` grid — the solver
+    policies reject a cluster declaring any other ``quota_step`` (it is
+    honoured by ``quantize``-built demo allocations only).
+    """
+    devices: int = 2
+    device: DeviceSpec = RTX_2080TI
+    quota_step: float = QUOTA_STEP
+    pcie_total: Optional[float] = None     # override device.host_link_total
+    pcie_stream: Optional[float] = None    # override device.host_link_stream
+    ici_bandwidth: float = 50e9            # NVLink/ICI B/s
+    ici_latency: float = 2e-6
+    global_memory: bool = True             # §VI-B hand-off available
+
+    def __post_init__(self):
+        if self.devices < 1:
+            raise ValueError(f"devices must be >= 1, got {self.devices}")
+        if not 0.0 < self.quota_step <= 1.0:
+            raise ValueError(f"quota_step must be in (0, 1], got "
+                             f"{self.quota_step}")
+
+    # ---- derived -------------------------------------------------------
+
+    @property
+    def device_spec(self) -> DeviceSpec:
+        """The device with any cluster-level PCIe overrides applied."""
+        if self.pcie_total is None and self.pcie_stream is None:
+            return self.device
+        return replace(
+            self.device,
+            host_link_total=self.pcie_total
+            if self.pcie_total is not None else self.device.host_link_total,
+            host_link_stream=self.pcie_stream
+            if self.pcie_stream is not None else self.device.host_link_stream)
+
+    def quantize(self, quota: float) -> float:
+        """Snap a raw quota onto the lattice: the largest multiple of
+        ``quota_step`` that does not exceed ``quota`` (so per-device sums
+        stay packable), floored at one step and capped at a full device."""
+        units = math.floor(quota / self.quota_step + 1e-9)
+        q = max(1, min(units, round(1.0 / self.quota_step))) * self.quota_step
+        return round(q, 6)
+
+    def comm_model(self) -> CommModel:
+        return CommModel(self.device_spec,
+                         global_memory_enabled=self.global_memory,
+                         ici_bandwidth=self.ici_bandwidth,
+                         ici_latency=self.ici_latency)
+
+    # ---- dict round-trip ----------------------------------------------
+
+    def to_dict(self) -> dict:
+        dev = self.device
+        known = KNOWN_DEVICES.get(dev.name)
+        return {
+            "devices": self.devices,
+            "device": dev.name if known == dev else asdict(dev),
+            "quota_step": self.quota_step,
+            "pcie_total": self.pcie_total,
+            "pcie_stream": self.pcie_stream,
+            "ici_bandwidth": self.ici_bandwidth,
+            "ici_latency": self.ici_latency,
+            "global_memory": self.global_memory,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "ClusterSpec":
+        d = dict(d)
+        dev = d.get("device", RTX_2080TI)
+        if isinstance(dev, str):
+            if dev not in KNOWN_DEVICES:
+                raise ValueError(f"unknown device {dev!r}; known: "
+                                 f"{sorted(KNOWN_DEVICES)}")
+            dev = KNOWN_DEVICES[dev]
+        elif isinstance(dev, Mapping):
+            dev = DeviceSpec(**dev)
+        d["device"] = dev
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class LoadSpec:
+    """Offered-load model: a constant level or the diurnal pattern the
+    paper motivates Camelot with (§I)."""
+    kind: str = "constant"              # "constant" | "diurnal"
+    qps: float = 100.0                  # constant level / diurnal peak
+    period: float = 86_400.0            # diurnal period (seconds)
+    low_frac: float = 0.25              # diurnal trough as fraction of peak
+
+    def __post_init__(self):
+        if self.kind not in ("constant", "diurnal"):
+            raise ValueError(f"unknown load kind {self.kind!r}")
+
+    def fn(self) -> Callable[[float], float]:
+        """The load trace load(t) -> qps this spec describes."""
+        if self.kind == "constant":
+            qps = self.qps
+            return lambda t: qps
+        from repro.core.runtime import diurnal_load
+        return diurnal_load(self.qps, period=self.period,
+                            low_frac=self.low_frac)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "LoadSpec":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class QoSSpec:
+    """The service-level objective as data.
+
+    ``latency_target=None`` inherits the ``ServiceSpec``'s own target, so
+    one QoSSpec can drive a whole suite of services with per-service
+    targets; setting it overrides the service."""
+    latency_target: Optional[float] = None   # end-to-end target (seconds)
+    percentile: float = 99.0
+    load: Optional[LoadSpec] = None
+
+    def resolve_target(self, service: ServiceSpec) -> float:
+        return self.latency_target if self.latency_target is not None \
+            else service.qos_target
+
+    def tracker(self, service: ServiceSpec) -> QoSTracker:
+        return QoSTracker(target=self.resolve_target(service),
+                          percentile=self.percentile)
+
+    def to_dict(self) -> dict:
+        return {
+            "latency_target": self.latency_target,
+            "percentile": self.percentile,
+            "load": self.load.to_dict() if self.load is not None else None,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "QoSSpec":
+        load = d.get("load")
+        if isinstance(load, Mapping):
+            load = LoadSpec.from_dict(load)
+        return cls(latency_target=d.get("latency_target"),
+                   percentile=float(d.get("percentile", 99.0)),
+                   load=load)

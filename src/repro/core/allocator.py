@@ -168,6 +168,13 @@ class SolveResult:
     # stages' accumulated ``predict_time`` delta) and the mode that ran
     predictor_time: float = 0.0
     mode: str = "scalar"
+    # True when a previous Allocation seeded an extra annealing walker
+    # (CamelotRuntime re-solves pass their incumbent as warm_start)
+    warm_started: bool = False
+    # set by the repro.camelot facade policies: the CommModel the
+    # allocation was priced against and the registry name that produced it
+    comm: Optional[CommModel] = None
+    policy: str = ""
 
 
 class CamelotAllocator:
@@ -265,13 +272,19 @@ class CamelotAllocator:
     # ------------------------------------------------------------------
 
     def _anneal(self, batch: int, n_devices: int, objective: str,
-                required_load: Optional[float] = None) -> SolveResult:
+                required_load: Optional[float] = None,
+                warm: Optional[Allocation] = None) -> SolveResult:
         assert self.sa.mode in ("vectorized", "scalar"), self.sa.mode
-        solver = self._anneal_vec if self.sa.mode == "vectorized" \
-            else self._anneal_scalar
         pt0 = self.predictor.total_predict_time() \
             if hasattr(self.predictor, "total_predict_time") else 0.0
-        res = solver(batch, n_devices, objective, required_load)
+        if self.sa.mode == "vectorized":
+            res = self._anneal_vec(batch, n_devices, objective,
+                                   required_load, warm=warm)
+        else:
+            # warm starts are a vectorized-population feature (an extra
+            # walker); the paper-faithful scalar walk stays untouched
+            res = self._anneal_scalar(batch, n_devices, objective,
+                                      required_load)
         if hasattr(self.predictor, "total_predict_time"):
             res.predictor_time = self.predictor.total_predict_time() - pt0
         res.mode = self.sa.mode
@@ -493,8 +506,43 @@ class CamelotAllocator:
         self._apply_moves(NS, QI, r, r % n, r // n, max_inst, g)
         return NS, QI
 
+    def _polish(self, ns: np.ndarray, qi: np.ndarray, score: float,
+                scores, tab: "_PolicyTables", n_devices: int, max_inst: int,
+                g: int, history: List[float]):
+        """Greedy polish of one incumbent: exhaust its 6n single-move
+        neighbourhood until locally optimal (cheap — one batched eval per
+        round).  Ties on the objective break towards LOWER total quota:
+        plateau moves (e.g. scale-out at unchanged min-throughput) free
+        quota that later rounds spend on the bottleneck stage, and
+        strictly decreasing quota on plateaus rules out cycles.
+        Deterministic (no RNG); returns (ns, qi, score)."""
+        if not np.isfinite(score):
+            return ns, qi, score
+        best_quota = float((ns * tab.grid[qi]).sum())
+        for _ in range(max(0, self.sa.polish_rounds)):
+            NS, QI = self._neighbourhood(ns, qi, max_inst, g)
+            ev = self._eval_many(NS, QI, tab, n_devices)
+            s = scores(ev)
+            j = int(np.argmax(s))
+            if np.isfinite(s[j]) and s[j] > score + 1e-12:
+                pass                                 # strict improvement
+            else:
+                ties = np.flatnonzero(
+                    np.isfinite(s) & (s >= score - 1e-12))
+                if not ties.size:
+                    break
+                j = int(ties[np.argmin(ev[1][ties])])
+                if ev[1][j] >= best_quota - 1e-12:
+                    break                            # local optimum
+            score = float(s[j])
+            best_quota = float(ev[1][j])
+            ns, qi = NS[j].copy(), QI[j].copy()
+            history.append(score)
+        return ns, qi, score
+
     def _anneal_vec(self, batch: int, n_devices: int, objective: str,
-                    required_load: Optional[float] = None) -> SolveResult:
+                    required_load: Optional[float] = None,
+                    warm: Optional[Allocation] = None) -> SolveResult:
         t_start = time.perf_counter()
         sa = self.sa
         rng = np.random.default_rng(sa.seed)
@@ -544,12 +592,38 @@ class CamelotAllocator:
             QI_cur[wi] = qi_b
             NS_cur[wi] = np.clip(np.rint(t_bal / f).astype(np.int64), 1,
                                  max_inst)
+        # warm start (diurnal re-solves): ONE extra walker seeded from the
+        # previous allocation, drawing from its OWN RNG stream.  The base
+        # walkers consume exactly the draws of a cold solve, so their
+        # trajectories — and hence the cold incumbent — stay bit-identical
+        # with or without the warm walker; the warm walker only ever ADDS
+        # explored states, and both incumbents get the deterministic greedy
+        # polish at the end, so a warm-started re-solve can never return a
+        # worse objective than the cold solve it replaces.
+        n_warm = 0
+        if warm is not None and len(warm.stages) == n:
+            wns = np.clip(np.array([s.n_instances for s in warm.stages],
+                                   np.int64), 1, max_inst)
+            wqi = np.clip(np.rint(np.array(
+                [s.quota for s in warm.stages]) / QUOTA_STEP).astype(
+                    np.int64) - 1, 0, g - 1)
+            NS_cur = np.vstack([NS_cur, wns[None]])
+            QI_cur = np.vstack([QI_cur, wqi[None]])
+            n_warm = 1
+        rng_w = np.random.default_rng(sa.seed + 0x7A31)
+        w_all = w + n_warm
+        base_rows = w * c                    # candidate rows of base walkers
         cur = scores(self._eval_many(NS_cur, QI_cur, tab, n_devices))
         j0 = int(np.argmax(cur))
         best_ns, best_qi = NS_cur[j0].copy(), QI_cur[j0].copy()
         best_score = float(cur[j0])
+        # the cold incumbent: best over base walkers only (== the whole
+        # population when no warm seed was injected)
+        jb0 = int(np.argmax(cur[:w]))
+        base_ns, base_qi = NS_cur[jb0].copy(), QI_cur[jb0].copy()
+        base_score = float(cur[jb0])
         history: List[float] = []
-        wr = np.arange(w)
+        wr = np.arange(w_all)
 
         # align the proposed-mutation budget with the scalar iteration count
         steps = max(1, -(-sa.iterations * n_mut // (w * c)))  # ceil division
@@ -559,28 +633,47 @@ class CamelotAllocator:
             QI = np.repeat(QI_cur, c, axis=0)
             # compound candidates: each row stacks 1..max_mutations random
             # single moves, so one population step can jump several hops of
-            # the scalar walk at once
-            muts = rng.integers(1, n_mut + 1, size=w * c)
+            # the scalar walk at once.  Base walkers draw from ``rng``
+            # (cold-solve stream), the warm walker from ``rng_w``.
+            muts = np.empty(w_all * c, np.int64)
+            muts[:base_rows] = rng.integers(1, n_mut + 1, size=base_rows)
+            if n_warm:
+                muts[base_rows:] = rng_w.integers(1, n_mut + 1,
+                                                  size=n_warm * c)
             for t in range(n_mut):
                 rows = np.flatnonzero(muts > t)
                 if not len(rows):
                     break
-                self._apply_moves(NS, QI, rows,
-                                  rng.integers(n, size=len(rows)),
-                                  rng.integers(6, size=len(rows)),
-                                  max_inst, g)
+                base = rows[rows < base_rows]
+                if len(base):
+                    self._apply_moves(NS, QI, base,
+                                      rng.integers(n, size=len(base)),
+                                      rng.integers(6, size=len(base)),
+                                      max_inst, g)
+                wrows = rows[rows >= base_rows]
+                if len(wrows):
+                    self._apply_moves(NS, QI, wrows,
+                                      rng_w.integers(n, size=len(wrows)),
+                                      rng_w.integers(6, size=len(wrows)),
+                                      max_inst, g)
             s_flat = scores(self._eval_many(NS, QI, tab, n_devices))
-            s = s_flat.reshape(w, c)
+            s = s_flat.reshape(w_all, c)
             # candidate selection anneals from explorative to greedy: while
             # hot, a walker Metropolis-tests a RANDOM feasible proposal
             # (the scalar walk's behaviour — argmax here would commit every
             # walker to the nearest basin); when cold it takes its best
             jc = np.argmax(s, axis=1)                # per-walker best
-            explore = rng.random(w) < min(temp, 1.0)
-            if explore.any():
-                jr = rng.integers(c, size=w)
-                # fall back to argmax when the random pick is infeasible
-                jc = np.where(explore & np.isfinite(s[wr, jr]), jr, jc)
+            explore = np.empty(w_all, bool)
+            explore[:w] = rng.random(w) < min(temp, 1.0)
+            if n_warm:
+                explore[w:] = rng_w.random(n_warm) < min(temp, 1.0)
+            jr = jc.copy()
+            if explore[:w].any():
+                jr[:w] = rng.integers(c, size=w)
+            if n_warm:
+                jr[w:] = rng_w.integers(c, size=n_warm)
+            # fall back to argmax when the random pick is infeasible
+            jc = np.where(explore & np.isfinite(s[wr, jr]), jr, jc)
             sj = s[wr, jc]
             picked = wr * c + jc
             # vectorized Metropolis per walker (a walker whose current
@@ -593,7 +686,11 @@ class CamelotAllocator:
                 prob = np.exp(np.minimum(
                     gap / np.maximum(temp * np.abs(cur_safe) + 1e-12,
                                      1e-12), 0.0))
-            accept = finite & ((gap >= 0) | (rng.random(w) < prob))
+            u = np.empty(w_all)
+            u[:w] = rng.random(w)
+            if n_warm:
+                u[w:] = rng_w.random(n_warm)
+            accept = finite & ((gap >= 0) | (u < prob))
             rows = picked[accept]
             NS_cur[accept] = NS[rows]
             QI_cur[accept] = QI[rows]
@@ -606,36 +703,33 @@ class CamelotAllocator:
                                             or not np.isfinite(best_score)):
                 best_score = float(s_flat[jb])
                 best_ns, best_qi = NS[jb].copy(), QI[jb].copy()
+            jbb = int(np.argmax(s_flat[:base_rows]))
+            if np.isfinite(s_flat[jbb]) and (s_flat[jbb] > base_score
+                                             or not np.isfinite(base_score)):
+                base_score = float(s_flat[jbb])
+                base_ns, base_qi = NS[jbb].copy(), QI[jbb].copy()
             history.append(best_score)
 
-        # greedy polish: exhaust the 6n single-move neighbourhood of the
-        # incumbent until it is locally optimal (cheap — one batched eval
-        # per round).  Ties on the objective break towards LOWER total
-        # quota: plateau moves (e.g. scale-out at unchanged min-throughput)
-        # free quota that later rounds spend on the bottleneck stage, and
-        # strictly decreasing quota on plateaus rules out cycles.
-        if np.isfinite(best_score):
-            best_quota = float(
-                (best_ns * tab.grid[best_qi]).sum())
-            for _ in range(max(0, sa.polish_rounds)):
-                NS, QI = self._neighbourhood(best_ns, best_qi, max_inst, g)
-                ev = self._eval_many(NS, QI, tab, n_devices)
-                s = scores(ev)
-                j = int(np.argmax(s))
-                if np.isfinite(s[j]) and s[j] > best_score + 1e-12:
-                    pass                             # strict improvement
-                else:
-                    ties = np.flatnonzero(
-                        np.isfinite(s) & (s >= best_score - 1e-12))
-                    if not ties.size:
-                        break
-                    j = int(ties[np.argmin(ev[1][ties])])
-                    if ev[1][j] >= best_quota - 1e-12:
-                        break                        # local optimum
-                best_score = float(s[j])
-                best_quota = float(ev[1][j])
-                best_ns, best_qi = NS[j].copy(), QI[j].copy()
-                history.append(best_score)
+        # greedy polish of the incumbent(s).  A warm-started solve polishes
+        # BOTH the overall incumbent and the cold (base-walker) incumbent
+        # and keeps the winner: polish is deterministic, so the runner-up
+        # branch reproduces the cold solve's final state exactly and the
+        # warm result is >= it by construction.
+        best_ns, best_qi, best_score = self._polish(
+            best_ns, best_qi, best_score, scores, tab, n_devices, max_inst,
+            g, history)
+        if n_warm:
+            base_ns, base_qi, base_score = self._polish(
+                base_ns, base_qi, base_score, scores, tab, n_devices,
+                max_inst, g, history)
+            better = base_score > best_score + 1e-12
+            if not better and np.isfinite(base_score) and \
+                    abs(base_score - best_score) <= 1e-12:
+                # tie-break as the polish does: lower total quota wins
+                better = float((base_ns * tab.grid[base_qi]).sum()) < \
+                    float((best_ns * tab.grid[best_qi]).sum()) - 1e-12
+            if better:
+                best_ns, best_qi, best_score = base_ns, base_qi, base_score
 
         ns, ps = best_ns, tab.grid[best_qi]
         thpt, quota, lat, feas = self._eval_many(
@@ -654,15 +748,21 @@ class CamelotAllocator:
                            objective=best_score if feasible else -math.inf,
                            feasible=feasible,
                            solve_time=time.perf_counter() - t_start,
-                           iterations=sa.iterations, history=history)
+                           iterations=sa.iterations, history=history,
+                           warm_started=bool(n_warm))
 
     # ------------------------------------------------------------------
     # Public policies
     # ------------------------------------------------------------------
 
-    def solve_max_load(self, batch: int) -> SolveResult:
-        """Case 1 (Eq. 1): maximise the peak supported load."""
-        return self._anneal(batch, self.n_devices, "max_load")
+    def solve_max_load(self, batch: int,
+                       warm_start: Optional[Allocation] = None,
+                       ) -> SolveResult:
+        """Case 1 (Eq. 1): maximise the peak supported load.
+        ``warm_start`` seeds the vectorized search from a previous
+        allocation (periodic re-solves)."""
+        return self._anneal(batch, self.n_devices, "max_load",
+                            warm=warm_start)
 
     def min_devices(self, batch: int, load: float) -> int:
         """Eq. 2: y = max(ΣC(i,s)/G, ΣM(i,s)/F) scaled to the target load."""
@@ -677,13 +777,19 @@ class CamelotAllocator:
                 mem_demand / dev.mem_capacity)
         return max(1, int(math.ceil(y - 1e-9)))
 
-    def solve_min_resource(self, batch: int, load: float) -> SolveResult:
-        """Case 2 (Eq. 2 + Eq. 3): minimise resource usage at ``load`` qps."""
+    def solve_min_resource(self, batch: int, load: float,
+                           warm_start: Optional[Allocation] = None,
+                           ) -> SolveResult:
+        """Case 2 (Eq. 2 + Eq. 3): minimise resource usage at ``load`` qps.
+        ``warm_start`` seeds every rung of the Eq. 2 device ladder with a
+        previous allocation (diurnal re-solves revisit near-identical
+        problems, so the incumbent is usually one polish away)."""
         y = self.min_devices(batch, load)
         while y <= self.n_devices:
-            res = self._anneal(batch, y, "min_resource", required_load=load)
+            res = self._anneal(batch, y, "min_resource", required_load=load,
+                               warm=warm_start)
             if res.feasible:
                 return res
             y += 1   # infeasible at y devices: grow (Eq. 2 is a lower bound)
         return self._anneal(batch, self.n_devices, "min_resource",
-                            required_load=load)
+                            required_load=load, warm=warm_start)

@@ -1,8 +1,19 @@
-"""QoS tracking: latency percentiles, violation accounting."""
+"""QoS tracking: latency percentiles, violation accounting.
+
+The latency buffer is a *bounded sliding window* (``deque(maxlen=window)``):
+a long-running engine or a months-long simulated trace records millions of
+latencies, and an unbounded list would grow memory without limit.
+``tail_latency``/``mean`` are charged over the most recent ``window``
+samples — at the 200k default every repo workload (sim ``max_queries`` is
+60k) still sees every sample, so percentile semantics are unchanged —
+while ``count()`` reports ALL samples ever recorded (completion
+accounting must not forget evicted queries).
+"""
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import List
+from typing import Deque, Optional
 
 import numpy as np
 
@@ -11,15 +22,27 @@ import numpy as np
 class QoSTracker:
     target: float                      # end-to-end 99%-ile target (seconds)
     percentile: float = 99.0
-    latencies: List[float] = field(default_factory=list)
+    window: Optional[int] = 200_000    # sliding-window bound (None: unbounded)
+    latencies: Deque[float] = field(default_factory=deque)
+    recorded: int = 0                  # total samples ever recorded
+
+    def __post_init__(self):
+        # normalise whatever was passed (list literals in tests, a deque
+        # with the wrong bound) onto a deque bounded by ``window``
+        if not isinstance(self.latencies, deque) \
+                or self.latencies.maxlen != self.window:
+            self.latencies = deque(self.latencies, maxlen=self.window)
+        self.recorded = max(self.recorded, len(self.latencies))
 
     def record(self, latency: float) -> None:
         self.latencies.append(latency)
+        self.recorded += 1
 
     def tail_latency(self) -> float:
         if not self.latencies:
             return 0.0
-        return float(np.percentile(self.latencies, self.percentile))
+        return float(np.percentile(np.asarray(self.latencies),
+                                   self.percentile))
 
     def normalized_tail(self) -> float:
         """p99 / target: > 1.0 means QoS violation (paper Figs. 14/17)."""
@@ -29,7 +52,10 @@ class QoSTracker:
         return self.tail_latency() > self.target
 
     def mean(self) -> float:
-        return float(np.mean(self.latencies)) if self.latencies else 0.0
+        if not self.latencies:
+            return 0.0
+        return float(np.mean(np.asarray(self.latencies)))
 
     def count(self) -> int:
-        return len(self.latencies)
+        """Total latencies recorded (NOT capped by the window)."""
+        return self.recorded

@@ -29,6 +29,8 @@ class RuntimeConfig:
     headroom: float = 1.25             # provision for estimate × headroom
     peak_switch_frac: float = 0.8      # above this fraction of peak, use
                                        # the max-load allocation outright
+    warm_start: bool = True            # seed re-solves from the previous
+                                       # allocation (vectorized walkers)
 
 
 @dataclass
@@ -38,6 +40,8 @@ class ReallocationEvent:
     provisioned_for: float
     total_quota: float
     feasible: bool
+    objective: float = 0.0             # the solve's objective at this event
+    warm_started: bool = False         # previous allocation seeded the solve
 
 
 class CamelotRuntime:
@@ -47,12 +51,17 @@ class CamelotRuntime:
     ``reallocate`` then pushes the fresh allocation into the running engine
     (applied between batches via ``PipelineEngine.apply_allocation``), so
     the same runtime object manages both the simulated and the live world.
+
+    The ``repro.camelot`` facade exposes this loop as
+    ``CamelotSession.runtime()/observe()/reallocate()`` — prefer that entry
+    point in new code; this constructor keeps its historical signature.
     """
 
     def __init__(self, pipeline: ServiceGraph, predictor: PipelinePredictor,
                  device: DeviceSpec, n_devices: int, batch: int,
                  rt: Optional[RuntimeConfig] = None,
-                 sa: Optional[SAConfig] = None):
+                 sa: Optional[SAConfig] = None,
+                 comm: Optional[CommModel] = None):
         self.pipeline = pipeline
         self.predictor = predictor
         self.device = device
@@ -61,7 +70,10 @@ class CamelotRuntime:
         # configs default per-instance: a shared mutable default would leak
         # state between runtimes
         self.rt = rt if rt is not None else RuntimeConfig()
-        self.comm = CommModel(device, global_memory_enabled=True)
+        # comm pricing must match whatever the offline solves used — the
+        # facade passes its ClusterSpec.comm_model() here
+        self.comm = comm if comm is not None \
+            else CommModel(device, global_memory_enabled=True)
         self.allocator = CamelotAllocator(pipeline, predictor, device,
                                           n_devices, comm=self.comm, sa=sa)
         peak = self.allocator.solve_max_load(batch)
@@ -69,6 +81,7 @@ class CamelotRuntime:
         self.peak_qps = peak.objective if peak.feasible else 0.0
         self._load_est = 0.0
         self.current: Allocation = peak.allocation
+        self.last_result: SolveResult = peak
         self.history: List[ReallocationEvent] = []
         self._engine = None
 
@@ -88,27 +101,34 @@ class CamelotRuntime:
         return self._load_est
 
     def reallocate(self, now: float) -> Allocation:
-        """Re-solve for the current load estimate; returns the allocation."""
+        """Re-solve for the current load estimate; returns the allocation.
+        Min-resource re-solves are warm-started from the incumbent
+        allocation (``rt.warm_start``): the diurnal loop revisits
+        near-identical problems, so the previous solution seeds an extra
+        annealing walker and the result is pinned >= the cold solve."""
         target = self._load_est * self.rt.headroom
         if self.peak_qps and target >= self.rt.peak_switch_frac * self.peak_qps:
-            alloc, provisioned, feasible = (self.peak_result.allocation,
-                                            self.peak_qps,
-                                            self.peak_result.feasible)
+            res = self.peak_result
+            alloc, provisioned, feasible = (res.allocation, self.peak_qps,
+                                            res.feasible)
         else:
-            res = self.allocator.solve_min_resource(self.batch,
-                                                    load=max(target, 1.0))
+            res = self.allocator.solve_min_resource(
+                self.batch, load=max(target, 1.0),
+                warm_start=self.current if self.rt.warm_start else None)
             if res.feasible:
                 alloc, provisioned, feasible = (res.allocation, target, True)
             else:                       # fall back to the peak allocation
                 alloc, provisioned, feasible = (self.peak_result.allocation,
                                                 self.peak_qps, False)
+        self.last_result = res
         self.current = alloc
         if self._engine is not None and alloc.placement is not None:
             self._engine.apply_allocation(alloc)
         self.history.append(ReallocationEvent(
             time=now, load_estimate=self._load_est,
             provisioned_for=provisioned,
-            total_quota=alloc.total_quota(), feasible=feasible))
+            total_quota=alloc.total_quota(), feasible=feasible,
+            objective=res.objective, warm_started=res.warm_started))
         return alloc
 
     # ------------------------------------------------------------------

@@ -4,12 +4,13 @@ from repro.sim.simulator import (PipelineSimulator, SimConfig, SimResult,
                                  find_peak_load)
 from repro.sim.workloads import (artifact_pipelines, artifact_stage,
                                  camelot_suite, dag_suite, diamond_service,
-                                 ensemble_service, shared_backbone_service)
+                                 ensemble_service, shared_backbone_service,
+                                 workload_specs)
 
 __all__ = [
     "camelot", "camelot_min_resource", "camelot_nc", "even_allocation",
     "laius", "standalone", "PipelineSimulator", "SimConfig", "SimResult",
     "find_peak_load", "artifact_pipelines", "artifact_stage", "camelot_suite",
     "dag_suite", "diamond_service", "ensemble_service",
-    "shared_backbone_service",
+    "shared_backbone_service", "workload_specs",
 ]

@@ -17,6 +17,13 @@ allocations.  Camelot itself is graph-aware through ``CamelotAllocator``
     contention-unaware.
   * ``camelot``         — the full system (SA allocator, global-memory comm).
   * ``camelot_nc``      — Camelot without the bandwidth constraint (§VIII-D).
+
+NOTE: new code should prefer the ``repro.camelot`` policy registry
+(``session.solve(policy="even" | "laius" | "max-peak" | ...)``), which
+wraps these functions behind one ``Policy`` interface and returns
+``SolveResult``s carrying their ``CommModel``.  The functions below remain
+the implementations the registry delegates to and keep their historical
+signatures for hand-wired callers.
 """
 from __future__ import annotations
 

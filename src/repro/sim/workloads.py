@@ -194,6 +194,22 @@ def dag_suite(device: DeviceSpec = RTX_2080TI) -> Dict[str, ServiceGraph]:
     }
 
 
+def workload_specs(device: DeviceSpec = RTX_2080TI,
+                   include_artifacts: bool = False) -> Dict:
+    """Every suite workload as declarative data: the chain suite plus the
+    DAG suite (and optionally the 27 artifact pipelines) lifted to
+    ``repro.camelot.ServiceSpec`` — the facade's spec-driven entry point
+    for examples and benchmarks."""
+    # function-level import: repro.camelot sits ABOVE this module (its
+    # session imports repro.sim), so a module-level import would cycle
+    from repro.camelot.specs import ServiceSpec
+    graphs: Dict[str, ServiceGraph] = {**camelot_suite(device),
+                                       **dag_suite(device)}
+    if include_artifacts:
+        graphs.update(artifact_pipelines(device))
+    return {name: ServiceSpec.from_graph(g) for name, g in graphs.items()}
+
+
 # --------------------------------------------------------------------------
 # Artifact benchmark (§III-B): parametric c/m/p-intensive stages
 # --------------------------------------------------------------------------

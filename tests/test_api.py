@@ -1,0 +1,302 @@
+"""The `repro.camelot` facade: spec round-tripping, session end-to-end
+parity with the hand-wired layers, and policy-registry dispatch.
+
+The parity tests are the facade's core contract: driving the loop through
+``CamelotSession`` + the policy registry must produce the SAME allocation
+and the SAME simulated latencies as wiring ``PipelinePredictor`` →
+``CamelotAllocator`` → ``PipelineSimulator`` by hand — the facade only
+wires, it never changes results.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.camelot import (CamelotSession, ClusterSpec, LoadSpec,
+                           MaxPeakPolicy, QoSSpec, SAConfig, ServiceSpec,
+                           UnknownPolicyError, available_policies,
+                           get_policy, register_policy)
+from repro.camelot.policies import _REGISTRY
+from repro.core import (CamelotAllocator, CommModel, PipelinePredictor,
+                        RTX_2080TI)
+from repro.core.types import MicroserviceProfile, Pipeline, ServiceEdge
+from repro.sim import PipelineSimulator, SimConfig, dag_suite
+from repro.sim.baselines import even_allocation
+from repro.sim.workloads import workload_specs
+
+SA = SAConfig(iterations=500, seed=0)
+
+
+# --------------------------------------------------------------------------
+# Spec round-tripping
+# --------------------------------------------------------------------------
+
+ALL_SPECS = workload_specs(include_artifacts=True)
+
+
+@pytest.mark.parametrize("name", sorted(ALL_SPECS))
+def test_service_spec_roundtrip(name):
+    spec = ALL_SPECS[name]
+    assert ServiceSpec.from_dict(spec.to_dict()) == spec
+    # through JSON: the dict must be plain serialisable data
+    assert ServiceSpec.from_dict(json.loads(json.dumps(
+        spec.to_dict()))) == spec
+
+
+@pytest.mark.parametrize("name", sorted(dag_suite()))
+def test_dag_spec_build_matches_source_graph(name):
+    graph = dag_suite()[name]
+    spec = ServiceSpec.from_dict(ServiceSpec.from_graph(graph).to_dict())
+    built = spec.build()
+    assert built.name == graph.name
+    assert built.nodes == list(graph.nodes)
+    assert built.edges == list(graph.edges)
+    assert built.qos_target == graph.qos_target
+    assert built.topo_order == graph.topo_order
+
+
+def test_chain_shorthand():
+    nodes = list(ALL_SPECS["img-to-img"].nodes)
+    spec = ServiceSpec.chain("c", nodes, qos_target=0.2)
+    assert spec.is_chain
+    # from_dict with the "chain" shorthand (or no edges key at all)
+    d = spec.to_dict()
+    d["edges"] = "chain"
+    assert ServiceSpec.from_dict(d) == spec
+    del d["edges"]
+    assert ServiceSpec.from_dict(d) == spec
+    assert isinstance(spec.build(), Pipeline)
+    with pytest.raises(ValueError):
+        ServiceSpec.from_dict({**spec.to_dict(), "edges": "ring"})
+
+
+def test_payload_override_survives_roundtrip_and_build():
+    nodes = list(ALL_SPECS["img-to-img"].nodes)
+    spec = ServiceSpec("p", nodes, (ServiceEdge(0, 1, 123.0),))
+    back = ServiceSpec.from_dict(spec.to_dict())
+    assert back.edges[0].payload_bytes_per_query == 123.0
+    assert back.build().edge_nbytes(0, 1, 4) == 123.0 * 4
+
+
+def test_cluster_spec_roundtrip_and_quantize():
+    c = ClusterSpec(devices=4, quota_step=0.05, pcie_total=10e9,
+                    global_memory=False)
+    assert ClusterSpec.from_dict(c.to_dict()) == c
+    assert ClusterSpec.from_dict(json.loads(json.dumps(c.to_dict()))) == c
+    # named device survives; PCIe override lands in device_spec
+    assert c.to_dict()["device"] == "rtx2080ti"
+    assert c.device_spec.host_link_total == 10e9
+    assert not c.comm_model().global_memory_enabled
+    # quantize: floor onto the lattice, clamped to [step, 1.0]
+    assert c.quantize(1 / 3) == pytest.approx(0.30)
+    assert c.quantize(0.05) == pytest.approx(0.05)   # exact multiple kept
+    assert c.quantize(0.001) == pytest.approx(0.05)
+    assert c.quantize(7.0) == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        ClusterSpec(devices=0)
+    with pytest.raises(ValueError):
+        ClusterSpec.from_dict({"device": "h100-does-not-exist"})
+
+
+def test_qos_spec_roundtrip_and_load_model():
+    q = QoSSpec(latency_target=0.3, percentile=95.0,
+                load=LoadSpec(kind="diurnal", qps=500.0, period=3600.0))
+    assert QoSSpec.from_dict(json.loads(json.dumps(q.to_dict()))) == q
+    fn = q.load.fn()
+    assert fn(0) == pytest.approx(125.0, rel=0.01)          # trough
+    assert fn(1800) == pytest.approx(500.0, rel=0.01)       # peak
+    assert LoadSpec(qps=42.0).fn()(123.0) == 42.0           # constant
+    with pytest.raises(ValueError):
+        LoadSpec(kind="sawtooth")
+    # latency_target=None inherits the service's own target
+    spec = ALL_SPECS["diamond"]
+    assert QoSSpec().resolve_target(spec) == spec.qos_target
+    assert QoSSpec(latency_target=0.5).resolve_target(spec) == 0.5
+
+
+# --------------------------------------------------------------------------
+# Session end-to-end parity with the hand-wired path
+# --------------------------------------------------------------------------
+
+def _hand_wired(graph, n_devices, batch):
+    pred = PipelinePredictor.from_graph(graph, RTX_2080TI, seed=0)
+    comm = CommModel(RTX_2080TI)
+    alloc = CamelotAllocator(graph, pred, RTX_2080TI, n_devices,
+                             comm=comm, sa=SA)
+    res = alloc.solve_max_load(batch)
+    sim = PipelineSimulator(graph, res.allocation, RTX_2080TI, comm,
+                            sim=SimConfig(duration=4.0, warmup=0.5, seed=0))
+    return res, sim.run(max(res.objective * 0.5, 1.0))
+
+
+def _facade(spec, n_devices, batch):
+    sess = CamelotSession(spec, ClusterSpec(devices=n_devices), batch=batch)
+    res = sess.solve(policy="max-peak", sa=SA)
+    r = sess.simulate(load=max(res.objective * 0.5, 1.0),
+                      sim=SimConfig(duration=4.0, warmup=0.5, seed=0))
+    return res, r
+
+
+@pytest.mark.parametrize("name,n_devices", [("img-to-img", 2),
+                                            ("diamond", 4)])
+def test_session_parity_with_hand_wired(name, n_devices):
+    spec = ALL_SPECS[name]
+    hand_res, hand_sim = _hand_wired(spec.build(), n_devices, batch=8)
+    face_res, face_sim = _facade(spec, n_devices, batch=8)
+    # same allocation, bit for bit
+    assert face_res.feasible == hand_res.feasible
+    assert face_res.objective == hand_res.objective
+    assert [(s.n_instances, s.quota, s.batch)
+            for s in face_res.allocation.stages] == \
+        [(s.n_instances, s.quota, s.batch)
+         for s in hand_res.allocation.stages]
+    assert face_res.allocation.placement.per_stage == \
+        hand_res.allocation.placement.per_stage
+    # same simulated latencies
+    assert face_sim.p99 == hand_sim.p99
+    assert face_sim.mean_latency == hand_sim.mean_latency
+    assert face_sim.completed == hand_sim.completed
+
+
+def test_session_accepts_graph_and_dict():
+    graph = dag_suite()["diamond"]
+    spec = ServiceSpec.from_graph(graph)
+    from_graph = CamelotSession(graph)
+    from_dict = CamelotSession(spec.to_dict())
+    assert from_graph.service == spec == from_dict.service
+
+
+def test_session_fit_from_samples_matches_profile():
+    from repro.core.predictor import collect_samples
+    spec = ALL_SPECS["img-to-img"]
+    sess = CamelotSession(spec, ClusterSpec(devices=2))
+    auto = sess.profile().stages
+    manual = CamelotSession(spec, ClusterSpec(devices=2)).fit_from_samples(
+        [collect_samples(node, RTX_2080TI, seed=i)
+         for i, node in enumerate(spec.nodes)]).stages
+    for a, m in zip(auto, manual):
+        assert a.duration(8, 0.5) == m.duration(8, 0.5)
+        assert a.throughput(8, 0.5) == m.throughput(8, 0.5)
+
+
+# --------------------------------------------------------------------------
+# Policy registry
+# --------------------------------------------------------------------------
+
+def test_builtin_policies_registered():
+    names = available_policies()
+    for expect in ("max-peak", "min-resource", "even", "standalone",
+                   "laius", "camelot-nc"):
+        assert expect in names
+
+
+def test_unknown_policy_error():
+    with pytest.raises(UnknownPolicyError) as ei:
+        get_policy("does-not-exist")
+    assert "does-not-exist" in str(ei.value)
+    assert "max-peak" in str(ei.value)          # lists what IS available
+    sess = CamelotSession(ALL_SPECS["img-to-img"])
+    with pytest.raises(UnknownPolicyError):
+        sess.solve(policy="does-not-exist")
+
+
+def test_even_policy_matches_baseline():
+    spec = ALL_SPECS["img-to-img"]
+    sess = CamelotSession(spec, ClusterSpec(devices=2), batch=8)
+    res = sess.solve(policy="even")
+    base_alloc, base_comm = even_allocation(spec.build(), RTX_2080TI, 2, 8)
+    assert [(s.n_instances, s.quota) for s in res.allocation.stages] == \
+        [(s.n_instances, s.quota) for s in base_alloc.stages]
+    assert res.comm.global_memory_enabled == base_comm.global_memory_enabled
+    assert res.policy == "even" and res.mode == "closed-form"
+    assert res.feasible and res.objective > 0
+
+
+def test_min_resource_policy_load_resolution():
+    spec = ALL_SPECS["img-to-img"]
+    sess = CamelotSession(spec, ClusterSpec(devices=2), batch=8)
+    with pytest.raises(ValueError):         # no load target anywhere
+        sess.solve(policy="min-resource", sa=SA)
+    # QoSSpec.load supplies the target
+    sess2 = CamelotSession(spec, ClusterSpec(devices=2),
+                           QoSSpec(load=LoadSpec(qps=50.0)), batch=8)
+    res = sess2.solve(policy="min-resource", sa=SA)
+    assert res.feasible and res.policy == "min-resource"
+    assert res.allocation.total_quota() < 2.0   # right-sized below peak
+
+
+def test_register_custom_policy_dispatch():
+    class FixedPolicy:
+        name = "fixed-even"
+
+        def solve(self, spec, predictor, cluster, qos, batch=8):
+            alloc, comm = even_allocation(spec.build(qos),
+                                          cluster.device_spec,
+                                          cluster.devices, batch)
+            from repro.core.allocator import SolveResult
+            res = SolveResult(allocation=alloc, objective=1.0,
+                              feasible=True, solve_time=0.0, iterations=0)
+            res.comm, res.policy = comm, self.name
+            return res
+
+    try:
+        register_policy(FixedPolicy())      # class instances register
+        assert "fixed-even" in available_policies()
+        sess = CamelotSession(ALL_SPECS["img-to-img"],
+                              ClusterSpec(devices=2))
+        res = sess.solve(policy="fixed-even")
+        assert res.policy == "fixed-even" and res.feasible
+        # duplicate names are rejected unless overwrite is explicit
+        with pytest.raises(ValueError):
+            register_policy(FixedPolicy())
+        register_policy(FixedPolicy(), overwrite=True)
+    finally:
+        _REGISTRY.pop("fixed-even", None)
+
+
+def test_solver_policies_reject_off_lattice_quota_step():
+    """The SA solver's decision lattice is the module-wide QUOTA_STEP grid;
+    a cluster declaring another quota_step must fail loudly (quantize()
+    still honours it for demo allocations)."""
+    sess = CamelotSession(ALL_SPECS["img-to-img"],
+                          ClusterSpec(devices=2, quota_step=0.1))
+    with pytest.raises(ValueError, match="QUOTA_STEP"):
+        sess.solve(policy="max-peak", sa=SA)
+    assert ClusterSpec(quota_step=0.1).quantize(0.17) == pytest.approx(0.1)
+
+
+def test_session_runtime_inherits_cluster_comm():
+    """The online loop must price communication exactly as the offline
+    solves did: ClusterSpec.comm_model() flows into CamelotRuntime."""
+    spec = ALL_SPECS["img-to-img"]
+    cluster = ClusterSpec(devices=2, global_memory=False, ici_bandwidth=9e9)
+    sess = CamelotSession(spec, cluster, batch=8)
+    rt = sess.runtime(sa=SA)
+    assert not rt.comm.global_memory_enabled
+    assert rt.comm.ici_bandwidth == 9e9
+    assert rt.allocator.comm is rt.comm
+
+
+def test_policy_instance_passthrough():
+    pol = MaxPeakPolicy(sa=SA, name="local-max")   # NOT registered
+    sess = CamelotSession(ALL_SPECS["img-to-img"], ClusterSpec(devices=2),
+                          batch=8)
+    res = sess.solve(policy=pol)
+    assert res.policy == "local-max" and res.feasible
+    assert "local-max" not in available_policies()
+
+
+# --------------------------------------------------------------------------
+# Session serving (live engine wiring)
+# --------------------------------------------------------------------------
+
+def test_session_serve_runs_solved_allocation_live():
+    spec = ALL_SPECS["text-to-text"]
+    sess = CamelotSession(spec, ClusterSpec(devices=2), batch=4)
+    res = sess.solve(policy="max-peak", sa=SA)
+    eng = sess.serve(result=res)
+    assert len(eng.stages) == spec.n_nodes
+    n_inst = [len(p) for p in res.allocation.placement.per_stage]
+    assert [len(p) for p in eng.alloc.placement.per_stage] == n_inst
+    stats = eng.run_trace(sess.make_trace(6, qps=30.0, seed=1))
+    assert stats.summary()["completed"] == 6

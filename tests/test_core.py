@@ -214,3 +214,22 @@ def test_qos_tracker():
     assert not q.violated()
     q.record(5.0)
     assert q.tail_latency() > 0.09
+
+
+def test_qos_tracker_sliding_window():
+    """The latency buffer is bounded: a long-running engine keeps only the
+    most recent ``window`` samples for the percentile/mean, while count()
+    still reports every recorded query."""
+    q = QoSTracker(target=0.1, window=100)
+    for _ in range(500):
+        q.record(5.0)                      # old, terrible latencies...
+    for _ in range(100):
+        q.record(0.01)                     # ...fully evicted by recent ones
+    assert len(q.latencies) == 100
+    assert q.count() == 600                # completion accounting unchanged
+    assert q.tail_latency() == pytest.approx(0.01)
+    assert q.mean() == pytest.approx(0.01)
+    assert not q.violated()
+    # unbounded mode still available; empty tracker unchanged
+    assert QoSTracker(target=0.1, window=None).latencies.maxlen is None
+    assert QoSTracker(target=0.1).tail_latency() == 0.0

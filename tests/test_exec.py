@@ -225,7 +225,7 @@ def test_runtime_pushes_allocation_into_attached_engine():
     rt.peak_result = types.SimpleNamespace(
         allocation=Allocation(stages=[StageAlloc(1, 1.0, 4)],
                               placement=Placement(per_stage=[[(0, 1.0)]])),
-        feasible=True)
+        feasible=True, objective=100.0, warm_started=False)
     rt._load_est = 95.0
     rt.current = rt.peak_result.allocation
     rt.history = []

@@ -49,3 +49,56 @@ def test_diurnal_shape():
     assert fn(0) == pytest.approx(250.0, rel=0.01)            # trough
     assert fn(43200) == pytest.approx(1000.0, rel=0.01)       # midday peak
     assert 250 <= fn(20000) <= 1000
+
+
+# ---------------------------------------------------------------------------
+# Warm-started re-solves (the previous Allocation seeds an extra walker)
+# ---------------------------------------------------------------------------
+
+def test_warm_start_objective_ge_cold(runtime):
+    """A warm-started min-resource solve must never come back worse than
+    the cold solve of the same problem: the warm walker draws from its own
+    RNG stream (the cold walkers' trajectories are untouched) and both
+    incumbents get the deterministic polish."""
+    load = runtime.peak_qps * 0.4
+    cold = runtime.allocator.solve_min_resource(runtime.batch, load=load)
+    warm = runtime.allocator.solve_min_resource(
+        runtime.batch, load=load,
+        warm_start=runtime.peak_result.allocation)
+    assert not cold.warm_started
+    assert warm.warm_started
+    assert warm.feasible == cold.feasible
+    assert warm.objective >= cold.objective - 1e-9
+
+
+def test_runtime_warm_starts_diurnal_resolves():
+    """Every min-resource re-solve along the diurnal trace is warm-started
+    from the incumbent allocation and pinned >= the cold solve of the same
+    target load."""
+    pipe = camelot_suite()["img-to-img"]
+    pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI)
+    rt = CamelotRuntime(pipe, pred, RTX_2080TI, n_devices=2, batch=16,
+                        rt=RuntimeConfig(reallocate_every=600.0,
+                                         ewma_alpha=0.5),
+                        sa=SAConfig(iterations=400, seed=0))
+    load = diurnal_load(rt.peak_qps * 0.9, period=3600.0)
+    hist = rt.run_trace(load, duration=3600.0, sample_every=60.0)
+    warm_events = [e for e in hist if e.warm_started]
+    assert warm_events, "the trough re-solves must run the solver"
+    for ev in warm_events:
+        cold = rt.allocator.solve_min_resource(
+            rt.batch, load=max(ev.provisioned_for, 1.0))
+        assert ev.objective >= cold.objective - 1e-9, \
+            (ev.provisioned_for, ev.objective, cold.objective)
+
+
+def test_warm_start_disabled_by_config():
+    pipe = camelot_suite()["img-to-img"]
+    pred = PipelinePredictor.from_profiles(pipe.stages, RTX_2080TI)
+    rt = CamelotRuntime(pipe, pred, RTX_2080TI, n_devices=2, batch=16,
+                        rt=RuntimeConfig(warm_start=False),
+                        sa=SAConfig(iterations=400, seed=0))
+    rt._load_est = rt.peak_qps * 0.3
+    rt.reallocate(now=0.0)
+    assert not rt.history[-1].warm_started
+    assert not rt.last_result.warm_started
