@@ -1,0 +1,168 @@
+"""Multi-tenant consolidation benchmark: joint cross-service allocation vs
+static per-service cluster partitions (the resource-efficiency claim of
+spatial sharing at datacenter scale — cf. MISO / ParvaGPU).
+
+For every scenario in ``repro.sim.workloads.multitenant_suite`` it
+
+  1. runs ONE joint Camelot max-peak solve over the shared device pool
+     (``MultiServiceSession`` → ``MultiTenantAllocator``: all tenants in
+     one annealing state, Constraints 1–4 shared, Constraint-5 per
+     tenant), and measures the joint peak: the largest normalized load λ
+     at which EVERY tenant's simulated p99 meets its own QoS target on the
+     shared cluster;
+  2. exhausts every whole-device static partition (each tenant solved
+     ALONE on its share — the best partitioned competitor) and measures
+     its peak the same way, on the same shared-timeline simulator;
+  3. checks the consolidation contract: joint peak >= best static peak on
+     every scenario (the quota freed by fractional cross-service packing
+     can only help), and each tenant's p99 at the joint peak meets its own
+     target.
+
+Emits ``BENCH_multitenant.json``.  ``--budget-s`` (CI smoke) fails the
+process if the chain+diamond joint solve exceeds the budget, if any
+scenario's joint peak drops below its static peak, or if no scenario shows
+a strict consolidation win.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+from benchmarks.common import Row, emit
+
+from repro.camelot import ClusterSpec, MultiServiceSession, SAConfig
+from repro.sim import SimConfig, find_joint_peak, multitenant_suite
+from repro.sim.simulator import MultiTenantSimulator
+
+SMOKE = "chain+diamond"
+#: shared-pool size per scenario (odd counts for the 2-tenant pairs, so no
+#: whole-device split can match the fractional joint packing)
+_DEVICES = {"chain+diamond": 3, "two-chains": 3, "3-tenant-mixed": 4}
+_BATCH = 8
+
+
+def _scenario(name: str, tenants, quick: bool, iterations: int) -> Dict:
+    # the session lifts core Tenants directly (weight/required_load kept)
+    sess = MultiServiceSession(tenants, ClusterSpec(devices=_DEVICES[name]),
+                               batch=_BATCH, name=name)
+    sa = SAConfig(iterations=iterations, seed=0)
+    sim_cfg = SimConfig(duration=5.0 if quick else 10.0, warmup=1.0)
+
+    joint = sess.solve(policy="max-peak", sa=sa)
+    out: Dict = {
+        "devices": _DEVICES[name],
+        "tenants": [t.name for t in tenants],
+        "qos_targets": sess.qos_targets,
+        "joint": {"feasible": joint.feasible,
+                  "objective": joint.objective if joint.feasible else None,
+                  "solve_time_s": joint.solve_time},
+    }
+    if not joint.feasible:
+        out["ok"] = False
+        return out
+
+    # measured joint peak on the shared-timeline simulator
+    lam_joint, at_peak = sess.find_peak(
+        result=joint, sim=sim_cfg, lo=2.0, hi=max(joint.objective * 2, 4.0))
+    out["joint"]["sim_peak"] = lam_joint
+    out["joint"]["p99_at_peak"] = [r.p99 for r in at_peak.per_tenant]
+    out["joint"]["qos_met"] = at_peak.meets_qos(sess.qos_targets)
+
+    # strongest static competitor: best whole-device split, each tenant
+    # solved alone on its share, measured by the SAME simulator physics
+    lam_pred, part, static_results = sess.best_static_partition(sa=sa)
+    out["static"] = {"partition": part, "objective": lam_pred}
+    if part is not None and all(r.feasible for r in static_results):
+        allocs_ok = all(r.allocation.placement is not None
+                        for r in static_results)
+        if allocs_ok:
+            lam_static, at_sp = find_joint_peak(
+                lambda: MultiTenantSimulator(
+                    sess.tenant_set,
+                    [r.allocation for r in static_results],
+                    sess.cluster.device_spec, sess.cluster.comm_model(),
+                    sim=sim_cfg),
+                sess.qos_targets, weights=sess.weights, lo=2.0,
+                hi=max(lam_pred * 2, 4.0))
+            out["static"]["sim_peak"] = lam_static
+            out["static"]["p99_at_peak"] = [r.p99 for r in at_sp.per_tenant]
+    else:
+        out["static"]["sim_peak"] = 0.0
+
+    sp = out["static"].get("sim_peak", 0.0)
+    out["consolidation_gain"] = lam_joint / sp if sp else float("inf")
+    out["ok"] = bool(out["joint"]["qos_met"] and lam_joint >= sp)
+    return out
+
+
+def run(quick: bool = False, iterations: int = 0) -> List[Row]:
+    iterations = iterations or (600 if quick else 1500)
+    suite = multitenant_suite()
+    if quick:
+        suite = {k: suite[k] for k in (SMOKE, "3-tenant-mixed")}
+    report = {"iterations": iterations, "batch": _BATCH, "scenarios": {}}
+    rows: List[Row] = []
+    for name, tenants in suite.items():
+        sc = _scenario(name, tenants, quick, iterations)
+        report["scenarios"][name] = sc
+        if not sc.get("joint", {}).get("feasible"):
+            rows.append((f"multitenant/{name}/joint", 0.0, "infeasible"))
+            continue
+        rows.append((f"multitenant/{name}/joint",
+                     sc["joint"]["solve_time_s"] * 1e6,
+                     f"peak={sc['joint']['sim_peak']:.0f};"
+                     f"qos_met={sc['joint']['qos_met']}"))
+        rows.append((f"multitenant/{name}/static", 0.0,
+                     f"peak={sc['static'].get('sim_peak', 0.0):.0f};"
+                     f"partition={sc['static']['partition']};"
+                     f"gain={sc['consolidation_gain']:.2f}x"))
+    with open("BENCH_multitenant.json", "w") as f:
+        json.dump(report, f, indent=2)
+    run.last_report = report
+    return rows
+
+
+run.last_report = None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--iterations", type=int, default=0)
+    ap.add_argument("--budget-s", type=float, default=20.0,
+                    help="fail if the chain+diamond joint solve exceeds "
+                         "this many seconds")
+    args = ap.parse_args()
+    emit(run(quick=args.quick, iterations=args.iterations))
+    report = run.last_report
+    smoke = report["scenarios"].get(SMOKE)
+    if smoke is None or not smoke.get("joint", {}).get("feasible"):
+        print(f"ERROR: {SMOKE} joint solve missing/infeasible",
+              file=sys.stderr)
+        return 1
+    t = smoke["joint"]["solve_time_s"]
+    print(f"{SMOKE} joint solve: {t:.3f}s (budget {args.budget_s:.1f}s)")
+    if t > args.budget_s:
+        print(f"ERROR: joint solve_time {t:.3f}s exceeds budget",
+              file=sys.stderr)
+        return 1
+    bad = [n for n, sc in report["scenarios"].items() if not sc.get("ok")]
+    if bad:
+        print(f"ERROR: joint < static or QoS violated on {bad}",
+              file=sys.stderr)
+        return 1
+    wins = [n for n, sc in report["scenarios"].items()
+            if sc.get("joint", {}).get("sim_peak", 0.0)
+            > sc.get("static", {}).get("sim_peak", 0.0) * 1.01]
+    if not wins:
+        print("ERROR: no scenario shows a strict consolidation win",
+              file=sys.stderr)
+        return 1
+    print(f"consolidation wins on: {wins}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,17 +1,45 @@
 """Spec round-trip check: every workload in ``repro.sim.workloads`` (the
 four chain services, the DAG suite, and all 27 artifact pipelines) must
 survive ``ServiceSpec.from_dict(spec.to_dict()) == spec`` and lower back
-onto a graph with identical topology and QoS target.  Registered as
-``specs`` in run.py and run as a CI step — the declarative layer's
-serialisation contract must hold for every workload the repo ships."""
+onto a graph with identical topology and QoS target; every multi-tenant
+scenario must survive the ``MultiServiceSpec`` round-trip; and a solved
+session must survive ``CamelotSession.save``/``load`` with its allocation
+(incl. placement) bit-intact.  Registered as ``specs`` in run.py and run
+as a CI step — the declarative layer's serialisation contract must hold
+for every workload the repo ships."""
 from __future__ import annotations
 
 import json
+import os.path
+import tempfile
 
-from repro.camelot import ServiceSpec
-from repro.sim import workload_specs
+from repro.camelot import (CamelotSession, ClusterSpec, MultiServiceSpec,
+                           SAConfig, ServiceSpec, TenantSpec)
+from repro.sim import multitenant_suite, workload_specs
 
 from benchmarks.common import Row
+
+
+def _session_persistence_ok() -> bool:
+    """solve → save → load must restore the allocation exactly, so a
+    restarted session simulates/serves without re-solving."""
+    spec = workload_specs()["img-to-img"]
+    sess = CamelotSession(spec, ClusterSpec(devices=2), batch=8)
+    res = sess.solve(policy="max-peak", sa=SAConfig(iterations=300, seed=0))
+    with tempfile.TemporaryDirectory(prefix="bench_specs_") as tmp:
+        path = os.path.join(tmp, "session.json")
+        sess.save(path)
+        back = CamelotSession.load(path).last_result
+    return (back is not None
+            and back.objective == res.objective
+            and back.feasible == res.feasible
+            and back.policy == res.policy
+            and [(s.n_instances, s.quota, s.batch)
+                 for s in back.allocation.stages]
+            == [(s.n_instances, s.quota, s.batch)
+                for s in res.allocation.stages]
+            and back.allocation.placement.per_stage
+            == res.allocation.placement.per_stage)
 
 
 def run(quick: bool = False) -> list[Row]:
@@ -32,10 +60,27 @@ def run(quick: bool = False) -> list[Row]:
               and graph.qos_target == spec.qos_target)
         if not ok:
             failures.append(name)
+    # multi-service form: every shipped co-location scenario round-trips
+    n_multi = 0
+    for name, tenants in multitenant_suite().items():
+        mspec = MultiServiceSpec(name, tuple(
+            TenantSpec(ServiceSpec.from_graph(t.graph), weight=t.weight)
+            for t in tenants))
+        back = MultiServiceSpec.from_dict(json.loads(json.dumps(
+            mspec.to_dict())))
+        if back != mspec:
+            failures.append(f"multi:{name}")
+        n_multi += 1
     rows.append(("specs/roundtrip", float(len(specs)),
-                 f"workloads={len(specs)};failures={failures or 'none'}"))
-    if failures:
-        raise AssertionError(f"spec round-trip failed for {failures}")
+                 f"workloads={len(specs)};multi={n_multi};"
+                 f"failures={failures or 'none'}"))
+    # allocation persistence: solve → save → load restores bit-identically
+    persist_ok = _session_persistence_ok()
+    rows.append(("specs/persistence", 1.0, f"ok={persist_ok}"))
+    if failures or not persist_ok:
+        raise AssertionError(
+            f"spec round-trip failed for {failures}"
+            f"{'; session persistence broken' if not persist_ok else ''}")
     return rows
 
 

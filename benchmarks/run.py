@@ -14,6 +14,7 @@ sweep; default runs everything (matches the paper's evaluation section).
   diurnal — online load-tracking runtime     (beyond paper)
   dag    — DAG services: diamond + backbone  (beyond paper)
   alloc  — policy hot path: scalar vs vectorized allocator, sim events/s
+  multitenant — joint cross-service allocation vs static partitions
   specs  — repro.camelot spec round-trip over every shipped workload
   roofline — dry-run roofline table          (deliverable g)
   kernel — model-kernel microbenchmarks
@@ -24,9 +25,9 @@ import time
 
 from benchmarks import (bench_alloc, bench_artifact, bench_comm, bench_dag,
                         bench_diurnal, bench_kernels, bench_min_resource,
-                        bench_overhead, bench_pcie, bench_peak_load,
-                        bench_predictor, bench_roofline, bench_scale,
-                        bench_specs)
+                        bench_multitenant, bench_overhead, bench_pcie,
+                        bench_peak_load, bench_predictor, bench_roofline,
+                        bench_scale, bench_specs)
 from benchmarks.common import emit
 
 MODULES = {
@@ -41,6 +42,7 @@ MODULES = {
     "diurnal": bench_diurnal,
     "dag": bench_dag,
     "alloc": bench_alloc,
+    "multitenant": bench_multitenant,
     "specs": bench_specs,
     "roofline": bench_roofline,
     "kernel": bench_kernels,

@@ -14,17 +14,19 @@
 # The internal layers (repro.core.*, repro.sim.*, repro.serving.*) remain
 # importable and unchanged; the facade only wires them.
 from repro.camelot.specs import (KNOWN_DEVICES, ClusterSpec, LoadSpec,
-                                 QoSSpec, ServiceSpec)
+                                 MultiServiceSpec, QoSSpec, ServiceSpec,
+                                 TenantSpec)
 from repro.camelot.policies import (BaselinePolicy, MaxPeakPolicy,
                                     MinResourcePolicy, Policy,
                                     UnknownPolicyError, available_policies,
                                     get_policy, register_policy)
-from repro.camelot.session import CamelotSession
+from repro.camelot.session import CamelotSession, MultiServiceSession
 from repro.core.allocator import SAConfig, SolveResult
 
 __all__ = [
-    "KNOWN_DEVICES", "ClusterSpec", "LoadSpec", "QoSSpec", "ServiceSpec",
-    "BaselinePolicy", "MaxPeakPolicy", "MinResourcePolicy", "Policy",
-    "UnknownPolicyError", "available_policies", "get_policy",
-    "register_policy", "CamelotSession", "SAConfig", "SolveResult",
+    "KNOWN_DEVICES", "ClusterSpec", "LoadSpec", "MultiServiceSpec",
+    "QoSSpec", "ServiceSpec", "TenantSpec", "BaselinePolicy",
+    "MaxPeakPolicy", "MinResourcePolicy", "Policy", "UnknownPolicyError",
+    "available_policies", "get_policy", "register_policy", "CamelotSession",
+    "MultiServiceSession", "SAConfig", "SolveResult",
 ]

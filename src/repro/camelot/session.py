@@ -19,18 +19,26 @@ so hand-wired callers and the facade produce identical results.
 """
 from __future__ import annotations
 
+import json
+import os
+from dataclasses import replace
 from typing import List, Mapping, Optional, Sequence, Tuple
 
 from repro.camelot.policies import get_policy
-from repro.camelot.specs import ClusterSpec, QoSSpec, ServiceSpec
-from repro.core.allocator import SolveResult
+from repro.camelot.specs import (ClusterSpec, LoadSpec, MultiServiceSpec,
+                                 QoSSpec, ServiceSpec, TenantSpec)
+from repro.core.allocator import (CamelotAllocator, MultiTenantAllocator,
+                                  SAConfig, SolveResult)
 from repro.core.predictor import (DEFAULT_BATCHES, PipelinePredictor,
                                   ProfileSample, StagePredictor,
                                   TabulatedStagePredictor)
-from repro.core.runtime import CamelotRuntime, RuntimeConfig
-from repro.core.types import Allocation, ServiceGraph
-from repro.sim.simulator import (PipelineSimulator, SimConfig, SimResult,
-                                 find_peak_load)
+from repro.core.runtime import (CamelotRuntime, MultiTenantRuntime,
+                                RuntimeConfig)
+from repro.core.types import (QUOTA_STEP, Allocation, ServiceGraph, Tenant,
+                              TenantSet)
+from repro.sim.simulator import (MultiSimResult, MultiTenantSimulator,
+                                 PipelineSimulator, SimConfig, SimResult,
+                                 find_joint_peak, find_peak_load)
 
 
 class CamelotSession:
@@ -221,3 +229,507 @@ class CamelotSession:
 
     def attach_engine(self, engine) -> None:
         self.runtime().attach_engine(engine)
+
+    # ---- 6. persistence -------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Persist the session's specs AND its last solved allocation as
+        one JSON document, so a restart skips the solve entirely:
+        ``CamelotSession.load(path)`` can ``simulate``/``serve`` the saved
+        allocation immediately."""
+        doc = {
+            "kind": "camelot-session",
+            "service": self.service.to_dict(),
+            "cluster": self.cluster.to_dict(),
+            "qos": self.qos.to_dict(),
+            "batch": self.batch,
+            "seed": self.seed,
+            "result": self.last_result.to_dict()
+            if self.last_result is not None else None,
+        }
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=2)
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "CamelotSession":
+        """Rebuild a session (specs + last solved allocation) from
+        ``save`` output.  The restored ``SolveResult`` is re-priced with
+        the cluster's comm model (comm config is cluster data, not solver
+        state) and becomes ``last_result``, so simulate/serve/find_peak
+        run without re-solving."""
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("kind") != "camelot-session":
+            raise ValueError(f"{path} is not a saved CamelotSession "
+                             f"(kind={doc.get('kind')!r})")
+        sess = cls(ServiceSpec.from_dict(doc["service"]),
+                   ClusterSpec.from_dict(doc["cluster"]),
+                   QoSSpec.from_dict(doc["qos"]),
+                   batch=int(doc.get("batch", 8)),
+                   seed=int(doc.get("seed", 0)))
+        if doc.get("result") is not None:
+            res = SolveResult.from_dict(doc["result"],
+                                        comm=sess.cluster.comm_model())
+            sess.last_result = res
+            sess.results.append(res)
+        return sess
+
+
+# --------------------------------------------------------------------------
+# Multi-service sessions: N tenants sharing ONE cluster
+# --------------------------------------------------------------------------
+
+class MultiServiceSession:
+    """N services on ONE shared cluster under per-tenant QoS objectives —
+    the datacenter consolidation entry point.
+
+        sess = MultiServiceSession([
+            (img_spec, QoSSpec()),                 # tenant 0
+            TenantSpec(dag_spec, QoSSpec(), 2.0),  # tenant 1, 2x demand
+        ], ClusterSpec(devices=3))
+        sess.profile()
+        res = sess.solve(policy="max-peak")        # ONE joint solve
+        lam, sim = sess.find_peak()                # all tenants together
+        static = sess.solve_partitioned([1, 2])    # the baseline it beats
+
+    The joint solve concatenates every tenant's stage vector into one
+    annealing state (``MultiTenantAllocator``): Constraints 1–4 are shared
+    over the one device pool — instances from different services contend —
+    while Constraint-5 holds per tenant.  With exactly ONE tenant every
+    step is bit-for-bit identical to ``CamelotSession`` (pinned in
+    tests/test_multitenant.py).
+
+    ``services`` accepts a ``MultiServiceSpec``, or a sequence whose items
+    are ``TenantSpec``s, ``ServiceSpec``s, ``(service, qos)`` pairs,
+    ``ServiceGraph``s or plain spec dicts.
+    """
+
+    JOINT_POLICIES = ("max-peak", "min-resource", "camelot-nc")
+
+    def __init__(self, services, cluster: Optional[ClusterSpec] = None,
+                 batch: int = 8, seed: int = 0, name: str = "multi"):
+        self.spec = self._lift(services, name)
+        self.cluster = cluster if cluster is not None else ClusterSpec()
+        self.batch = batch
+        self.seed = seed
+        self.tenant_set = TenantSet([t.build() for t in self.spec.tenants])
+        self.predictor: Optional[PipelinePredictor] = None
+        self.last_result: Optional[SolveResult] = None
+        self.results: List[SolveResult] = []
+        self._allocator: Optional[MultiTenantAllocator] = None
+        self._runtime: Optional[MultiTenantRuntime] = None
+        self._stages = None             # per-tenant live servers (serve())
+
+    @staticmethod
+    def _lift(services, name: str) -> MultiServiceSpec:
+        if isinstance(services, MultiServiceSpec):
+            return services
+        if isinstance(services, Mapping):
+            return MultiServiceSpec.from_dict(services)
+        tenants = []
+        for item in services:
+            if isinstance(item, TenantSpec):
+                tenants.append(item)
+                continue
+            if isinstance(item, Tenant):
+                # core Tenant (e.g. straight from multitenant_suite):
+                # weight and required_load must survive the lift
+                tenants.append(TenantSpec(
+                    ServiceSpec.from_graph(item.graph),
+                    QoSSpec(load=LoadSpec(qps=item.required_load)
+                            if item.required_load is not None else None),
+                    weight=item.weight))
+                continue
+            if isinstance(item, tuple):
+                svc, qos = item
+            else:
+                svc, qos = item, QoSSpec()
+            if isinstance(svc, ServiceGraph):
+                svc = ServiceSpec.from_graph(svc)
+            elif isinstance(svc, Mapping):
+                svc = ServiceSpec.from_dict(svc)
+            tenants.append(TenantSpec(svc, qos))
+        return MultiServiceSpec(name, tuple(tenants))
+
+    # ---- derived -------------------------------------------------------
+
+    @property
+    def tenants(self) -> List[TenantSpec]:
+        return list(self.spec.tenants)
+
+    @property
+    def n_tenants(self) -> int:
+        return self.spec.n_tenants
+
+    @property
+    def graphs(self) -> List[ServiceGraph]:
+        return [t.graph for t in self.tenant_set.tenants]
+
+    @property
+    def qos_targets(self) -> List[float]:
+        return [t.qos_target for t in self.tenant_set.tenants]
+
+    @property
+    def weights(self) -> List[float]:
+        return self.tenant_set.weights
+
+    def _required_loads(self, loads=None) -> List[float]:
+        if loads is not None:
+            if isinstance(loads, (int, float)):
+                return [float(loads)] * self.n_tenants
+            if len(loads) != self.n_tenants:
+                raise ValueError(
+                    f"need one load per tenant ({self.n_tenants}), got "
+                    f"{len(loads)}")
+            return [float(l) for l in loads]
+        out = []
+        for t in self.tenant_set.tenants:
+            if t.required_load is None:
+                raise ValueError(
+                    f"tenant {t.name!r} has no load target: pass loads=[...]"
+                    " or set QoSSpec.load per tenant")
+            out.append(float(t.required_load))
+        return out
+
+    # ---- 1. profile ----------------------------------------------------
+
+    def profile(self, model_kind: str = "dt", noise: float = 0.03,
+                seed: Optional[int] = None,
+                batches: Sequence[int] = DEFAULT_BATCHES,
+                tabulate: bool = True) -> PipelinePredictor:
+        """Solo-run profile every tenant's nodes (profiling is per node —
+        tenancy does not change it) and concatenate the per-node
+        predictors into the union namespace.  Tenant t's nodes use seed
+        ``seed + offset_t``, so tenant 0 is seeded exactly like a solo
+        ``CamelotSession`` (the bit-parity contract)."""
+        base = self.seed if seed is None else seed
+        stages = []
+        for graph, off in zip(self.graphs, self.tenant_set.offsets):
+            stages.extend(PipelinePredictor.from_graph(
+                graph, self.cluster.device_spec, model_kind=model_kind,
+                noise=noise, seed=base + off, batches=batches,
+                tabulate=tabulate).stages)
+        self.predictor = PipelinePredictor(stages)
+        self._allocator = None          # tables hold the old models' output
+        return self.predictor
+
+    def _require_predictor(self) -> PipelinePredictor:
+        if self.predictor is None:
+            self.profile()
+        return self.predictor
+
+    # ---- 2. joint solve ------------------------------------------------
+
+    def allocator(self, sa: Optional[SAConfig] = None,
+                  bandwidth_constraint: bool = True) -> MultiTenantAllocator:
+        """The joint allocator over the union namespace (rebuilt when an
+        SA override is passed; cached otherwise so re-solves share the
+        per-batch tables and FFD memo)."""
+        if sa is not None or self._allocator is None or \
+                self._allocator.sa.bandwidth_constraint \
+                != bandwidth_constraint:
+            eff = replace(sa if sa is not None else SAConfig(),
+                          bandwidth_constraint=bandwidth_constraint)
+            self._allocator = MultiTenantAllocator(
+                self.tenant_set, self._require_predictor(),
+                self.cluster.device_spec, self.cluster.devices,
+                comm=self.cluster.comm_model(), sa=eff)
+        return self._allocator
+
+    def solve(self, policy: str = "max-peak", batch: Optional[int] = None,
+              sa: Optional[SAConfig] = None, loads=None,
+              warm_start: Optional[Allocation] = None) -> SolveResult:
+        """One JOINT solve across every tenant.  ``max-peak`` maximises
+        the worst weight-normalized supported load (the objective value is
+        that λ — tenant t sustains ``λ·weight_t`` qps); ``min-resource``
+        minimises total quota while tenant t supports ``loads[t]`` (or its
+        ``QoSSpec.load``); ``camelot-nc`` is max-peak without the
+        bandwidth constraint."""
+        if policy not in self.JOINT_POLICIES:
+            raise ValueError(
+                f"unknown joint policy {policy!r}; available: "
+                f"{', '.join(self.JOINT_POLICIES)} (single-service "
+                "policies live on CamelotSession)")
+        # same lattice contract as the single-service solver policies
+        if abs(self.cluster.quota_step - QUOTA_STEP) > 1e-12:
+            raise ValueError(
+                f"the allocator solves on the fixed QUOTA_STEP={QUOTA_STEP} "
+                f"lattice; ClusterSpec.quota_step={self.cluster.quota_step} "
+                "is only supported by quantize()-built demo allocations")
+        b = self.batch if batch is None else batch
+        alloc = self.allocator(sa=sa,
+                               bandwidth_constraint=policy != "camelot-nc")
+        if policy == "min-resource":
+            res = alloc.solve_min_resource(b, self._required_loads(loads),
+                                           warm_start=warm_start)
+        else:
+            res = alloc.solve_max_load(b, warm_start=warm_start)
+        res.comm, res.policy = alloc.comm, policy
+        self.last_result = res
+        self.results.append(res)
+        return res
+
+    def _resolve_result(self, result: Optional[SolveResult]) -> SolveResult:
+        res = result if result is not None else self.last_result
+        if res is None:
+            res = self.solve()
+        return res
+
+    def _current_allocator(self) -> MultiTenantAllocator:
+        """The cached allocator whatever its bandwidth flag — annotation
+        and simulation only need the predictor tables, which do not depend
+        on it, and reusing the instance keeps its per-batch tables and FFD
+        memo warm across solve/measure alternations."""
+        return self._allocator if self._allocator is not None \
+            else self.allocator()
+
+    def split(self, result: Optional[SolveResult] = None,
+              batch: Optional[int] = None) -> List[Allocation]:
+        """Service-scoped slices of the (last) joint allocation, annotated
+        with per-tenant predicted load and critical-path latency."""
+        res = self._resolve_result(result)
+        return self._current_allocator().per_tenant_allocations(
+            res.allocation, batch if batch is not None else self.batch)
+
+    # ---- static-partition baseline -------------------------------------
+
+    def solve_partitioned(self, partition: Sequence[int],
+                          policy: str = "max-peak",
+                          sa: Optional[SAConfig] = None,
+                          loads=None) -> Tuple[float, List[SolveResult]]:
+        """The consolidation baseline: statically split the cluster into
+        per-tenant partitions (``partition[t]`` whole devices for tenant
+        t) and solve each tenant ALONE on its share.  Returns a static
+        objective (higher is better, so partitions compare uniformly) and
+        the per-tenant results, with placements shifted onto each
+        partition's global device ids so the whole static deployment can
+        be simulated on the shared timeline.
+
+        For ``max-peak``/``camelot-nc`` the objective is the static λ —
+        min over tenants of objective/weight (0.0 when any tenant is
+        infeasible).  For ``min-resource`` it is the NEGATED total quota
+        across tenants at their required ``loads`` (-inf when any tenant
+        cannot meet its load), mirroring the joint solve's
+        quota-minimising objective."""
+        assert len(partition) == self.n_tenants
+        assert all(p >= 1 for p in partition), partition
+        assert sum(partition) <= self.cluster.devices, \
+            (partition, self.cluster.devices)
+        pred = self._require_predictor()
+        min_resource = policy == "min-resource"
+        req = self._required_loads(loads) if min_resource \
+            else [None] * self.n_tenants
+        results: List[SolveResult] = []
+        lam = float("inf")
+        quota_total = 0.0
+        all_feasible = True
+        start = 0
+        for t, graph, off, n_dev, load in zip(
+                self.tenant_set.tenants, self.graphs,
+                self.tenant_set.offsets, partition, req):
+            sub = PipelinePredictor(
+                pred.stages[off:off + graph.n_nodes])
+            eff = replace(sa if sa is not None else SAConfig(),
+                          bandwidth_constraint=policy != "camelot-nc")
+            solo = CamelotAllocator(graph, sub, self.cluster.device_spec,
+                                    int(n_dev),
+                                    comm=self.cluster.comm_model(), sa=eff)
+            if min_resource:
+                res = solo.solve_min_resource(self.batch, float(load))
+            else:
+                res = solo.solve_max_load(self.batch)
+            res.comm, res.policy = solo.comm, f"static/{policy}"
+            if res.feasible and res.allocation.placement is not None:
+                for st in res.allocation.placement.per_stage:
+                    st[:] = [(d + start, q) for d, q in st]
+                lam = min(lam, res.objective / max(t.weight, 1e-9))
+                quota_total += res.allocation.total_quota()
+            else:
+                all_feasible = False
+            results.append(res)
+            start += int(n_dev)
+        if not all_feasible:
+            return (-float("inf") if min_resource else 0.0), results
+        return (-quota_total if min_resource else lam), results
+
+    def best_static_partition(self, policy: str = "max-peak",
+                              sa: Optional[SAConfig] = None, loads=None,
+                              ) -> Tuple[float, List[int],
+                                         List[SolveResult]]:
+        """Exhaust every whole-device split of the cluster (each tenant
+        gets ≥ 1 device) and keep the best static objective — the
+        strongest partitioned competitor the joint solve is charged
+        against in ``benchmarks/bench_multitenant.py``."""
+        if self.cluster.devices < self.n_tenants:
+            raise ValueError(
+                f"no static partition exists: {self.n_tenants} tenants "
+                f"need at least one whole device each, cluster has "
+                f"{self.cluster.devices} (the joint solve can still share "
+                "fractional devices)")
+        best = (0.0, None, None)
+        for part in _compositions(self.cluster.devices, self.n_tenants):
+            lam, results = self.solve_partitioned(part, policy=policy,
+                                                  sa=sa, loads=loads)
+            if best[1] is None or lam > best[0]:
+                best = (lam, list(part), results)
+        return best
+
+    # ---- 3. simulate ---------------------------------------------------
+
+    def _make_sim(self, res: SolveResult,
+                  sim: Optional[SimConfig]) -> MultiTenantSimulator:
+        assert res.feasible and res.allocation.placement is not None, \
+            "joint result is not placeable"
+        return MultiTenantSimulator(
+            self.tenant_set, self.split(result=res),
+            self.cluster.device_spec,
+            res.comm if res.comm is not None else self.cluster.comm_model(),
+            sim=sim)
+
+    def simulate(self, loads=None, sim: Optional[SimConfig] = None,
+                 result: Optional[SolveResult] = None) -> MultiSimResult:
+        """Charge the joint allocation on the shared cluster: every tenant
+        offered its own load (default: per-tenant ``QoSSpec.load``), one
+        virtual timeline, shared per-device contention."""
+        res = self._resolve_result(result)
+        return self._make_sim(res, sim).run(self._required_loads(loads))
+
+    def find_peak(self, sim: Optional[SimConfig] = None,
+                  result: Optional[SolveResult] = None, lo: float = 1.0,
+                  hi: float = 4096.0) -> Tuple[float, MultiSimResult]:
+        """Binary-search the highest normalized load λ at which EVERY
+        tenant's simulated p99 meets its own target when tenant t is
+        offered λ·weight_t qps — the measurement counterpart of the joint
+        max-peak objective."""
+        res = self._resolve_result(result)
+        return find_joint_peak(lambda: self._make_sim(res, sim),
+                               self.qos_targets, weights=self.weights,
+                               lo=lo, hi=hi)
+
+    def simulate_static(self, results: List[SolveResult], loads,
+                        sim: Optional[SimConfig] = None) -> MultiSimResult:
+        """Simulate a static partition (``solve_partitioned`` output) on
+        the same shared timeline, so joint and static deployments are
+        charged by identical physics."""
+        allocs = [r.allocation for r in results]
+        assert all(a.placement is not None for a in allocs)
+        return MultiTenantSimulator(
+            self.tenant_set, allocs, self.cluster.device_spec,
+            self.cluster.comm_model(), sim=sim).run(loads)
+
+    # ---- 4. serve (live) -----------------------------------------------
+
+    def serve(self, tenant_stages=None,
+              result: Optional[SolveResult] = None,
+              comm_mechanism: str = "auto", batch_timeout: float = 0.05,
+              seq_len: int = 16):
+        """A live ``MultiTenantEngine`` running the joint allocation's
+        per-tenant slices against one shared worker pool."""
+        from repro.serving import ModelStageServer, MultiTenantEngine
+        res = self._resolve_result(result)
+        assert res.feasible and res.allocation.placement is not None, \
+            "cannot serve an infeasible joint allocation"
+        if tenant_stages is None:
+            tenant_stages = []
+            for graph in self.graphs:
+                missing = [n.name for n in graph.nodes if n.arch is None]
+                if missing:
+                    raise ValueError(
+                        f"nodes {missing} carry no model-zoo arch; pass "
+                        "tenant_stages explicitly")
+                tenant_stages.append(
+                    [ModelStageServer(n.name, n.arch, seq_len=seq_len)
+                     for n in graph.nodes])
+        self._stages = [list(s) for s in tenant_stages]
+        return MultiTenantEngine(
+            self._stages, self.graphs, self.split(result=res),
+            comm_mechanism=comm_mechanism, batch_timeout=batch_timeout,
+            comm_model=res.comm if res.comm is not None
+            else self.cluster.comm_model())
+
+    def make_traces(self, n: int, qps_per_tenant, seed: int = 0):
+        """One query trace per tenant, each shaped for that tenant's entry
+        stage — call after ``serve()``."""
+        from repro.serving import make_trace
+        assert self._stages is not None, "serve() first"
+        out = []
+        for ti, (graph, stages) in enumerate(zip(self.graphs, self._stages)):
+            entry = stages[graph.entries[0]]
+            out.append(make_trace(n, qps=float(qps_per_tenant[ti]),
+                                  seq_len=entry.seq_len,
+                                  vocab=entry.cfg.vocab_size,
+                                  seed=seed + ti))
+        return out
+
+    # ---- 5. online runtime ---------------------------------------------
+
+    def runtime(self, rt: Optional[RuntimeConfig] = None,
+                sa=None) -> MultiTenantRuntime:
+        if self._runtime is None:
+            self._runtime = MultiTenantRuntime(
+                self.tenant_set, self._require_predictor(),
+                self.cluster.device_spec, self.cluster.devices, self.batch,
+                rt=rt, sa=sa, comm=self.cluster.comm_model())
+        return self._runtime
+
+    def observe(self, qps_samples) -> None:
+        self.runtime().observe(qps_samples)
+
+    def reallocate(self, now: float = 0.0) -> Allocation:
+        """Joint re-solve for the current per-tenant load estimates,
+        warm-started from the incumbent joint allocation."""
+        return self.runtime().reallocate(now)
+
+    def attach_engine(self, engine) -> None:
+        self.runtime().attach_engine(engine)
+
+    # ---- 6. persistence -------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Persist the multi-service specs and the last joint solve, so a
+        restart simulates/serves the saved joint allocation instantly."""
+        doc = {
+            "kind": "camelot-multi-session",
+            "services": self.spec.to_dict(),
+            "cluster": self.cluster.to_dict(),
+            "batch": self.batch,
+            "seed": self.seed,
+            "result": self.last_result.to_dict()
+            if self.last_result is not None else None,
+        }
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=2)
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "MultiServiceSession":
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("kind") != "camelot-multi-session":
+            raise ValueError(f"{path} is not a saved MultiServiceSession "
+                             f"(kind={doc.get('kind')!r})")
+        sess = cls(MultiServiceSpec.from_dict(doc["services"]),
+                   ClusterSpec.from_dict(doc["cluster"]),
+                   batch=int(doc.get("batch", 8)),
+                   seed=int(doc.get("seed", 0)))
+        if doc.get("result") is not None:
+            res = SolveResult.from_dict(doc["result"],
+                                        comm=sess.cluster.comm_model())
+            sess.last_result = res
+            sess.results.append(res)
+        return sess
+
+
+def _compositions(total: int, parts: int):
+    """All ways to hand ``total`` whole devices to ``parts`` tenants with
+    every tenant getting at least one."""
+    if parts == 1:
+        if total >= 1:
+            yield (total,)
+        return
+    for first in range(1, total - parts + 2):
+        for rest in _compositions(total - first, parts - 1):
+            yield (first,) + rest

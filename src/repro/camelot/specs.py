@@ -29,7 +29,7 @@ from repro.core.comm import CommModel
 from repro.core.qos import QoSTracker
 from repro.core.types import (QUOTA_STEP, RTX_2080TI, TPU_V5E_DEV, V100,
                               DeviceSpec, MicroserviceProfile, Pipeline,
-                              ServiceEdge, ServiceGraph)
+                              ServiceEdge, ServiceGraph, Tenant)
 
 #: devices addressable by name in ``ClusterSpec.from_dict``
 KNOWN_DEVICES: Dict[str, DeviceSpec] = {
@@ -274,3 +274,85 @@ class QoSSpec:
         return cls(latency_target=d.get("latency_target"),
                    percentile=float(d.get("percentile", 99.0)),
                    load=load)
+
+
+# --------------------------------------------------------------------------
+# Multi-service deployments: N (service, QoS) tenants on ONE cluster
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """One tenant of a multi-service deployment, as data.
+
+    ``weight`` normalises the joint max-peak objective (the solver
+    maximises the worst ``supported_load / weight`` across tenants —
+    weights express that one tenant needs proportionally more capacity);
+    the tenant's required load for joint min-resource solves comes from
+    ``qos.load``."""
+    service: ServiceSpec
+    qos: QoSSpec = QoSSpec()
+    weight: float = 1.0
+
+    def __post_init__(self):
+        if self.weight <= 0:
+            raise ValueError(f"tenant weight must be > 0, got {self.weight}")
+
+    @property
+    def name(self) -> str:
+        return self.service.name
+
+    def build(self) -> Tenant:
+        """Lower to the executable ``repro.core.types.Tenant`` (the QoS
+        spec's latency target overrides the service's own, exactly as in
+        the single-service session)."""
+        return Tenant(
+            name=self.service.name,
+            graph=self.service.build(self.qos),
+            weight=self.weight,
+            required_load=self.qos.load.qps
+            if self.qos.load is not None else None)
+
+    def to_dict(self) -> dict:
+        return {"service": self.service.to_dict(),
+                "qos": self.qos.to_dict(),
+                "weight": self.weight}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "TenantSpec":
+        qos = d.get("qos")
+        return cls(
+            service=ServiceSpec.from_dict(d["service"]),
+            qos=QoSSpec.from_dict(qos) if isinstance(qos, Mapping)
+            else (qos if qos is not None else QoSSpec()),
+            weight=float(d.get("weight", 1.0)))
+
+
+@dataclass(frozen=True)
+class MultiServiceSpec:
+    """A whole multi-tenant deployment as data: N tenants intended for ONE
+    shared cluster.  Round-trips through plain dicts like every other
+    spec, so a co-location scenario is serialisable/diffable config."""
+    name: str
+    tenants: Tuple[TenantSpec, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "tenants", tuple(self.tenants))
+        if not self.tenants:
+            raise ValueError("a MultiServiceSpec needs at least one tenant")
+        names = [t.name for t in self.tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"tenant service names must be unique: {names}")
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.tenants)
+
+    def to_dict(self) -> dict:
+        return {"name": self.name,
+                "tenants": [t.to_dict() for t in self.tenants]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "MultiServiceSpec":
+        return cls(name=d["name"],
+                   tenants=tuple(TenantSpec.from_dict(t)
+                                 for t in d["tenants"]))

@@ -8,7 +8,8 @@
 #                   per-edge mechanism selection) shared by the live engine
 #                   and the simulator
 #   qos.py        — tail-latency tracking
-from repro.core.allocator import CamelotAllocator, SAConfig, SolveResult
+from repro.core.allocator import (CamelotAllocator, MultiTenantAllocator,
+                                  SAConfig, SolveResult)
 from repro.core.comm import (GLOBAL_MEMORY, HOST_STAGED, ICI, CommModel,
                              DeviceHandoff, EdgeChannel, HostStagedChannel,
                              mechanism_time, select_mechanism)
@@ -25,10 +26,12 @@ from repro.core.qos import QoSTracker
 from repro.core.types import (RTX_2080TI, TPU_V5E_DEV, V100, Allocation,
                               CompiledTopology, DeviceSpec,
                               MicroserviceProfile, Pipeline, Placement,
-                              ServiceEdge, ServiceGraph, StageAlloc)
+                              ServiceEdge, ServiceGraph, StageAlloc, Tenant,
+                              TenantSet)
 
 __all__ = [
-    "CamelotAllocator", "SAConfig", "SolveResult", "CommModel",
+    "CamelotAllocator", "MultiTenantAllocator", "SAConfig", "SolveResult",
+    "CommModel",
     "DeviceHandoff", "EdgeChannel", "HostStagedChannel", "GLOBAL_MEMORY",
     "HOST_STAGED", "ICI", "select_mechanism", "mechanism_time",
     "BatchingPolicy", "EdgeRoute", "ExecCore", "ReadyBatch", "StageInstance",
@@ -39,5 +42,5 @@ __all__ = [
     "collect_samples", "profile_from_engine", "QoSTracker", "RTX_2080TI",
     "TPU_V5E_DEV", "V100", "Allocation", "CompiledTopology", "DeviceSpec",
     "MicroserviceProfile", "Pipeline", "Placement", "ServiceEdge",
-    "ServiceGraph", "StageAlloc",
+    "ServiceGraph", "StageAlloc", "Tenant", "TenantSet",
 ]

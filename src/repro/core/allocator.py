@@ -20,6 +20,11 @@ all *nodes*, and Constraint-5's end-to-end latency is the **critical
 path** — the longest entry→exit path of node durations plus per-edge
 transfer times (for a chain this reduces to the paper's plain sum).
 
+``MultiTenantAllocator`` lifts both policies to N services sharing ONE
+device pool (the datacenter case): the decision vector concatenates every
+tenant's stages, Constraints 1–4 span the shared pool, and Constraint-5
+holds per tenant against its own QoS target.
+
 The policy hot path (``SAConfig.mode``)
 ---------------------------------------
 Camelot is a *runtime* system: the allocator re-solves as load shifts, so
@@ -51,7 +56,8 @@ from repro.core.comm import CommModel
 from repro.core.deployment import pack_instances
 from repro.core.predictor import PipelinePredictor
 from repro.core.types import (QUOTA_GRID, QUOTA_STEP, Allocation, DeviceSpec,
-                              ServiceEdge, ServiceGraph, StageAlloc)
+                              ServiceEdge, ServiceGraph, StageAlloc,
+                              TenantSet)
 
 QUOTA_MIN = QUOTA_STEP
 
@@ -176,6 +182,41 @@ class SolveResult:
     comm: Optional[CommModel] = None
     policy: str = ""
 
+    # ---- dict round-trip (allocation persistence) ---------------------
+    # ``comm`` and ``history`` are deliberately not serialised: the comm
+    # model is cluster configuration (rebuilt from the ClusterSpec on
+    # load) and the history is solve-time diagnostics.
+
+    def to_dict(self) -> dict:
+        return {
+            "allocation": self.allocation.to_dict(),
+            # -inf for infeasible solves; JSON has no Infinity => null
+            "objective": self.objective
+            if math.isfinite(self.objective) else None,
+            "feasible": self.feasible,
+            "solve_time": self.solve_time,
+            "iterations": self.iterations,
+            "predictor_time": self.predictor_time,
+            "mode": self.mode,
+            "warm_started": self.warm_started,
+            "policy": self.policy,
+        }
+
+    @classmethod
+    def from_dict(cls, d, comm: Optional[CommModel] = None) -> "SolveResult":
+        obj = d["objective"]
+        return cls(
+            allocation=Allocation.from_dict(d["allocation"]),
+            objective=-math.inf if obj is None else float(obj),
+            feasible=bool(d["feasible"]),
+            solve_time=float(d.get("solve_time", 0.0)),
+            iterations=int(d.get("iterations", 0)),
+            predictor_time=float(d.get("predictor_time", 0.0)),
+            mode=str(d.get("mode", "scalar")),
+            warm_started=bool(d.get("warm_started", False)),
+            comm=comm,
+            policy=str(d.get("policy", "")))
+
 
 class CamelotAllocator:
     def __init__(self, pipeline: ServiceGraph, predictor: PipelinePredictor,
@@ -198,6 +239,14 @@ class CamelotAllocator:
         # ``invalidate_caches`` drops everything after a predictor re-fit.
         self._tables_cache: dict = {}
         self._ffd_memo: dict = {}
+        # multi-tenant hooks (None => the single-service behaviour, bit
+        # for bit).  ``_node_norm`` divides each node's aggregate
+        # throughput before the min (the weighted max-min objective over
+        # tenants); ``_qos_exit_groups`` is a list of (exit-node-ids,
+        # latency-target) pairs evaluating Constraint-5 per tenant over the
+        # union graph instead of once over all exits.
+        self._node_norm: Optional[np.ndarray] = None
+        self._qos_exit_groups: Optional[list] = None
 
     #: entries kept in the FFD memo before it is reset (a long-running
     #: runtime re-solving for months must not grow without bound; one entry
@@ -252,12 +301,28 @@ class CamelotAllocator:
         # fit the QoS target.  Communication on an edge uses the
         # global-memory mechanism when its endpoints can co-locate (quota
         # headroom on one device), else host.  For a chain this is exactly
-        # the paper's Σ duration_i + Σ comm_i.
-        latency = self.pipeline.critical_path(
-            node_cost=lambda i: float(durations[i]),
-            edge_cost=lambda e: self._edge_comm_time(e, ps, batch))
-        if latency > self.pipeline.qos_target * (1 - self.sa.qos_slack):
-            return None
+        # the paper's Σ duration_i + Σ comm_i.  With per-tenant exit groups
+        # (joint multi-tenant solves over a union graph) the constraint is
+        # evaluated once per tenant against the tenant's own target.
+        if self._qos_exit_groups is None:
+            latency = self.pipeline.critical_path(
+                node_cost=lambda i: float(durations[i]),
+                edge_cost=lambda e: self._edge_comm_time(e, ps, batch))
+            if latency > self.pipeline.qos_target * (1 - self.sa.qos_slack):
+                return None
+        else:
+            ecosts = np.array([self._edge_comm_time(e, ps, batch)
+                               for e in self.pipeline.edges])
+            best = self.pipeline.critical_path_nodes(durations, ecosts)
+            latency = 0.0
+            for exits, target in self._qos_exit_groups:
+                lt = float(best[exits].max())
+                if lt > target * (1 - self.sa.qos_slack):
+                    return None
+                latency = max(latency, lt)
+        if self._node_norm is not None:
+            return (float((thpts / self._node_norm).min()), float(ns @ ps),
+                    latency)
         return float(thpts.min()), float(ns @ ps), latency
 
     def _edge_comm_time(self, e: ServiceEdge, ps: np.ndarray,
@@ -363,7 +428,10 @@ class CamelotAllocator:
 
         ns, ps = best_v
         ev = self._eval(ns, ps, batch, n_devices)
-        feasible = ev is not None
+        # the incumbent must also have scored (a min-resource walk that
+        # never met the required load keeps best_score=-inf: its final
+        # state may satisfy Constraints 1-5 yet still miss the load)
+        feasible = ev is not None and best_score > -math.inf
         alloc = Allocation(
             stages=[StageAlloc(int(ns[i]), float(ps[i]), batch)
                     for i in range(n)],
@@ -443,7 +511,11 @@ class CamelotAllocator:
         ar = np.arange(n)
         PS = tab.grid[QI]
         dur = tab.dur[ar, QI]                               # (K, n)
-        thpt_min = (NS * tab.thpt[ar, QI]).min(axis=1)
+        thpt_all = NS * tab.thpt[ar, QI]
+        if self._node_norm is not None:
+            thpt_min = (thpt_all / self._node_norm).min(axis=1)
+        else:
+            thpt_min = thpt_all.min(axis=1)
         quota = (NS * PS).sum(axis=1)
         # Constraint-1 (aggregate), Constraint-2, Constraint-3, Constraint-4
         feas = quota <= n_devices * 1.0 + 1e-9
@@ -453,13 +525,22 @@ class CamelotAllocator:
                 <= n_devices * dev.mem_bandwidth
         feas &= (NS * tab.foots).sum(axis=1) <= n_devices * dev.mem_capacity
         # Constraint-5: one batched longest-path pass over the compiled DAG
+        # (per tenant-exit-group against its own target in joint solves)
         if len(tab.edge_src):
             colo = PS[:, tab.edge_src] + PS[:, tab.edge_dst] <= 1.0 + 1e-9
             ecost = np.where(colo, tab.edge_t_colo, tab.edge_t_host)
         else:
             ecost = None
-        lat = self.pipeline.critical_path_arrays(dur, ecost)
-        feas &= lat <= self.pipeline.qos_target * (1 - self.sa.qos_slack)
+        if self._qos_exit_groups is None:
+            lat = self.pipeline.critical_path_arrays(dur, ecost)
+            feas &= lat <= self.pipeline.qos_target * (1 - self.sa.qos_slack)
+        else:
+            best = self.pipeline.critical_path_nodes(dur, ecost)
+            lat = np.zeros(k)
+            for exits, target in self._qos_exit_groups:
+                lt = best[..., exits].max(axis=-1)
+                feas &= lt <= target * (1 - self.sa.qos_slack)
+                lat = np.maximum(lat, lt)
         # Constraint-1 refined (per-device packability).  Sufficient
         # condition first: FFD fills every opened bin past (1 - q_max), so
         # sum <= (1 - q_max)·D always packs — those rows skip the real FFD.
@@ -613,7 +694,28 @@ class CamelotAllocator:
         rng_w = np.random.default_rng(sa.seed + 0x7A31)
         w_all = w + n_warm
         base_rows = w * c                    # candidate rows of base walkers
-        cur = scores(self._eval_many(NS_cur, QI_cur, tab, n_devices))
+
+        # fallback incumbent for infeasible min-resource solves: the
+        # highest-throughput state that meets Constraints 1–5 regardless of
+        # the required load.  An infeasible Eq. 2 ladder rung returns it as
+        # its allocation, so the next rung warm-starts from the closest
+        # miss instead of re-annealing cold.
+        track_fb = objective != "max_load"
+        fb_score = -math.inf
+        fb_ns = fb_qi = None
+
+        def _track_fb(ev, NS_, QI_):
+            nonlocal fb_score, fb_ns, fb_qi
+            cand = np.where(ev[3], ev[0], -np.inf)
+            j = int(np.argmax(cand))
+            if cand[j] > fb_score:
+                fb_score = float(cand[j])
+                fb_ns, fb_qi = NS_[j].copy(), QI_[j].copy()
+
+        ev0 = self._eval_many(NS_cur, QI_cur, tab, n_devices)
+        if track_fb:
+            _track_fb(ev0, NS_cur, QI_cur)
+        cur = scores(ev0)
         j0 = int(np.argmax(cur))
         best_ns, best_qi = NS_cur[j0].copy(), QI_cur[j0].copy()
         best_score = float(cur[j0])
@@ -656,7 +758,10 @@ class CamelotAllocator:
                                       rng_w.integers(n, size=len(wrows)),
                                       rng_w.integers(6, size=len(wrows)),
                                       max_inst, g)
-            s_flat = scores(self._eval_many(NS, QI, tab, n_devices))
+            ev = self._eval_many(NS, QI, tab, n_devices)
+            if track_fb:
+                _track_fb(ev, NS, QI)
+            s_flat = scores(ev)
             s = s_flat.reshape(w_all, c)
             # candidate selection anneals from explorative to greedy: while
             # hot, a walker Metropolis-tests a RANDOM feasible proposal
@@ -731,10 +836,17 @@ class CamelotAllocator:
             if better:
                 best_ns, best_qi, best_score = base_ns, base_qi, base_score
 
+        # a solve whose incumbent never scored (min-resource rung that
+        # cannot meet the load) is infeasible even when the state it is
+        # left holding satisfies Constraints 1–5; it hands back the
+        # fallback incumbent so ladder callers can warm-seed the next rung
+        scored = np.isfinite(best_score)
+        if not scored and fb_ns is not None:
+            best_ns, best_qi = fb_ns, fb_qi
         ns, ps = best_ns, tab.grid[best_qi]
         thpt, quota, lat, feas = self._eval_many(
             best_ns[None], best_qi[None], tab, n_devices)
-        feasible = bool(feas[0])
+        feasible = bool(feas[0]) and scored
         alloc = Allocation(
             stages=[StageAlloc(int(ns[i]), float(ps[i]), batch)
                     for i in range(n)],
@@ -765,31 +877,176 @@ class CamelotAllocator:
                             warm=warm_start)
 
     def min_devices(self, batch: int, load: float) -> int:
-        """Eq. 2: y = max(ΣC(i,s)/G, ΣM(i,s)/F) scaled to the target load."""
+        """Eq. 2: y = max(ΣC(i,s)/G, ΣM(i,s)/F) scaled to the target load.
+        With a per-node normalisation vector (joint multi-tenant solves)
+        node i's demand is sized for its own tenant's load."""
         dev = self.device
         n = self.pipeline.n_stages
+        norm = self._node_norm if self._node_norm is not None else np.ones(n)
         # FLOP/s demand at `load` qps across stages
         flops_demand = sum(self.predictor.stages[i].flops(batch) / batch
-                           * load for i in range(n))
+                           * load * norm[i] for i in range(n))
         mem_demand = sum(self.predictor.stages[i].footprint(batch)
                          for i in range(n))
         y = max(flops_demand / dev.peak_flops,
                 mem_demand / dev.mem_capacity)
         return max(1, int(math.ceil(y - 1e-9)))
 
+    def _min_rung_bound(self, batch: int, load: float) -> int:
+        """Certified lower bound on the feasible Eq. 2 ladder rung, from
+        one vectorized pass over the per-solve tables (vectorized mode's
+        batched rung eliminator).
+
+        Any allocation supporting ``load`` must give every node i an
+        aggregate throughput N_i·f_i(p_i) ≥ load_i with p_i on the quota
+        grid, so per node: quota N_i·p_i ≥ load_i·min_p(p/f_i(p)),
+        instances N_i ≥ load_i/max_p f_i(p) (and ≥ 1), bandwidth
+        N_i·b_i(p_i) ≥ load_i·min_p(b_i(p)/f_i(p)), memory N_i·M_i.
+        Summing and dividing by the per-device capacities bounds the
+        smallest rung any candidate — not just the walker seeds — could be
+        feasible at; rungs below it are eliminated without annealing.
+        The bound is exact w.r.t. the same tables ``_eval_many`` checks."""
+        dev = self.device
+        tab = self._policy_tables(batch)
+        n = self.pipeline.n_stages
+        norm = self._node_norm if self._node_norm is not None else np.ones(n)
+        loads = load * norm                                   # (n,)
+        f = np.maximum(tab.thpt, 1e-12)                       # (n, G)
+        n_lb = np.maximum(1.0, loads / f.max(axis=1))         # instances
+        quota_lb = np.maximum(loads * (tab.grid / f).min(axis=1),
+                              QUOTA_MIN).sum()
+        inst_lb = n_lb.sum()
+        mem_lb = (n_lb * tab.foots).sum()
+        y = max(quota_lb,
+                inst_lb / dev.max_instances,
+                mem_lb / dev.mem_capacity)
+        if self.sa.bandwidth_constraint:
+            bw_lb = (loads * (tab.bw / f).min(axis=1)).sum()
+            y = max(y, bw_lb / dev.mem_bandwidth)
+        return max(1, int(math.ceil(y - 1e-9)))
+
     def solve_min_resource(self, batch: int, load: float,
                            warm_start: Optional[Allocation] = None,
                            ) -> SolveResult:
         """Case 2 (Eq. 2 + Eq. 3): minimise resource usage at ``load`` qps.
-        ``warm_start`` seeds every rung of the Eq. 2 device ladder with a
+
+        Vectorized mode sweeps the Eq. 2 device ladder in two moves: a
+        batched table pass (``_min_rung_bound``) eliminates provably
+        infeasible rungs wholesale, and each remaining infeasible rung
+        hands its best incumbent (the highest-throughput state meeting
+        Constraints 1–5) forward as the next rung's warm seed instead of
+        re-annealing cold.  ``warm_start`` seeds the first rung with a
         previous allocation (diurnal re-solves revisit near-identical
-        problems, so the incumbent is usually one polish away)."""
+        problems, so the incumbent is usually one polish away); scalar
+        mode keeps the paper-faithful sequential ``y += 1`` climb."""
         y = self.min_devices(batch, load)
+        vec = self.sa.mode == "vectorized"
+        if vec:
+            y = max(y, self._min_rung_bound(batch, load))
+        warm = warm_start
+        res = None
         while y <= self.n_devices:
             res = self._anneal(batch, y, "min_resource", required_load=load,
-                               warm=warm_start)
+                               warm=warm)
             if res.feasible:
                 return res
-            y += 1   # infeasible at y devices: grow (Eq. 2 is a lower bound)
+            # carry the rung's fallback incumbent forward (vectorized
+            # mode): it already chases the load under Constraints 1–5, so
+            # the next (looser) rung polishes it instead of rediscovering
+            # the basin.  The scalar walk stays paper-faithful and cold.
+            if vec and res.allocation.stages:
+                warm = res.allocation
+            y += 1   # infeasible at y: grow (Eq. 2 is a lower bound)
+        if res is not None:
+            return res
+        # the ladder never ran: the Eq. 2 bound already exceeds the
+        # cluster — report the (infeasible) best effort at full size
         return self._anneal(batch, self.n_devices, "min_resource",
-                            required_load=load, warm=warm_start)
+                            required_load=load, warm=warm)
+
+
+class MultiTenantAllocator(CamelotAllocator):
+    """Joint contention-aware allocation for a ``TenantSet`` sharing ONE
+    device pool (the datacenter case the paper targets: many microservice
+    pipelines co-located on spatially-shared accelerators).
+
+    The decision vector concatenates every tenant's stage vector — the
+    union-graph node namespace of ``TenantSet`` — so one annealing state
+    covers all services.  Constraints 1–4 are evaluated over the shared
+    pool: co-located instances from *different* services contend for
+    compute quota, MPS instance slots, global-memory bandwidth and
+    capacity exactly like same-service ones, and the FFD packer sees the
+    combined quota multiset.  Constraint-5 is evaluated per tenant (each
+    service's own critical path against its own QoS target).
+
+      * ``solve_max_load``     — joint Case 1: maximise
+        ``min_t load_t / weight_t``, the best normalized load every tenant
+        can sustain simultaneously (objective value = that λ; tenant t
+        then supports ``λ·weight_t`` qps).
+      * ``solve_min_resource`` — joint Case 2: minimise total quota while
+        tenant t supports ``loads[t]`` qps, over the shared Eq. 2 ladder.
+    """
+
+    def __init__(self, tenants, predictor: PipelinePredictor,
+                 device: DeviceSpec, n_devices: int,
+                 comm: Optional[CommModel] = None,
+                 sa: Optional[SAConfig] = None):
+        if not isinstance(tenants, TenantSet):
+            tenants = TenantSet(tenants)
+        super().__init__(tenants.union_graph, predictor, device, n_devices,
+                         comm=comm, sa=sa)
+        self.tenants = tenants
+        self._weight_nodes = tenants.node_values(tenants.weights)
+        self._node_norm = self._weight_nodes
+        self._qos_exit_groups = [
+            (exits, t.qos_target)
+            for exits, t in zip(tenants.exit_groups, tenants.tenants)]
+
+    def solve_min_resource(self, batch: int, loads,
+                           warm_start: Optional[Allocation] = None,
+                           ) -> SolveResult:
+        """Joint Eq. 2 + Eq. 3: ``loads`` is one required qps per tenant
+        (a scalar applies to every tenant).  The solve normalises each
+        node's throughput by its tenant's load, so the shared ladder and
+        annealer run with required_load=1.0."""
+        if np.isscalar(loads):
+            loads = [float(loads)] * len(self.tenants)
+        assert len(loads) == len(self.tenants), \
+            "need one required load per tenant"
+        self._node_norm = self.tenants.node_values(
+            [max(float(l), 1e-9) for l in loads])
+        try:
+            return super().solve_min_resource(batch, 1.0,
+                                              warm_start=warm_start)
+        finally:
+            self._node_norm = self._weight_nodes
+
+    def per_tenant_allocations(self, alloc: Allocation,
+                               batch: int) -> List[Allocation]:
+        """Service-scoped slices of a joint allocation, each annotated with
+        its own tenant's predicted supported load (min aggregate node
+        throughput) and critical-path latency.  Placement device ids stay
+        global — the tenants keep sharing the one pool."""
+        tab = self._policy_tables(batch)
+        parts = self.tenants.split_allocation(alloc)
+        ns = np.array([s.n_instances for s in alloc.stages], np.int64)
+        qi = np.clip(np.rint(np.array(
+            [s.quota for s in alloc.stages]) / QUOTA_STEP).astype(
+                np.int64) - 1, 0, len(tab.grid) - 1)
+        ar = np.arange(len(ns))
+        PS = tab.grid[qi]
+        thpt = ns * tab.thpt[ar, qi]
+        if len(tab.edge_src):
+            colo = PS[tab.edge_src] + PS[tab.edge_dst] <= 1.0 + 1e-9
+            ecost = np.where(colo, tab.edge_t_colo, tab.edge_t_host)
+        else:
+            ecost = None
+        best = self.pipeline.critical_path_nodes(tab.dur[ar, qi], ecost)
+        for part, t, off, exits in zip(parts, self.tenants.tenants,
+                                       self.tenants.offsets,
+                                       self.tenants.exit_groups):
+            n_t = t.graph.n_nodes
+            part.predicted_min_throughput = float(
+                thpt[off:off + n_t].min())
+            part.predicted_latency = float(best[exits].max())
+        return parts

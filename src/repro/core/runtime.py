@@ -16,10 +16,12 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.allocator import CamelotAllocator, SAConfig, SolveResult
+from repro.core.allocator import (CamelotAllocator, MultiTenantAllocator,
+                                  SAConfig, SolveResult)
 from repro.core.comm import CommModel
 from repro.core.predictor import PipelinePredictor
-from repro.core.types import Allocation, DeviceSpec, ServiceGraph
+from repro.core.types import (Allocation, DeviceSpec, ServiceGraph,
+                              TenantSet)
 
 
 @dataclass
@@ -143,6 +145,123 @@ class CamelotRuntime:
         next_realloc = 0.0
         while t < duration:
             self.observe(load_fn(t))
+            if t >= next_realloc:
+                self.reallocate(t)
+                next_realloc = t + self.rt.reallocate_every
+            t += sample_every
+        return self.history
+
+
+class MultiTenantRuntime:
+    """Online joint reallocation for N services sharing one device pool.
+
+    The single-service loop of ``CamelotRuntime``, lifted to a
+    ``TenantSet``: per-tenant EWMA load estimates drive ONE joint
+    min-resource solve (every tenant's demand in the same annealing state,
+    contention shared across services), warm-started from the incumbent
+    joint allocation; when any tenant's normalized estimate approaches the
+    joint peak capability, the max-peak allocation is used outright.
+    ``attach_engine`` connects a live ``MultiTenantEngine`` — every
+    reallocation pushes the service-scoped slices of the fresh joint
+    allocation into it between batches.
+    """
+
+    def __init__(self, tenants, predictor: PipelinePredictor,
+                 device: DeviceSpec, n_devices: int, batch: int,
+                 rt: Optional[RuntimeConfig] = None,
+                 sa: Optional[SAConfig] = None,
+                 comm: Optional[CommModel] = None):
+        if not isinstance(tenants, TenantSet):
+            tenants = TenantSet(tenants)
+        self.tenants = tenants
+        self.predictor = predictor
+        self.device = device
+        self.n_devices = n_devices
+        self.batch = batch
+        self.rt = rt if rt is not None else RuntimeConfig()
+        self.comm = comm if comm is not None \
+            else CommModel(device, global_memory_enabled=True)
+        self.allocator = MultiTenantAllocator(tenants, predictor, device,
+                                              n_devices, comm=self.comm,
+                                              sa=sa)
+        peak = self.allocator.solve_max_load(batch)
+        self.peak_result = peak
+        # λ: the normalized load every tenant sustains simultaneously
+        self.peak_lambda = peak.objective if peak.feasible else 0.0
+        self._load_est = [0.0] * len(tenants.tenants)
+        self.current: Allocation = peak.allocation
+        self.last_result: SolveResult = peak
+        self.history: List[ReallocationEvent] = []
+        self._engine = None
+
+    # ------------------------------------------------------------------
+
+    def attach_engine(self, engine) -> None:
+        """Connect a live ``MultiTenantEngine``; subsequent joint
+        reallocations are split per tenant and applied to it."""
+        self._engine = engine
+
+    def observe(self, qps_samples) -> None:
+        """EWMA-update every tenant's load estimate (one sample per
+        tenant, in TenantSet order)."""
+        assert len(qps_samples) == len(self._load_est)
+        a = self.rt.ewma_alpha
+        self._load_est = [(1 - a) * est + a * s
+                          for est, s in zip(self._load_est, qps_samples)]
+
+    @property
+    def load_estimates(self) -> List[float]:
+        return list(self._load_est)
+
+    def _normalized_estimate(self) -> float:
+        """The binding tenant's weight-normalized load estimate (the λ the
+        cluster must currently sustain)."""
+        return max(est / max(t.weight, 1e-9)
+                   for est, t in zip(self._load_est, self.tenants.tenants))
+
+    def reallocate(self, now: float) -> Allocation:
+        """One joint re-solve for the current per-tenant load estimates;
+        returns (and pushes to an attached engine) the joint allocation."""
+        targets = [est * self.rt.headroom for est in self._load_est]
+        norm_target = self._normalized_estimate() * self.rt.headroom
+        if self.peak_lambda and \
+                norm_target >= self.rt.peak_switch_frac * self.peak_lambda:
+            res = self.peak_result
+            alloc, provisioned, feasible = (res.allocation, self.peak_lambda,
+                                            res.feasible)
+        else:
+            res = self.allocator.solve_min_resource(
+                self.batch, [max(t, 1.0) for t in targets],
+                warm_start=self.current if self.rt.warm_start else None)
+            if res.feasible:
+                alloc, provisioned, feasible = (res.allocation, norm_target,
+                                                True)
+            else:                       # fall back to the peak allocation
+                alloc, provisioned, feasible = (self.peak_result.allocation,
+                                                self.peak_lambda, False)
+        self.last_result = res
+        self.current = alloc
+        if self._engine is not None and alloc.placement is not None:
+            self._engine.apply_allocations(
+                self.tenants.split_allocation(alloc))
+        self.history.append(ReallocationEvent(
+            time=now, load_estimate=self._normalized_estimate(),
+            provisioned_for=provisioned,
+            total_quota=alloc.total_quota(), feasible=feasible,
+            objective=res.objective, warm_started=res.warm_started))
+        return alloc
+
+    # ------------------------------------------------------------------
+
+    def run_trace(self, load_fns, duration: float,
+                  sample_every: float = 10.0) -> List[ReallocationEvent]:
+        """Drive the joint loop over one load trace per tenant
+        (``load_fns[t](time) -> qps``)."""
+        assert len(load_fns) == len(self._load_est)
+        t = 0.0
+        next_realloc = 0.0
+        while t < duration:
+            self.observe([fn(t) for fn in load_fns])
             if t >= next_realloc:
                 self.reallocate(t)
                 next_realloc = t + self.rt.reallocate_every

@@ -38,6 +38,7 @@ unchanged.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -304,14 +305,13 @@ class ServiceGraph:
             best[u] = node_cost(u) + (max(incoming) if incoming else 0.0)
         return max(best[x] for x in self.exits)
 
-    def critical_path_arrays(self, node_costs: np.ndarray,
-                             edge_costs: Optional[np.ndarray] = None,
-                             ) -> np.ndarray:
-        """Batched ``critical_path``: ``node_costs`` is ``(..., n_nodes)``
-        and ``edge_costs`` ``(..., n_edges)`` (edge order = ``self.edges``);
-        returns the ``(...)`` longest entry→exit path per leading row.  One
-        numpy pass over the compiled topo arrays evaluates every candidate
-        allocation at once."""
+    def critical_path_nodes(self, node_costs: np.ndarray,
+                            edge_costs: Optional[np.ndarray] = None,
+                            ) -> np.ndarray:
+        """The batched longest-path pass WITHOUT the final exit reduction:
+        returns the full ``(..., n_nodes)`` best-path-ending-at-node array.
+        Callers that need per-exit-group maxima (e.g. per-tenant QoS over a
+        disjoint union graph) reduce it themselves."""
         nc = np.asarray(node_costs, np.float64)
         ct = self.compiled
         best = np.zeros_like(nc)
@@ -324,7 +324,18 @@ class ServiceGraph:
                 best[..., u] = nc[..., u] + inc.max(axis=-1)
             else:
                 best[..., u] = nc[..., u]
-        return best[..., ct.exits].max(axis=-1)
+        return best
+
+    def critical_path_arrays(self, node_costs: np.ndarray,
+                             edge_costs: Optional[np.ndarray] = None,
+                             ) -> np.ndarray:
+        """Batched ``critical_path``: ``node_costs`` is ``(..., n_nodes)``
+        and ``edge_costs`` ``(..., n_edges)`` (edge order = ``self.edges``);
+        returns the ``(...)`` longest entry→exit path per leading row.  One
+        numpy pass over the compiled topo arrays evaluates every candidate
+        allocation at once."""
+        best = self.critical_path_nodes(node_costs, edge_costs)
+        return best[..., self.compiled.exits].max(axis=-1)
 
     def __repr__(self) -> str:
         return (f"ServiceGraph({self.name!r}, nodes={len(self.nodes)}, "
@@ -358,6 +369,17 @@ class Placement:
     def devices_used(self) -> set:
         return {d for st in self.per_stage for d, _ in st}
 
+    # ---- dict round-trip (allocation persistence) ---------------------
+
+    def to_dict(self) -> dict:
+        return {"per_stage": [[[d, q] for d, q in st]
+                              for st in self.per_stage]}
+
+    @classmethod
+    def from_dict(cls, d) -> "Placement":
+        return cls(per_stage=[[(int(dev), float(q)) for dev, q in st]
+                              for st in d["per_stage"]])
+
 
 @dataclass
 class Allocation:
@@ -371,3 +393,172 @@ class Allocation:
 
     def total_instances(self) -> int:
         return sum(s.n_instances for s in self.stages)
+
+    # ---- dict round-trip (allocation persistence) ---------------------
+
+    def to_dict(self) -> dict:
+        # predicted_latency is +inf for infeasible allocations; JSON has no
+        # Infinity, so non-finite floats serialise as null
+        lat = self.predicted_latency
+        return {
+            "stages": [{"n_instances": s.n_instances, "quota": s.quota,
+                        "batch": s.batch} for s in self.stages],
+            "placement": self.placement.to_dict()
+            if self.placement is not None else None,
+            "predicted_min_throughput": self.predicted_min_throughput,
+            "predicted_latency": lat if math.isfinite(lat) else None,
+        }
+
+    @classmethod
+    def from_dict(cls, d) -> "Allocation":
+        pl = d.get("placement")
+        lat = d.get("predicted_latency", 0.0)
+        return cls(
+            stages=[StageAlloc(int(s["n_instances"]), float(s["quota"]),
+                               int(s["batch"])) for s in d["stages"]],
+            placement=Placement.from_dict(pl) if pl is not None else None,
+            predicted_min_throughput=float(
+                d.get("predicted_min_throughput", 0.0)),
+            predicted_latency=float("inf") if lat is None else float(lat))
+
+
+# --------------------------------------------------------------------------
+# Multi-tenant layer: N services sharing ONE device pool
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Tenant:
+    """One service sharing the cluster with others.
+
+    ``graph`` carries the service topology and its OWN QoS target
+    (Constraint-5 is evaluated per tenant); ``weight`` normalises the joint
+    max-peak objective (the solver maximises ``min_t load_t / weight_t`` —
+    with the default 1.0 every tenant's absolute supported load counts
+    equally, weights express that one tenant needs proportionally more);
+    ``required_load`` is the tenant's demand for joint min-resource solves.
+    """
+    name: str
+    graph: ServiceGraph
+    weight: float = 1.0
+    required_load: Optional[float] = None
+
+    @property
+    def qos_target(self) -> float:
+        return self.graph.qos_target
+
+
+class TenantSet:
+    """A set of tenants with a stable node namespace over one device pool.
+
+    Tenant t's local node ``i`` is global node ``offsets[t] + i`` — the
+    joint allocator's decision vector, the packer's instance list and the
+    per-device accounting all index this namespace, so co-located instances
+    of *different* services contend exactly like same-service ones.
+
+    ``union_graph`` is the disjoint union of the tenants' graphs (edges
+    shifted into the namespace): one ``CompiledTopology`` evaluates every
+    tenant's critical path in a single batched pass, with per-tenant QoS
+    read off the tenant's own exit group (``exit_groups``).
+    """
+
+    def __init__(self, tenants: Sequence[Tenant]):
+        assert tenants, "a TenantSet needs at least one tenant"
+        self.tenants: List[Tenant] = list(tenants)
+        names = [t.name for t in self.tenants]
+        assert len(set(names)) == len(names), \
+            f"tenant names must be unique, got {names}"
+        self.offsets: List[int] = []
+        off = 0
+        for t in self.tenants:
+            self.offsets.append(off)
+            off += t.graph.n_nodes
+        self.n_nodes = off
+        # global node id -> tenant index
+        self.node_tenant = np.concatenate([
+            np.full(t.graph.n_nodes, ti, np.int64)
+            for ti, t in enumerate(self.tenants)])
+        self._union: Optional[ServiceGraph] = None
+
+    def __len__(self) -> int:
+        return len(self.tenants)
+
+    def __iter__(self):
+        return iter(self.tenants)
+
+    @property
+    def union_graph(self) -> ServiceGraph:
+        """The disjoint union as one ServiceGraph (built once, cached).
+        Its ``qos_target`` is the tightest tenant target — callers that
+        need per-tenant Constraint-5 use ``exit_groups`` instead."""
+        if self._union is None:
+            nodes: List[MicroserviceProfile] = []
+            edges: List[ServiceEdge] = []
+            for t, off in zip(self.tenants, self.offsets):
+                nodes.extend(t.graph.nodes)
+                edges.extend(ServiceEdge(e.src + off, e.dst + off,
+                                         e.payload_bytes_per_query)
+                             for e in t.graph.edges)
+            self._union = ServiceGraph(
+                "+".join(t.name for t in self.tenants), nodes, edges,
+                qos_target=min(t.qos_target for t in self.tenants))
+        return self._union
+
+    @property
+    def exit_groups(self) -> List[np.ndarray]:
+        """Per tenant: its exit nodes in the global namespace (the reduction
+        sets for per-tenant critical-path QoS)."""
+        return [np.asarray(t.graph.exits, np.int64) + off
+                for t, off in zip(self.tenants, self.offsets)]
+
+    def node_values(self, per_tenant: Sequence[float]) -> np.ndarray:
+        """Expand one value per tenant to one value per global node."""
+        assert len(per_tenant) == len(self.tenants)
+        return np.asarray(per_tenant, np.float64)[self.node_tenant]
+
+    @property
+    def weights(self) -> List[float]:
+        return [t.weight for t in self.tenants]
+
+    # ---- allocation namespacing ---------------------------------------
+
+    def split_allocation(self, alloc: Allocation) -> List[Allocation]:
+        """Slice a joint (union-namespace) Allocation into service-scoped
+        per-tenant Allocations.  Placement device ids stay GLOBAL — the
+        tenants share the one device pool, so per-tenant views must keep
+        pointing at the shared devices.
+
+        The slices' predicted metrics are left zeroed: the joint
+        allocation's objective/latency are cross-tenant aggregates, not
+        any one tenant's — ``MultiTenantAllocator.per_tenant_allocations``
+        annotates each slice with its own tenant's values."""
+        assert len(alloc.stages) == self.n_nodes, \
+            (len(alloc.stages), self.n_nodes)
+        out = []
+        for t, off in zip(self.tenants, self.offsets):
+            n = t.graph.n_nodes
+            pl = None
+            if alloc.placement is not None:
+                pl = Placement(per_stage=[
+                    list(st) for st in alloc.placement.per_stage[off:off + n]])
+            out.append(Allocation(
+                stages=[StageAlloc(s.n_instances, s.quota, s.batch)
+                        for s in alloc.stages[off:off + n]],
+                placement=pl))
+        return out
+
+    def join_allocations(self, allocs: Sequence[Allocation]) -> Allocation:
+        """Concatenate per-tenant Allocations into the union namespace (the
+        warm-start path: per-tenant incumbents seed a joint re-solve)."""
+        assert len(allocs) == len(self.tenants)
+        stages: List[StageAlloc] = []
+        per_stage: List[List[Tuple[int, float]]] = []
+        placeable = all(a.placement is not None for a in allocs)
+        for t, a in zip(self.tenants, allocs):
+            assert len(a.stages) == t.graph.n_nodes
+            stages.extend(StageAlloc(s.n_instances, s.quota, s.batch)
+                          for s in a.stages)
+            if placeable:
+                per_stage.extend(list(st) for st in a.placement.per_stage)
+        return Allocation(
+            stages=stages,
+            placement=Placement(per_stage=per_stage) if placeable else None)

@@ -1,5 +1,6 @@
-from repro.serving.engine import (ModelStageServer, PipelineEngine, Query,
-                                  ServeStats, make_trace)
+from repro.serving.engine import (ModelStageServer, MultiTenantEngine,
+                                  PipelineEngine, Query, ServeStats,
+                                  make_trace)
 
-__all__ = ["ModelStageServer", "PipelineEngine", "Query", "ServeStats",
-           "make_trace"]
+__all__ = ["ModelStageServer", "MultiTenantEngine", "PipelineEngine",
+           "Query", "ServeStats", "make_trace"]

@@ -294,13 +294,7 @@ class PipelineEngine:
     # ---- internals -----------------------------------------------------
 
     def _stack(self, tokens_list: List[np.ndarray]) -> jax.Array:
-        # pad partial batches to the fixed batch size: one compiled shape
-        stacked = np.stack(tokens_list)
-        if len(tokens_list) < self.batch_size:
-            pad = np.zeros((self.batch_size - len(tokens_list),) +
-                           stacked.shape[1:], stacked.dtype)
-            stacked = np.concatenate([stacked, pad])
-        return jnp.asarray(stacked)
+        return _stack_tokens(tokens_list, self.batch_size)
 
     def _worker(self, inst: StageInstance, rb: ReadyBatch,
                 completions: queue.Queue) -> None:
@@ -312,18 +306,7 @@ class PipelineEngine:
         completions.put((inst, rb, out, time.perf_counter() - t0, err))
 
     def _fanin_data(self, node: int, inputs: Dict[int, jax.Array]) -> jax.Array:
-        """Consumer input from the joined predecessor outputs: the branch
-        token ids are summed in predecessor-id order (commutative, so the
-        result is independent of branch completion order) and consumed as a
-        token prefix — for a single predecessor this is the chain contract
-        unchanged."""
-        nxt = self.stages[node]
-        arrs = [inputs[p] for p in sorted(inputs)]
-        handed = arrs[0]
-        for a in arrs[1:]:
-            handed = handed + a
-        return jnp.tile(handed[:, None] % nxt.cfg.vocab_size,
-                        (1, nxt.seq_len))
+        return _fanin_combine(self.stages, node, inputs)
 
     def _complete(self, ev, core: ExecCore, stats: ServeStats,
                   start: float) -> None:
@@ -363,3 +346,213 @@ def make_trace(n: int, qps: float, seq_len: int, vocab: int,
     return [Query(qid=i, arrival=float(t[i]),
                   tokens=rng.integers(0, vocab, seq_len).astype(np.int32))
             for i in range(n)]
+
+
+def _stack_tokens(tokens_list: List[np.ndarray], batch_size: int) -> jax.Array:
+    """Pad a partial batch to the stage's fixed batch size (one compiled
+    shape per stage) — shared by both engines."""
+    stacked = np.stack(tokens_list)
+    if len(tokens_list) < batch_size:
+        pad = np.zeros((batch_size - len(tokens_list),) + stacked.shape[1:],
+                       stacked.dtype)
+        stacked = np.concatenate([stacked, pad])
+    return jnp.asarray(stacked)
+
+
+def _fanin_combine(stages: Sequence, node: int,
+                   inputs: Dict[int, jax.Array]) -> jax.Array:
+    """Consumer input from the joined predecessor outputs: the branch
+    token ids are summed in predecessor-id order (commutative, so the
+    result is independent of branch completion order) and consumed as a
+    token prefix — for a single predecessor this is the chain contract
+    unchanged.  Shared by both engines."""
+    nxt = stages[node]
+    arrs = [inputs[p] for p in sorted(inputs)]
+    handed = arrs[0]
+    for a in arrs[1:]:
+        handed = handed + a
+    return jnp.tile(handed[:, None] % nxt.cfg.vocab_size,
+                    (1, nxt.seq_len))
+
+
+# --------------------------------------------------------------------------
+# Multi-tenant live serving: N services sharing one worker pool
+# --------------------------------------------------------------------------
+
+@dataclass
+class _TenantServe:
+    """Per-tenant serving context of a MultiTenantEngine."""
+    stages: List                       # one ModelStageServer per graph node
+    graph: ServiceGraph
+    alloc: Allocation
+    channels: _EdgeChannels
+    batch_size: int
+
+
+class MultiTenantEngine:
+    """Live twin of ``MultiTenantSimulator``: N tenant service graphs
+    co-served from ONE shared worker pool.
+
+    Each tenant gets its own ``ExecCore`` (admission, batching, ready
+    queues against its slice of the joint ``Placement``) and its own
+    per-edge channels, but every dispatch lands in one shared
+    ``ThreadPoolExecutor`` sized by the TOTAL placed instance count — the
+    live counterpart of the shared device pool: tenants contend for the
+    same workers, and a joint allocation that over-packs one tenant slows
+    the others, observably.  ``apply_allocations`` swaps all tenants'
+    allocations between batches (``MultiTenantRuntime`` pushes the
+    service-scoped slices of each joint re-solve here).
+    """
+
+    def __init__(self, tenant_stages: Sequence[Sequence],
+                 graphs: Sequence[ServiceGraph],
+                 allocations: Sequence[Allocation],
+                 comm_mechanism: str = "auto", batch_timeout: float = 0.05,
+                 comm_model: Optional[CommModel] = None):
+        assert comm_mechanism in ("auto", "device", "host")
+        assert len(tenant_stages) == len(graphs) == len(allocations), \
+            "need stages, graph and allocation per tenant"
+        self.comm_model = comm_model or CommModel(RTX_2080TI)
+        force = None if comm_mechanism == "auto" else comm_mechanism
+        self.tenants: List[_TenantServe] = []
+        for stages, g, alloc in zip(tenant_stages, graphs, allocations):
+            assert alloc.placement is not None, "allocations must be placed"
+            assert g.n_nodes == len(stages), \
+                "graph nodes and stage servers must correspond 1:1"
+            self.tenants.append(_TenantServe(
+                stages=list(stages), graph=g, alloc=alloc,
+                channels=_EdgeChannels(g, self.comm_model, force),
+                batch_size=alloc.stages[0].batch))
+        self.batch_timeout = batch_timeout
+        self._pending_allocs: Optional[List[Allocation]] = None
+        self._alloc_lock = threading.Lock()
+        self.swaps = 0
+
+    # ---- live joint re-allocation -------------------------------------
+
+    def apply_allocations(self, allocations: Sequence[Allocation]) -> None:
+        """Queue a per-tenant allocation swap (one placed Allocation per
+        tenant — the split of a joint re-solve).  A running trace applies
+        it between batches; safe to call from another thread."""
+        allocations = list(allocations)
+        assert len(allocations) == len(self.tenants)
+        for a, t in zip(allocations, self.tenants):
+            assert a.placement is not None
+            assert len(a.stages) == t.graph.n_nodes
+        with self._alloc_lock:
+            self._pending_allocs = allocations
+
+    def _apply_pending(self, cores: List[ExecCore], ex) -> None:
+        with self._alloc_lock:
+            allocs = self._pending_allocs
+            self._pending_allocs = None
+        if allocs is None:
+            return
+        for t, core, alloc in zip(self.tenants, cores, allocs):
+            t.alloc = alloc
+            t.batch_size = alloc.stages[0].batch
+            core.batching.batch_size = t.batch_size
+            core.reset_instances(alloc.placement)
+        total = sum(len(c.instances) for c in cores)
+        if ex is not None and hasattr(ex, "_max_workers"):
+            ex._max_workers = max(ex._max_workers, total)
+        self.swaps += 1
+
+    # ---- trace replay --------------------------------------------------
+
+    def run_traces(self, traces: Sequence[List[Query]]) -> List[ServeStats]:
+        """Replay one query trace per tenant on the shared pool; returns
+        one ``ServeStats`` per tenant (each against its own QoS target)."""
+        assert len(traces) == len(self.tenants)
+        stats = [ServeStats(qos=QoSTracker(t.graph.qos_target))
+                 for t in self.tenants]
+        for t in self.tenants:
+            for st in t.stages:
+                st.warmup(t.batch_size)
+        cores = [ExecCore(t.graph, t.alloc.placement,
+                          BatchingPolicy(t.batch_size, self.batch_timeout),
+                          comm=self.comm_model)
+                 for t in self.tenants]
+        completions: queue.Queue = queue.Queue()
+        in_flight = 0
+        idx = [0] * len(self.tenants)
+        lens = [len(tr) for tr in traces]
+        start = time.perf_counter()
+        total_inst = sum(len(c.instances) for c in cores)
+        with ThreadPoolExecutor(max_workers=max(total_inst, 1)) as ex:
+            while any(i < n for i, n in zip(idx, lens)) or in_flight \
+                    or any(c.has_work() for c in cores):
+                now = time.perf_counter() - start
+                self._apply_pending(cores, ex)
+                for ti, (t, core, tr) in enumerate(
+                        zip(self.tenants, cores, traces)):
+                    while idx[ti] < lens[ti] and \
+                            tr[idx[ti]].arrival <= now:
+                        core.admit(tr[idx[ti]], tr[idx[ti]].arrival)
+                        idx[ti] += 1
+                    for rb in core.form_batches(now):
+                        rb.data = _stack_tokens(
+                            [q.tokens for q in rb.items], t.batch_size)
+                    for inst, rb in core.dispatch(now):
+                        in_flight += 1
+                        ex.submit(self._worker, ti, inst, rb, completions)
+                # sleep until the next event across ALL tenants
+                wake = [traces[ti][idx[ti]].arrival
+                        for ti in range(len(self.tenants))
+                        if idx[ti] < lens[ti]]
+                wake += [d for d in (c.batch_deadline() for c in cores)
+                         if d is not None]
+                timeout = (min(wake) - now) if wake else 0.05
+                timeout = min(max(timeout, 0.0005), 0.05)
+                try:
+                    ev = completions.get(timeout=timeout)
+                except queue.Empty:
+                    continue
+                while True:
+                    in_flight -= 1
+                    self._complete(ev, cores, stats, start)
+                    try:
+                        ev = completions.get_nowait()
+                    except queue.Empty:
+                        break
+        return stats
+
+    # ---- internals -----------------------------------------------------
+
+    def _worker(self, ti: int, inst: StageInstance, rb: ReadyBatch,
+                completions: queue.Queue) -> None:
+        t0 = time.perf_counter()
+        try:
+            out = self.tenants[ti].stages[inst.stage].process(rb.data)
+            err = None
+        except BaseException as e:      # re-raised on the driver thread
+            out, err = None, e
+        completions.put((ti, inst, rb, out, time.perf_counter() - t0, err))
+
+    def _complete(self, ev, cores: List[ExecCore],
+                  stats: List[ServeStats], start: float) -> None:
+        ti, inst, rb, out, dt, err = ev
+        t = self.tenants[ti]
+        core = cores[ti]
+        core.release(inst, busy_for=dt)
+        if err is not None:
+            raise err
+        stats[ti].compute_time += dt
+        u = rb.stage
+        now = time.perf_counter() - start
+        succs = core.succs[u]
+        if succs:
+            for v in succs:
+                same = inst.device in core.consumer_devices(v)
+                t0 = time.perf_counter()
+                handed = t.channels[(u, v)].send(out, same_device=same)
+                stats[ti].comm_time += time.perf_counter() - t0
+                joined = core.deliver(u, v, rb.bid, rb.items, now,
+                                      data=handed)
+                if joined is not None:
+                    joined.data = _fanin_combine(t.stages, v, joined.inputs)
+        elif core.complete_exit(rb.bid, u):
+            for q in rb.items:
+                q.done = now
+                stats[ti].qos.record(now - q.arrival)
+            stats[ti].batches += 1

@@ -1,16 +1,18 @@
 from repro.sim.baselines import (camelot, camelot_min_resource, camelot_nc,
                                  even_allocation, laius, standalone)
-from repro.sim.simulator import (PipelineSimulator, SimConfig, SimResult,
-                                 find_peak_load)
+from repro.sim.simulator import (MultiSimResult, MultiTenantSimulator,
+                                 PipelineSimulator, SimConfig, SimResult,
+                                 find_joint_peak, find_peak_load)
 from repro.sim.workloads import (artifact_pipelines, artifact_stage,
                                  camelot_suite, dag_suite, diamond_service,
-                                 ensemble_service, shared_backbone_service,
-                                 workload_specs)
+                                 ensemble_service, multitenant_suite,
+                                 shared_backbone_service, workload_specs)
 
 __all__ = [
     "camelot", "camelot_min_resource", "camelot_nc", "even_allocation",
-    "laius", "standalone", "PipelineSimulator", "SimConfig", "SimResult",
+    "laius", "standalone", "MultiSimResult", "MultiTenantSimulator",
+    "PipelineSimulator", "SimConfig", "SimResult", "find_joint_peak",
     "find_peak_load", "artifact_pipelines", "artifact_stage", "camelot_suite",
-    "dag_suite", "diamond_service", "ensemble_service",
+    "dag_suite", "diamond_service", "ensemble_service", "multitenant_suite",
     "shared_backbone_service", "workload_specs",
 ]

@@ -39,7 +39,8 @@ import numpy as np
 from repro.core.comm import HOST_STAGED, CommModel, mechanism_time
 from repro.core.exec import BatchingPolicy, ExecCore
 from repro.core.qos import QoSTracker
-from repro.core.types import Allocation, DeviceSpec, ServiceGraph
+from repro.core.types import (Allocation, DeviceSpec, ServiceGraph, Tenant,
+                              TenantSet)
 
 
 @dataclass
@@ -75,6 +76,13 @@ class SimResult:
 
 
 class PipelineSimulator:
+    """One service on the cluster: the single-tenant special case of
+    ``MultiTenantSimulator`` (which owns the event loop and the physics).
+    With one tenant the multi-tenant loop's event flow and RNG draw order
+    are exactly the historical single-service ones, so this delegation is
+    bit-for-bit — chain simulations are still pinned against the PR 1
+    snapshot in tests/test_graph.py."""
+
     def __init__(self, pipeline: ServiceGraph, allocation: Allocation,
                  device: DeviceSpec, comm: CommModel,
                  sim: Optional[SimConfig] = None):
@@ -88,101 +96,157 @@ class PipelineSimulator:
     # ------------------------------------------------------------------
 
     def run(self, offered_qps: float) -> SimResult:
-        cfg = self.cfg
-        rng = np.random.default_rng(cfg.seed)
-        graph = self.pipeline
-        qos = QoSTracker(graph.qos_target)
+        multi = MultiTenantSimulator(
+            TenantSet([Tenant(self.pipeline.name, self.pipeline)]),
+            [self.alloc], self.device, self.comm, sim=self.cfg)
+        return multi.run([offered_qps]).per_tenant[0]
 
-        batch_size = self.alloc.stages[0].batch
-        core = ExecCore(
-            graph, self.alloc.placement,
-            BatchingPolicy(batch_size,
-                           cfg.batch_timeout_frac * graph.qos_target),
-            comm=self.comm)
+
+@dataclass
+class MultiSimResult:
+    """Per-tenant ``SimResult``s of one shared-cluster run, plus the
+    cluster-wide aggregates (the device_busy/event counters span every
+    tenant — contention is shared, so they only make sense jointly)."""
+    per_tenant: List[SimResult]
+    device_busy: Dict[int, float] = field(default_factory=dict)
+    events: int = 0
+
+    def meets_qos(self, targets: List[float],
+                  min_completed: int = 1) -> bool:
+        """True when every tenant's p99 meets its target AND actually
+        completed work — a starved tenant (zero recorded latencies, so
+        ``tail_latency() == 0.0``) must read as failing, not passing."""
+        return all(r.qos.count() >= min_completed and r.p99 <= t
+                   for r, t in zip(self.per_tenant, targets))
+
+
+class MultiTenantSimulator:
+    """N service graphs sharing ONE device pool in one virtual timeline.
+
+    Each tenant runs its own ``ExecCore`` (its own admission, batching,
+    ready queues and placement slice), but every *physical* effect is
+    shared: the per-device global-memory-bandwidth aggregate that
+    stretches memory-bound durations (the contention Camelot's
+    Constraint-3 manages) and the per-device PCIe stream counters span all
+    tenants, so co-located instances from different services slow each
+    other down exactly as same-service ones do.  This is the PR 3
+    incremental accounting extended with a tenant axis: dispatch/release
+    update the same per-device aggregate, whichever tenant's core drove
+    them.
+
+    With a single tenant the event flow, the RNG draw order and therefore
+    every latency are bit-identical to ``PipelineSimulator`` (pinned in
+    tests/test_multitenant.py).
+    """
+
+    def __init__(self, tenants, allocations: List[Allocation],
+                 device: DeviceSpec, comm: CommModel,
+                 sim: Optional[SimConfig] = None):
+        if not isinstance(tenants, TenantSet):
+            tenants = TenantSet(tenants)
+        assert len(allocations) == len(tenants.tenants)
+        for a in allocations:
+            assert a.placement is not None, "allocations must be placed"
+        self.tenants = tenants
+        self.allocs = list(allocations)
+        self.device = device
+        self.comm = comm
+        self.cfg = sim if sim is not None else SimConfig()
+
+    def run(self, offered_qps) -> MultiSimResult:
+        cfg = self.cfg
+        tenants = self.tenants.tenants
+        nt = len(tenants)
+        if np.isscalar(offered_qps):
+            offered_qps = [float(offered_qps)] * nt
+        assert len(offered_qps) == nt, "need one offered load per tenant"
+        rng = np.random.default_rng(cfg.seed)
+
+        graphs = [t.graph for t in tenants]
+        qos = [QoSTracker(g.qos_target) for g in graphs]
+        batch_sizes = [a.stages[0].batch for a in self.allocs]
+        cores = [ExecCore(g, a.placement,
+                          BatchingPolicy(b, cfg.batch_timeout_frac
+                                         * g.qos_target),
+                          comm=self.comm)
+                 for g, a, b in zip(graphs, self.allocs, batch_sizes)]
+
+        # ---- SHARED contention bookkeeping (the tenant axis rides on the
+        # payloads; the per-device aggregates do not care which service an
+        # instance belongs to) --------------------------------------------
         device_busy: Dict[int, float] = {}
         host_streams: Dict[int, int] = {}
-
-        # ---- contention bookkeeping ----------------------------------
-        # incremental per-device aggregate: dispatch adds the instance's
-        # bandwidth, release subtracts it — O(1) instead of rescanning
-        # every instance on every dispatch (cfg.incremental_bw=False keeps
-        # the legacy scan for the benchmark's before/after comparison)
         dev_bw: Dict[int, float] = {}
 
         def device_bw_load(dev: int) -> float:
             if cfg.incremental_bw:
                 return dev_bw.get(dev, 0.0)
-            return sum(i.bandwidth for i in core.instances
+            return sum(i.bandwidth for c in cores for i in c.instances
                        if i.busy and i.device == dev)
 
-        # ---- event queue ----------------------------------------------
-        # (time, seq, kind, payload)
         evq: List[Tuple] = []
         seq = itertools.count()
 
         def push(t, kind, payload):
             heapq.heappush(evq, (t, next(seq), kind, payload))
 
-        # arrivals (Poisson)
-        n_arrivals = min(int(offered_qps * cfg.duration) + 1,
-                         cfg.max_queries)
-        gaps = rng.exponential(1.0 / max(offered_qps, 1e-9), n_arrivals)
-        arrival_times = np.cumsum(gaps)
-        arrival_times = arrival_times[arrival_times < cfg.duration]
-        for t in arrival_times:
-            push(t, "arrive", None)
+        # arrivals (Poisson, one stream per tenant drawn in tenant order —
+        # with one tenant this is exactly PipelineSimulator's draw order)
+        for ti, qps in enumerate(offered_qps):
+            n_arrivals = min(int(qps * cfg.duration) + 1, cfg.max_queries)
+            gaps = rng.exponential(1.0 / max(qps, 1e-9), n_arrivals)
+            at = np.cumsum(gaps)
+            for t in at[at < cfg.duration]:
+                push(t, "arrive", ti)
 
-        # ---- physics: charge a dispatched batch its compute time ------
-        def start_compute(inst, rb, now):
-            prof = graph.nodes[inst.stage]
+        # ---- physics: shared-bandwidth contention factor ----------------
+        def start_compute(ti, inst, rb, now):
+            prof = graphs[ti].nodes[inst.stage]
             b = len(rb.items)
             base = prof.duration(b, inst.quota, self.device)
             inst.bandwidth = prof.bandwidth(b, inst.quota, self.device)
             if cfg.incremental_bw:
                 dev_bw[inst.device] = dev_bw.get(inst.device, 0.0) \
                     + inst.bandwidth
-            # global-memory bandwidth contention (paper §IV-A): demand beyond
-            # the device's bandwidth stretches the memory-bound time
             total_bw = device_bw_load(inst.device)
             factor = max(1.0, total_bw / self.device.mem_bandwidth)
-            dur = base * factor * (1 + abs(rng.normal(0, cfg.contention_noise)))
+            dur = base * factor * (1 + abs(rng.normal(
+                0, cfg.contention_noise)))
             device_busy[inst.device] = device_busy.get(inst.device, 0.0) + dur
-            push(now + dur, "compute_done", (inst, rb, dur))
+            push(now + dur, "compute_done", (ti, inst, rb, dur))
 
-        def dispatch(si, now):
-            for inst, rb in core.dispatch_stage(si, now):
-                start_compute(inst, rb, now)
+        def dispatch(ti, si, now):
+            for inst, rb in cores[ti].dispatch_stage(si, now):
+                start_compute(ti, inst, rb, now)
 
-        def flush(now):
-            core.form_batches(now)
-            for node in core.entries:
-                dispatch(node, now)
+        def flush(ti, now):
+            cores[ti].form_batches(now)
+            for node in cores[ti].entries:
+                dispatch(ti, node, now)
 
-        # ---- main loop -------------------------------------------------
-        completed = 0
+        # ---- main loop ---------------------------------------------------
+        completed = [0] * nt
         events = 0
         while evq:
             now, _, kind, payload = heapq.heappop(evq)
             events += 1
             if kind == "arrive":
-                # one timeout is armed per empty→non-empty transition of
-                # the pending queue (a flush always drains it completely),
-                # not one per arrival — the old per-arrival events were
-                # stale on pop for every arrival but the first
+                ti = payload
+                core = cores[ti]
                 was_empty = not core.pending
                 core.admit(now, now)
-                if len(core.pending) >= batch_size:
-                    flush(now)
+                if len(core.pending) >= batch_sizes[ti]:
+                    flush(ti, now)
                 elif was_empty:
                     push(core.batch_deadline(), "timeout",
-                         core.oldest_pending())
+                         (ti, core.oldest_pending()))
             elif kind == "timeout":
-                # stale unless the oldest pending query is still the one
-                # this deadline was armed for
-                if core.oldest_pending() == payload:
-                    flush(now)
+                ti, oldest = payload
+                if cores[ti].oldest_pending() == oldest:
+                    flush(ti, now)
             elif kind == "compute_done":
-                inst, rb, dur = payload
+                ti, inst, rb, dur = payload
+                core = cores[ti]
                 if cfg.incremental_bw:
                     dev_bw[inst.device] = \
                         dev_bw.get(inst.device, 0.0) - inst.bandwidth
@@ -190,9 +254,6 @@ class PipelineSimulator:
                 u = rb.stage
                 succs = core.succs[u]
                 if succs:
-                    # per-edge mechanism selection is the core's call; the
-                    # simulator only charges the modelled cost — one
-                    # transfer event per out-edge (fan-out)
                     for v in succs:
                         route = core.route(u, len(rb.items), inst.device,
                                            dst=v)
@@ -205,36 +266,67 @@ class PipelineSimulator:
                             concurrent=max(host_streams.get(inst.device, 0),
                                            1))
                         push(now + t, "transfer_done",
-                             (u, v, rb.bid, rb.items, used_host,
+                             (ti, u, v, rb.bid, rb.items, used_host,
                               inst.device))
                 elif core.complete_exit(rb.bid, u):
-                    # every exit node has produced this batch: the queries
-                    # are end-to-end complete
                     for at in rb.items:
                         if at >= cfg.warmup:
-                            qos.record(now - at)
-                        completed += 1
-                dispatch(u, now)
+                            qos[ti].record(now - at)
+                        completed[ti] += 1
+                dispatch(ti, u, now)
             elif kind == "transfer_done":
-                src, dst, bid, items, used_host, from_dev = payload
+                ti, src, dst, bid, items, used_host, from_dev = payload
                 if used_host:
                     host_streams[from_dev] = max(
                         0, host_streams.get(from_dev, 0) - 1)
-                # fan-in join barrier: the batch only becomes ready at
-                # ``dst`` once every predecessor branch has delivered
-                if core.deliver(src, dst, bid, items, now) is not None:
-                    dispatch(dst, now)
+                if cores[ti].deliver(src, dst, bid, items, now) is not None:
+                    dispatch(ti, dst, now)
 
         horizon = max(cfg.duration - cfg.warmup, 1e-9)
-        return SimResult(
-            p99=qos.tail_latency(),
-            mean_latency=qos.mean(),
-            completed=completed,
-            offered_qps=offered_qps,
-            achieved_qps=qos.count() / horizon,
-            qos=qos,
+        per_tenant = [SimResult(
+            p99=qos[ti].tail_latency(),
+            mean_latency=qos[ti].mean(),
+            completed=completed[ti],
+            offered_qps=float(offered_qps[ti]),
+            achieved_qps=qos[ti].count() / horizon,
+            qos=qos[ti],
             device_busy=device_busy,
-            events=events)
+            events=events) for ti in range(nt)]
+        return MultiSimResult(per_tenant=per_tenant, device_busy=device_busy,
+                              events=events)
+
+
+def find_joint_peak(make_sim, targets: List[float],
+                    weights: Optional[List[float]] = None, lo: float = 1.0,
+                    hi: float = 4096.0, tol: float = 0.03,
+                    max_iter: int = 14) -> Tuple[float, MultiSimResult]:
+    """Binary-search the highest normalized load λ at which EVERY tenant
+    meets its own p99 target when tenant t is offered ``λ·weights[t]`` qps
+    (weights default to 1 — the joint max-peak objective's measurement
+    counterpart)."""
+    n = len(targets)
+    weights = list(weights) if weights is not None else [1.0] * n
+
+    def ok(lam):
+        r = make_sim().run([lam * w for w in weights])
+        meets = all(rt.p99 <= tgt and rt.qos.count() >= 5
+                    for rt, tgt in zip(r.per_tenant, targets))
+        return meets, r
+
+    meets, best = ok(lo)
+    if not meets:
+        return 0.0, best
+    while hi > lo * (1 + tol):
+        mid = (lo * hi) ** 0.5
+        meets, r = ok(mid)
+        if meets:
+            lo, best = mid, r
+        else:
+            hi = mid
+        if max_iter <= 0:
+            break
+        max_iter -= 1
+    return lo, best
 
 
 def find_peak_load(make_sim, qos_target: float, lo: float = 1.0,

@@ -20,7 +20,7 @@ from typing import Dict, List, Sequence
 
 from repro.configs import active_param_count, get_config
 from repro.core.types import (RTX_2080TI, DeviceSpec, MicroserviceProfile,
-                              Pipeline, ServiceEdge, ServiceGraph)
+                              Pipeline, ServiceEdge, ServiceGraph, Tenant)
 
 
 def _model_stage(name: str, arch: str, tokens_per_query: int,
@@ -191,6 +191,39 @@ def dag_suite(device: DeviceSpec = RTX_2080TI) -> Dict[str, ServiceGraph]:
         "diamond": diamond_service(device),
         "backbone-3h": shared_backbone_service(3, device),
         "ensemble-6": ensemble_service(3, device),
+    }
+
+
+def multitenant_suite(device: DeviceSpec = RTX_2080TI,
+                      ) -> Dict[str, List[Tenant]]:
+    """Multi-tenant co-location scenarios: SETS of services sharing one
+    device pool (the datacenter consolidation case).  Each scenario is a
+    tenant list for ``TenantSet``/``MultiServiceSession``; every tenant
+    keeps its own QoS target, and the joint allocator packs them against
+    shared per-device quota/bandwidth/memory.
+
+      chain+diamond  — a paper chain co-located with the DAG ensemble
+                       (the asymmetric pair: fractional device shares beat
+                       any whole-device static split)
+      two-chains     — two of the paper's Table-I services side by side
+      3-tenant-mixed — two chains plus the multi-exit backbone fan-out
+    """
+    chains = camelot_suite(device)
+    dags = dag_suite(device)
+    return {
+        "chain+diamond": [
+            Tenant("img-to-img", chains["img-to-img"]),
+            Tenant("diamond", dags["diamond"]),
+        ],
+        "two-chains": [
+            Tenant("img-to-text", chains["img-to-text"]),
+            Tenant("text-to-text", chains["text-to-text"]),
+        ],
+        "3-tenant-mixed": [
+            Tenant("img-to-img", chains["img-to-img"]),
+            Tenant("text-to-img", chains["text-to-img"]),
+            Tenant("backbone-3h", dags["backbone-3h"]),
+        ],
     }
 
 

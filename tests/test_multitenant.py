@@ -1,0 +1,477 @@
+"""Multi-tenant Camelot: cross-service contention-aware allocation over
+one shared cluster.
+
+Three contracts pinned here:
+
+  1. **Single-tenant parity**: a ``MultiServiceSession`` with exactly one
+     tenant is bit-for-bit identical to ``CamelotSession`` — same solve
+     (objective, allocation, placement), same simulated latencies — and a
+     one-tenant ``MultiTenantSimulator`` replays ``PipelineSimulator``'s
+     event stream exactly.
+  2. **Per-tenant QoS**: the joint solve enforces each service's OWN
+     critical path against its OWN target (a tenant may legitimately
+     exceed another tenant's tighter budget).
+  3. **Shared-device contention**: Constraints 1–4 span the one device
+     pool — the concatenation of two per-service solo optima is jointly
+     infeasible, and the joint optimum fits.
+"""
+import numpy as np
+import pytest
+
+from repro.camelot import (CamelotSession, ClusterSpec, LoadSpec,
+                           MultiServiceSession, MultiServiceSpec, QoSSpec,
+                           SAConfig, ServiceSpec, TenantSpec)
+from repro.core import (CamelotAllocator, CommModel, MultiTenantAllocator,
+                        PipelinePredictor, RTX_2080TI)
+from repro.core.runtime import MultiTenantRuntime, RuntimeConfig, diurnal_load
+from repro.core.types import Allocation, Tenant, TenantSet
+from repro.sim import (MultiTenantSimulator, PipelineSimulator, SimConfig,
+                       dag_suite, multitenant_suite)
+from repro.sim.workloads import camelot_suite, workload_specs
+
+SA = SAConfig(iterations=500, seed=0)
+SIM = SimConfig(duration=4.0, warmup=0.5, seed=0)
+ALL_SPECS = workload_specs()
+
+
+# --------------------------------------------------------------------------
+# TenantSet namespacing
+# --------------------------------------------------------------------------
+
+def _two_tenant_set():
+    return TenantSet([Tenant("img-to-img", camelot_suite()["img-to-img"]),
+                      Tenant("diamond", dag_suite()["diamond"])])
+
+
+def test_tenant_set_namespacing():
+    ts = _two_tenant_set()
+    assert ts.offsets == [0, 2]
+    assert ts.n_nodes == 6
+    assert list(ts.node_tenant) == [0, 0, 1, 1, 1, 1]
+    union = ts.union_graph
+    assert union.n_nodes == 6
+    # diamond edges shifted into the namespace
+    assert [(e.src, e.dst) for e in union.edges] == \
+        [(0, 1), (2, 3), (2, 4), (3, 5), (4, 5)]
+    # per-tenant exit groups in global ids
+    groups = ts.exit_groups
+    assert list(groups[0]) == [1] and list(groups[1]) == [5]
+    assert list(ts.node_values([2.0, 5.0])) == [2, 2, 5, 5, 5, 5]
+
+
+def test_split_join_allocation_roundtrip():
+    ts = _two_tenant_set()
+    pred = PipelinePredictor.from_graph(ts.union_graph, RTX_2080TI, seed=0)
+    res = MultiTenantAllocator(ts, pred, RTX_2080TI, 3, sa=SA)\
+        .solve_max_load(8)
+    assert res.feasible
+    parts = ts.split_allocation(res.allocation)
+    assert [len(p.stages) for p in parts] == [2, 4]
+    joined = ts.join_allocations(parts)
+    assert [(s.n_instances, s.quota) for s in joined.stages] == \
+        [(s.n_instances, s.quota) for s in res.allocation.stages]
+    assert joined.placement.per_stage == res.allocation.placement.per_stage
+
+
+def test_duplicate_tenant_names_rejected():
+    g = camelot_suite()["img-to-img"]
+    with pytest.raises(AssertionError):
+        TenantSet([Tenant("a", g), Tenant("a", g)])
+
+
+# --------------------------------------------------------------------------
+# 1. Single-tenant parity (pins the tests/test_api.py contract)
+# --------------------------------------------------------------------------
+
+def _hand_wired(graph, n_devices, batch):
+    """The hand-wired path of tests/test_api.py, verbatim."""
+    pred = PipelinePredictor.from_graph(graph, RTX_2080TI, seed=0)
+    comm = CommModel(RTX_2080TI)
+    alloc = CamelotAllocator(graph, pred, RTX_2080TI, n_devices,
+                             comm=comm, sa=SA)
+    res = alloc.solve_max_load(batch)
+    sim = PipelineSimulator(graph, res.allocation, RTX_2080TI, comm, sim=SIM)
+    return res, sim.run(max(res.objective * 0.5, 1.0))
+
+
+@pytest.mark.parametrize("name,n_devices", [("img-to-img", 2),
+                                            ("diamond", 4)])
+def test_single_tenant_session_bit_identical(name, n_devices):
+    spec = ALL_SPECS[name]
+    hand_res, hand_sim = _hand_wired(spec.build(), n_devices, batch=8)
+    sess = MultiServiceSession([spec], ClusterSpec(devices=n_devices),
+                               batch=8)
+    res = sess.solve(policy="max-peak", sa=SAConfig(iterations=500, seed=0))
+    assert res.feasible == hand_res.feasible
+    assert res.objective == hand_res.objective
+    assert [(s.n_instances, s.quota, s.batch)
+            for s in res.allocation.stages] == \
+        [(s.n_instances, s.quota, s.batch)
+         for s in hand_res.allocation.stages]
+    assert res.allocation.placement.per_stage == \
+        hand_res.allocation.placement.per_stage
+    sim = sess.simulate(loads=[max(res.objective * 0.5, 1.0)], sim=SIM)
+    assert sim.per_tenant[0].p99 == hand_sim.p99
+    assert sim.per_tenant[0].mean_latency == hand_sim.mean_latency
+    assert sim.per_tenant[0].completed == hand_sim.completed
+
+
+def test_single_tenant_simulator_bit_identical():
+    graph = camelot_suite()["img-to-img"]
+    pred = PipelinePredictor.from_graph(graph, RTX_2080TI, seed=0)
+    comm = CommModel(RTX_2080TI)
+    res = CamelotAllocator(graph, pred, RTX_2080TI, 2, comm=comm,
+                           sa=SA).solve_max_load(8)
+    single = PipelineSimulator(graph, res.allocation, RTX_2080TI, comm,
+                               sim=SIM).run(200.0)
+    multi = MultiTenantSimulator(
+        TenantSet([Tenant("t", graph)]), [res.allocation], RTX_2080TI, comm,
+        sim=SIM).run([200.0])
+    m = multi.per_tenant[0]
+    assert (single.p99, single.mean_latency, single.completed,
+            single.events) == (m.p99, m.mean_latency, m.completed, m.events)
+
+
+# --------------------------------------------------------------------------
+# 2. Per-tenant QoS enforcement
+# --------------------------------------------------------------------------
+
+def _joint_session(n_devices=3, **kwargs):
+    return MultiServiceSession(
+        [ALL_SPECS["img-to-img"], ALL_SPECS["diamond"]],
+        ClusterSpec(devices=n_devices), batch=8, **kwargs)
+
+
+def test_joint_solve_meets_every_tenants_own_target():
+    sess = _joint_session()
+    res = sess.solve(policy="max-peak", sa=SAConfig(iterations=600, seed=0))
+    assert res.feasible
+    slack = 1 - sess.allocator().sa.qos_slack
+    for part, tenant in zip(sess.split(), sess.tenant_set.tenants):
+        assert part.predicted_latency <= tenant.qos_target * slack + 1e-12
+        assert part.predicted_min_throughput >= res.objective - 1e-9
+    # and in simulation at (near) the predicted joint peak
+    sim = sess.simulate(loads=[res.objective * 0.9] * 2,
+                        sim=SimConfig(duration=6.0, warmup=1.0, seed=0))
+    for r, target in zip(sim.per_tenant, sess.qos_targets):
+        assert r.p99 <= target, (r.p99, target)
+
+
+def test_per_tenant_targets_not_collapsed_to_tightest():
+    """A slow tenant may exceed a fast tenant's tighter budget as long as
+    it meets its OWN — the distinguishing behaviour vs applying
+    min(target) to the whole union graph."""
+    tight, loose = 0.17, 0.30
+    sess = MultiServiceSession(
+        [(ALL_SPECS["img-to-img"], QoSSpec(latency_target=tight)),
+         (ALL_SPECS["diamond"], QoSSpec(latency_target=loose))],
+        ClusterSpec(devices=3), batch=8)
+    res = sess.solve(policy="max-peak", sa=SAConfig(iterations=600, seed=0))
+    assert res.feasible
+    slack = 1 - sess.allocator().sa.qos_slack
+    lat_fast, lat_slow = [p.predicted_latency for p in sess.split()]
+    assert lat_fast <= tight * slack + 1e-12
+    assert lat_slow <= loose * slack + 1e-12
+    # the DAG tenant genuinely needs more than the chain tenant's budget
+    assert lat_slow > tight * slack
+
+
+def test_impossible_tenant_target_is_infeasible():
+    sess = MultiServiceSession(
+        [(ALL_SPECS["img-to-img"], QoSSpec()),
+         (ALL_SPECS["diamond"], QoSSpec(latency_target=1e-4))],
+        ClusterSpec(devices=3), batch=8)
+    res = sess.solve(policy="max-peak", sa=SAConfig(iterations=300, seed=0))
+    assert not res.feasible
+
+
+# --------------------------------------------------------------------------
+# 3. Shared-device contention across services
+# --------------------------------------------------------------------------
+
+def test_concatenated_solo_optima_jointly_infeasible():
+    """Each tenant's solo max-peak fills the whole cluster; concatenating
+    the two solo optima must be rejected by the JOINT constraint check —
+    the pool is shared, not per-service."""
+    ts = _two_tenant_set()
+    n_dev = 3
+    solos = []
+    for t, seed_off in zip(ts.tenants, ts.offsets):
+        pred = PipelinePredictor.from_graph(t.graph, RTX_2080TI,
+                                            seed=seed_off)
+        r = CamelotAllocator(t.graph, pred, RTX_2080TI, n_dev,
+                             sa=SA).solve_max_load(8)
+        assert r.feasible          # alone, each service fits the cluster
+        solos.append(r.allocation)
+    # both solo optima saturate the pool => their union cannot fit it
+    assert sum(a.total_quota() for a in solos) > n_dev
+    joined = ts.join_allocations(solos)
+    pred = PipelinePredictor(sum(
+        (PipelinePredictor.from_graph(t.graph, RTX_2080TI, seed=off).stages
+         for t, off in zip(ts.tenants, ts.offsets)), []))
+    ma = MultiTenantAllocator(ts, pred, RTX_2080TI, n_dev, sa=SA)
+    tab = ma._policy_tables(8)
+    ns = np.array([s.n_instances for s in joined.stages], np.int64)
+    qi = np.rint(np.array([s.quota for s in joined.stages])
+                 / 0.05).astype(np.int64) - 1
+    _, _, _, feas = ma._eval_many(ns[None], qi[None], tab, n_dev)
+    assert not feas[0]
+    # while the joint OPTIMUM fits the shared pool by construction
+    res = ma.solve_max_load(8)
+    assert res.feasible and res.allocation.total_quota() <= n_dev + 1e-9
+
+
+def test_joint_peak_below_solo_peaks():
+    """Sharing the cluster costs each tenant capacity: the joint λ cannot
+    exceed what either tenant sustains with the pool to itself."""
+    sess = _joint_session()
+    res = sess.solve(policy="max-peak", sa=SAConfig(iterations=600, seed=0))
+    for spec in (ALL_SPECS["img-to-img"], ALL_SPECS["diamond"]):
+        solo = CamelotSession(spec, ClusterSpec(devices=3), batch=8)
+        solo_res = solo.solve(policy="max-peak",
+                              sa=SAConfig(iterations=600, seed=0))
+        assert res.objective <= solo_res.objective + 1e-9
+
+
+# --------------------------------------------------------------------------
+# Joint min-resource + warm starts + the vectorized ladder
+# --------------------------------------------------------------------------
+
+def test_joint_min_resource_meets_per_tenant_loads():
+    sess = _joint_session()
+    peak = sess.solve(policy="max-peak", sa=SAConfig(iterations=600, seed=0))
+    loads = [peak.objective * 0.3, peak.objective * 0.2]
+    res = sess.solve(policy="min-resource", loads=loads,
+                     sa=SAConfig(iterations=600, seed=0))
+    assert res.feasible
+    assert res.allocation.total_quota() < \
+        peak.allocation.total_quota() + 1e-9
+    for part, load in zip(sess.split(result=res), loads):
+        assert part.predicted_min_throughput >= load - 1e-9
+
+
+def test_joint_warm_start_objective_ge_cold():
+    sess = _joint_session()
+    peak = sess.solve(policy="max-peak", sa=SAConfig(iterations=500, seed=0))
+    loads = [peak.objective * 0.35] * 2
+    alloc = sess.allocator()
+    cold = alloc.solve_min_resource(8, loads)
+    warm = alloc.solve_min_resource(8, loads,
+                                    warm_start=peak.allocation)
+    assert not cold.warm_started and warm.warm_started
+    assert warm.feasible == cold.feasible
+    assert warm.objective >= cold.objective - 1e-9
+
+
+def test_min_resource_unreachable_load_is_infeasible():
+    """An unreachable load target must come back infeasible — in BOTH
+    annealing modes (the incumbent a failed walk is left holding may
+    satisfy Constraints 1–5 yet still miss the load)."""
+    graph = camelot_suite()["img-to-img"]
+    pred = PipelinePredictor.from_graph(graph, RTX_2080TI, seed=0)
+    for mode in ("vectorized", "scalar"):
+        alloc = CamelotAllocator(graph, pred, RTX_2080TI, 2,
+                                 sa=SAConfig(iterations=300, seed=0,
+                                             mode=mode))
+        peak = alloc.solve_max_load(8)
+        res = alloc.solve_min_resource(8, load=peak.objective * 50)
+        assert not res.feasible, mode
+        assert res.objective == -np.inf
+
+
+def test_min_rung_bound_certified_and_monotone():
+    """The batched ladder bound must never exceed the rung the sequential
+    climb actually settles on (it only eliminates provably infeasible
+    rungs), and must grow with the load."""
+    graph = camelot_suite()["img-to-img"]
+    pred = PipelinePredictor.from_graph(graph, RTX_2080TI, seed=0)
+    alloc = CamelotAllocator(graph, pred, RTX_2080TI, 8,
+                             sa=SAConfig(iterations=600, seed=0))
+    peak8 = alloc.solve_max_load(8).objective
+    bounds = []
+    for frac in (0.2, 0.5, 0.8):
+        load = peak8 * frac
+        alloc._policy_tables(8)
+        y_lb = alloc._min_rung_bound(8, load)
+        res = alloc.solve_min_resource(8, load)
+        assert res.feasible
+        # re-derive the settled rung: the smallest y >= y_lb at which the
+        # returned allocation passes the joint constraint check
+        tab = alloc._policy_tables(8)
+        ns = np.array([s.n_instances for s in res.allocation.stages],
+                      np.int64)
+        qi = np.rint(np.array([s.quota for s in res.allocation.stages])
+                     / 0.05).astype(np.int64) - 1
+        feas_at = [y for y in range(1, 9)
+                   if alloc._eval_many(ns[None], qi[None], tab, y)[3][0]]
+        assert feas_at and y_lb <= min(feas_at)
+        bounds.append(y_lb)
+    assert bounds == sorted(bounds)
+
+
+def test_infeasible_rung_returns_fallback_incumbent():
+    """An infeasible min-resource solve hands back the best load-chasing
+    state (not the junk initial walker) so the ladder can warm-seed the
+    next rung with it."""
+    graph = camelot_suite()["img-to-img"]
+    pred = PipelinePredictor.from_graph(graph, RTX_2080TI, seed=0)
+    alloc = CamelotAllocator(graph, pred, RTX_2080TI, 1,
+                             sa=SAConfig(iterations=400, seed=0))
+    peak1 = alloc.solve_max_load(8)
+    res = alloc.solve_min_resource(8, load=peak1.objective * 3)
+    assert not res.feasible
+    # the fallback incumbent is constraints-feasible and chases the load:
+    # its min node throughput lands within reach of the 1-device peak
+    tab = alloc._policy_tables(8)
+    ns = np.array([s.n_instances for s in res.allocation.stages], np.int64)
+    qi = np.rint(np.array([s.quota for s in res.allocation.stages])
+                 / 0.05).astype(np.int64) - 1
+    thpt, _, _, feas = alloc._eval_many(ns[None], qi[None], tab, 1)
+    assert feas[0]
+    assert thpt[0] >= peak1.objective * 0.5
+
+
+# --------------------------------------------------------------------------
+# Specs + persistence
+# --------------------------------------------------------------------------
+
+def test_session_lifts_core_tenants_and_scalar_loads():
+    """multitenant_suite() output (core Tenants) is accepted directly —
+    weight and required_load survive the lift — and scalar loads
+    broadcast to every tenant."""
+    tenants = [Tenant("img-to-img", camelot_suite()["img-to-img"],
+                      weight=2.0, required_load=40.0),
+               Tenant("diamond", dag_suite()["diamond"])]
+    sess = MultiServiceSession(tenants, ClusterSpec(devices=3), batch=8)
+    assert sess.weights == [2.0, 1.0]
+    assert sess.tenant_set.tenants[0].required_load == 40.0
+    assert sess._required_loads(100.0) == [100.0, 100.0]
+    with pytest.raises(ValueError, match="one load per tenant"):
+        sess._required_loads([1.0])
+    # fewer devices than tenants: no static partition exists — loud error
+    tiny = MultiServiceSession(tenants, ClusterSpec(devices=1), batch=8)
+    with pytest.raises(ValueError, match="no static partition"):
+        tiny.best_static_partition()
+
+
+def test_multi_service_spec_roundtrip():
+    import json
+    for name, tenants in multitenant_suite().items():
+        spec = MultiServiceSpec(name, tuple(
+            TenantSpec(ServiceSpec.from_graph(t.graph),
+                       QoSSpec(load=LoadSpec(qps=50.0)), weight=2.0)
+            for t in tenants))
+        back = MultiServiceSpec.from_dict(json.loads(json.dumps(
+            spec.to_dict())))
+        assert back == spec
+    with pytest.raises(ValueError):
+        MultiServiceSpec("dup", (TenantSpec(ALL_SPECS["img-to-img"]),
+                                 TenantSpec(ALL_SPECS["img-to-img"])))
+    with pytest.raises(ValueError):
+        TenantSpec(ALL_SPECS["img-to-img"], weight=0.0)
+
+
+def test_allocation_dict_roundtrip():
+    ts = _two_tenant_set()
+    pred = PipelinePredictor.from_graph(ts.union_graph, RTX_2080TI, seed=0)
+    res = MultiTenantAllocator(ts, pred, RTX_2080TI, 3, sa=SA)\
+        .solve_max_load(8)
+    back = Allocation.from_dict(res.allocation.to_dict())
+    assert [(s.n_instances, s.quota, s.batch) for s in back.stages] == \
+        [(s.n_instances, s.quota, s.batch) for s in res.allocation.stages]
+    assert back.placement.per_stage == res.allocation.placement.per_stage
+    assert back.predicted_latency == res.allocation.predicted_latency
+
+
+def test_session_save_load_restores_solved_allocation(tmp_path):
+    # single-service session
+    sess = CamelotSession(ALL_SPECS["img-to-img"], ClusterSpec(devices=2),
+                          batch=8)
+    res = sess.solve(policy="max-peak", sa=SA)
+    p = tmp_path / "single.json"
+    sess.save(str(p))
+    back = CamelotSession.load(str(p))
+    assert back.last_result.objective == res.objective
+    assert back.last_result.allocation.placement.per_stage == \
+        res.allocation.placement.per_stage
+    # restored session simulates WITHOUT re-solving (no predictor fit)
+    assert back.predictor is None
+    sim0 = sess.simulate(load=50.0, sim=SIM)
+    sim1 = back.simulate(load=50.0, sim=SIM)
+    assert sim1.p99 == sim0.p99 and back.predictor is None
+    # multi-service session
+    multi = _joint_session()
+    jres = multi.solve(policy="max-peak", sa=SAConfig(iterations=400,
+                                                      seed=0))
+    mp = tmp_path / "multi.json"
+    multi.save(str(mp))
+    mback = MultiServiceSession.load(str(mp))
+    assert mback.last_result.objective == jres.objective
+    assert mback.spec == multi.spec
+    with pytest.raises(ValueError):
+        MultiServiceSession.load(str(p))     # wrong kind
+    with pytest.raises(ValueError):
+        CamelotSession.load(str(mp))
+
+
+# --------------------------------------------------------------------------
+# Static-partition baseline + consolidation ordering
+# --------------------------------------------------------------------------
+
+def test_joint_beats_or_matches_best_static_partition():
+    sess = _joint_session()
+    sa = SAConfig(iterations=600, seed=0)
+    joint = sess.solve(policy="max-peak", sa=sa)
+    lam_static, part, results = sess.best_static_partition(sa=sa)
+    assert joint.feasible and part is not None
+    assert sum(part) <= 3 and all(p >= 1 for p in part)
+    # predicted: fractional cross-service packing >= whole-device splits
+    assert joint.objective >= lam_static - 1e-9
+    # static placements were shifted onto disjoint global device ranges
+    used = [set(d for st in r.allocation.placement.per_stage
+                for d, _ in st) for r in results]
+    assert not (used[0] & used[1])
+
+
+def test_multitenant_engine_serves_joint_allocation_live():
+    """Live twin: two tenants' stage servers on ONE shared worker pool,
+    running the per-tenant slices of a joint allocation."""
+    sess = MultiServiceSession(
+        [ALL_SPECS["img-to-img"], ALL_SPECS["text-to-text"]],
+        ClusterSpec(devices=3), batch=4)
+    res = sess.solve(policy="max-peak", sa=SA)
+    eng = sess.serve(result=res)
+    assert [len(t.stages) for t in eng.tenants] == [2, 2]
+    parts = sess.split(result=res)
+    assert [len(t.alloc.placement.per_stage) for t in eng.tenants] == \
+        [len(p.placement.per_stage) for p in parts]
+    # a queued allocation swap is applied by the driver loop
+    eng.apply_allocations(parts)
+    stats = eng.run_traces(sess.make_traces(5, [25.0, 25.0], seed=1))
+    assert [s.summary()["completed"] for s in stats] == [5, 5]
+    assert eng.swaps == 1
+    for s, target in zip(stats, sess.qos_targets):
+        assert s.qos.target == target
+
+
+def test_joint_runtime_tracks_per_tenant_loads():
+    ts = _two_tenant_set()
+    pred = PipelinePredictor(sum(
+        (PipelinePredictor.from_graph(t.graph, RTX_2080TI, seed=off).stages
+         for t, off in zip(ts.tenants, ts.offsets)), []))
+    rt = MultiTenantRuntime(ts, pred, RTX_2080TI, n_devices=3, batch=8,
+                            rt=RuntimeConfig(reallocate_every=600.0,
+                                             ewma_alpha=0.5),
+                            sa=SAConfig(iterations=400, seed=0))
+    assert rt.peak_result.feasible and rt.peak_lambda > 0
+    fns = [diurnal_load(rt.peak_lambda * 0.8, period=3600.0),
+           diurnal_load(rt.peak_lambda * 0.6, period=3600.0)]
+    hist = rt.run_trace(fns, duration=3600.0, sample_every=60.0)
+    assert len(hist) >= 5
+    quotas = np.array([h.total_quota for h in hist])
+    loads = np.array([h.load_estimate for h in hist])
+    corr = np.corrcoef(loads[1:], quotas[1:])[0, 1]
+    assert corr > 0.5, (corr, list(zip(loads, quotas)))
+    assert quotas.min() < rt.peak_result.allocation.total_quota() * 0.8
+    # trough re-solves are warm-started from the joint incumbent
+    assert any(h.warm_started for h in hist)
