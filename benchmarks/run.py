@@ -10,6 +10,8 @@ sweep; default runs everything (matches the paper's evaluation section).
   fig16  — min-resource at low load (+17/NC) (§VIII-B/C/D, Figs. 16-17)
   fig18  — 27 artifact pipelines (+20/21)    (§VIII-E, Figs. 18/20/21)
   fig19  — large scale, 16 devices           (§VIII-F, Fig. 19)
+  scale  — datacenter-scale solver curves: dense vs incremental vs
+           hierarchical vs jax, up to 256 tenants x 1024 devices
   overhead — SA/predict/comm-setup costs     (§VIII-G)
   diurnal — online load-tracking runtime     (beyond paper)
   dag    — DAG services: diamond + backbone  (beyond paper)
@@ -24,10 +26,11 @@ import sys
 import time
 
 from benchmarks import (bench_alloc, bench_artifact, bench_comm, bench_dag,
-                        bench_diurnal, bench_kernels, bench_min_resource,
-                        bench_multitenant, bench_overhead, bench_pcie,
-                        bench_peak_load, bench_predictor, bench_roofline,
-                        bench_scale, bench_specs)
+                        bench_diurnal, bench_fig19, bench_kernels,
+                        bench_min_resource, bench_multitenant,
+                        bench_overhead, bench_pcie, bench_peak_load,
+                        bench_predictor, bench_roofline, bench_solver_scale,
+                        bench_specs)
 from benchmarks.common import emit
 
 MODULES = {
@@ -37,12 +40,13 @@ MODULES = {
     "fig14": bench_peak_load,
     "fig16": bench_min_resource,
     "fig18": bench_artifact,
-    "fig19": bench_scale,
+    "fig19": bench_fig19,
     "overhead": bench_overhead,
     "diurnal": bench_diurnal,
     "dag": bench_dag,
     "alloc": bench_alloc,
     "multitenant": bench_multitenant,
+    "scale": bench_solver_scale,
     "specs": bench_specs,
     "roofline": bench_roofline,
     "kernel": bench_kernels,

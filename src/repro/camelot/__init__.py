@@ -15,7 +15,7 @@
 # importable and unchanged; the facade only wires them.
 from repro.camelot.specs import (KNOWN_DEVICES, ClusterSpec, LoadSpec,
                                  MultiServiceSpec, QoSSpec, ServiceSpec,
-                                 TenantSpec)
+                                 SolverSpec, TenantSpec)
 from repro.camelot.policies import (BaselinePolicy, MaxPeakPolicy,
                                     MinResourcePolicy, Policy,
                                     UnknownPolicyError, available_policies,
@@ -25,7 +25,7 @@ from repro.core.allocator import SAConfig, SolveResult
 
 __all__ = [
     "KNOWN_DEVICES", "ClusterSpec", "LoadSpec", "MultiServiceSpec",
-    "QoSSpec", "ServiceSpec", "TenantSpec", "BaselinePolicy",
+    "QoSSpec", "ServiceSpec", "SolverSpec", "TenantSpec", "BaselinePolicy",
     "MaxPeakPolicy", "MinResourcePolicy", "Policy", "UnknownPolicyError",
     "available_policies", "get_policy", "register_policy", "CamelotSession",
     "MultiServiceSession", "SAConfig", "SolveResult",

@@ -125,8 +125,10 @@ class MaxPeakPolicy:
         self.bandwidth_constraint = bandwidth_constraint
 
     def solve(self, spec, predictor, cluster, qos, batch: int = 8, *,
-              sa: Optional[SAConfig] = None,
+              sa: Optional[SAConfig] = None, solver=None,
               warm_start: Optional[Allocation] = None) -> SolveResult:
+        if sa is None and solver is not None:
+            sa = solver.sa_config()          # SolverSpec mode/budget knob
         alloc, comm = _allocator(spec, predictor, cluster, qos,
                                  sa if sa is not None else self.sa,
                                  self.bandwidth_constraint)
@@ -152,7 +154,10 @@ class MinResourcePolicy:
 
     def solve(self, spec, predictor, cluster, qos, batch: int = 8, *,
               load: Optional[float] = None, sa: Optional[SAConfig] = None,
+              solver=None,
               warm_start: Optional[Allocation] = None) -> SolveResult:
+        if sa is None and solver is not None:
+            sa = solver.sa_config()          # SolverSpec mode/budget knob
         target = load if load is not None else self.load
         if target is None and qos.load is not None:
             target = qos.load.qps

@@ -26,7 +26,8 @@ from typing import List, Mapping, Optional, Sequence, Tuple
 
 from repro.camelot.policies import get_policy
 from repro.camelot.specs import (ClusterSpec, LoadSpec, MultiServiceSpec,
-                                 QoSSpec, ServiceSpec, TenantSpec)
+                                 QoSSpec, ServiceSpec, SolverSpec,
+                                 TenantSpec)
 from repro.core.allocator import (CamelotAllocator, MultiTenantAllocator,
                                   SAConfig, SolveResult)
 from repro.core.predictor import (DEFAULT_BATCHES, PipelinePredictor,
@@ -309,11 +310,15 @@ class MultiServiceSession:
     JOINT_POLICIES = ("max-peak", "min-resource", "camelot-nc")
 
     def __init__(self, services, cluster: Optional[ClusterSpec] = None,
-                 batch: int = 8, seed: int = 0, name: str = "multi"):
+                 batch: int = 8, seed: int = 0, name: str = "multi",
+                 solver: Optional[SolverSpec] = None):
         self.spec = self._lift(services, name)
         self.cluster = cluster if cluster is not None else ClusterSpec()
         self.batch = batch
         self.seed = seed
+        # default solver configuration (mode / budget / pod decomposition)
+        # for joint solves; solve(solver=...) overrides per call
+        self.solver = solver
         self.tenant_set = TenantSet([t.build() for t in self.spec.tenants])
         self.predictor: Optional[PipelinePredictor] = None
         self.last_result: Optional[SolveResult] = None
@@ -440,13 +445,19 @@ class MultiServiceSession:
 
     def solve(self, policy: str = "max-peak", batch: Optional[int] = None,
               sa: Optional[SAConfig] = None, loads=None,
-              warm_start: Optional[Allocation] = None) -> SolveResult:
+              warm_start: Optional[Allocation] = None,
+              solver: Optional[SolverSpec] = None) -> SolveResult:
         """One JOINT solve across every tenant.  ``max-peak`` maximises
         the worst weight-normalized supported load (the objective value is
         that λ — tenant t sustains ``λ·weight_t`` qps); ``min-resource``
         minimises total quota while tenant t supports ``loads[t]`` (or its
         ``QoSSpec.load``); ``camelot-nc`` is max-peak without the
-        bandwidth constraint."""
+        bandwidth constraint.
+
+        ``solver`` (or the session-level default) picks the evaluation
+        mode and, with ``pod_size`` set, routes the solve through the
+        hierarchical pod decomposition (``core.hierarchy``); an explicit
+        ``sa=`` still wins over the spec's SA-level knobs."""
         if policy not in self.JOINT_POLICIES:
             raise ValueError(
                 f"unknown joint policy {policy!r}; available: "
@@ -459,16 +470,41 @@ class MultiServiceSession:
                 f"lattice; ClusterSpec.quota_step={self.cluster.quota_step} "
                 "is only supported by quantize()-built demo allocations")
         b = self.batch if batch is None else batch
-        alloc = self.allocator(sa=sa,
-                               bandwidth_constraint=policy != "camelot-nc")
-        if policy == "min-resource":
-            res = alloc.solve_min_resource(b, self._required_loads(loads),
-                                           warm_start=warm_start)
+        spec = solver if solver is not None else self.solver
+        if sa is None and spec is not None:
+            sa = spec.sa_config()
+        if spec is not None and spec.hierarchical:
+            res = self._solve_hierarchical(policy, b, sa, loads, spec)
         else:
-            res = alloc.solve_max_load(b, warm_start=warm_start)
-        res.comm, res.policy = alloc.comm, policy
+            alloc = self.allocator(
+                sa=sa, bandwidth_constraint=policy != "camelot-nc")
+            if policy == "min-resource":
+                res = alloc.solve_min_resource(
+                    b, self._required_loads(loads), warm_start=warm_start)
+            else:
+                res = alloc.solve_max_load(b, warm_start=warm_start)
+            res.comm, res.policy = alloc.comm, policy
         self.last_result = res
         self.results.append(res)
+        return res
+
+    def _solve_hierarchical(self, policy: str, batch: int,
+                            sa: Optional[SAConfig], loads,
+                            spec: SolverSpec) -> SolveResult:
+        from repro.core.hierarchy import HierarchicalSolver
+        eff = replace(sa if sa is not None else SAConfig(),
+                      bandwidth_constraint=policy != "camelot-nc")
+        comm = self.cluster.comm_model()
+        solver = HierarchicalSolver(
+            self.tenant_set, self._require_predictor(),
+            self.cluster.device_spec, self.cluster.devices, comm=comm,
+            sa=eff, pods=spec.pod_config())
+        if policy == "min-resource":
+            res = solver.solve_min_resource(batch,
+                                            self._required_loads(loads))
+        else:
+            res = solver.solve_max_load(batch)
+        res.comm, res.policy = comm, policy
         return res
 
     def _resolve_result(self, result: Optional[SolveResult]) -> SolveResult:
@@ -696,6 +732,8 @@ class MultiServiceSession:
             "cluster": self.cluster.to_dict(),
             "batch": self.batch,
             "seed": self.seed,
+            "solver": self.solver.to_dict()
+            if self.solver is not None else None,
             "result": self.last_result.to_dict()
             if self.last_result is not None else None,
         }
@@ -714,7 +752,9 @@ class MultiServiceSession:
         sess = cls(MultiServiceSpec.from_dict(doc["services"]),
                    ClusterSpec.from_dict(doc["cluster"]),
                    batch=int(doc.get("batch", 8)),
-                   seed=int(doc.get("seed", 0)))
+                   seed=int(doc.get("seed", 0)),
+                   solver=SolverSpec.from_dict(doc["solver"])
+                   if doc.get("solver") is not None else None)
         if doc.get("result") is not None:
             res = SolveResult.from_dict(doc["result"],
                                         comm=sess.cluster.comm_model())

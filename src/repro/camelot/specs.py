@@ -276,6 +276,77 @@ class QoSSpec:
                    load=load)
 
 
+@dataclass(frozen=True)
+class SolverSpec:
+    """HOW the solver runs, as data: evaluation mode, annealing budget and
+    the optional hierarchical pod decomposition — the scaling knobs of the
+    datacenter-scale solver, serialisable like every other spec.
+
+    ``mode`` selects the annealing kernel ("scalar" | "vectorized" |
+    "incremental" | "jax"; see the README's solver-mode matrix);
+    ``pod_size`` switches joint multi-tenant solves to the hierarchical
+    pod decomposition (``core.hierarchy``) with that many devices per pod
+    — ``None`` keeps the flat joint solve.  ``iterations``/``seed`` feed
+    the underlying ``SAConfig`` (other SA knobs keep their defaults; pass
+    a full ``SAConfig`` to the session for fine control).
+    """
+    mode: str = "vectorized"
+    iterations: int = 2000
+    seed: int = 0
+    pod_size: Optional[int] = None        # None => flat joint solve
+    repair_rounds: int = 2
+    parallel_pods: bool = True
+
+    def __post_init__(self):
+        from repro.core.allocator import CamelotAllocator
+        if self.mode not in CamelotAllocator.MODES:
+            raise ValueError(f"unknown solver mode {self.mode!r}; "
+                             f"available: {CamelotAllocator.MODES}")
+        if self.iterations < 1:
+            raise ValueError(f"iterations must be >= 1, got "
+                             f"{self.iterations}")
+        if self.pod_size is not None and self.pod_size < 1:
+            raise ValueError(f"pod_size must be >= 1, got {self.pod_size}")
+
+    @property
+    def hierarchical(self) -> bool:
+        return self.pod_size is not None
+
+    def sa_config(self, base=None):
+        """Lower onto a ``SAConfig`` (optionally overriding ``base``)."""
+        from repro.core.allocator import SAConfig
+        base = base if base is not None else SAConfig()
+        return replace(base, mode=self.mode, iterations=self.iterations,
+                       seed=self.seed)
+
+    def pod_config(self):
+        """The ``PodConfig`` for hierarchical solves (None when flat)."""
+        if self.pod_size is None:
+            return None
+        from repro.core.types import PodConfig
+        return PodConfig(pod_size=self.pod_size,
+                         repair_rounds=self.repair_rounds,
+                         parallel=self.parallel_pods)
+
+    # ---- dict round-trip ----------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {"mode": self.mode, "iterations": self.iterations,
+                "seed": self.seed, "pod_size": self.pod_size,
+                "repair_rounds": self.repair_rounds,
+                "parallel_pods": self.parallel_pods}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "SolverSpec":
+        return cls(mode=str(d.get("mode", "vectorized")),
+                   iterations=int(d.get("iterations", 2000)),
+                   seed=int(d.get("seed", 0)),
+                   pod_size=None if d.get("pod_size") is None
+                   else int(d["pod_size"]),
+                   repair_rounds=int(d.get("repair_rounds", 2)),
+                   parallel_pods=bool(d.get("parallel_pods", True)))
+
+
 # --------------------------------------------------------------------------
 # Multi-service deployments: N (service, QoS) tenants on ONE cluster
 # --------------------------------------------------------------------------

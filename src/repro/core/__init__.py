@@ -10,6 +10,7 @@
 #   qos.py        — tail-latency tracking
 from repro.core.allocator import (CamelotAllocator, MultiTenantAllocator,
                                   SAConfig, SolveResult)
+from repro.core.hierarchy import HierarchicalSolver
 from repro.core.comm import (GLOBAL_MEMORY, HOST_STAGED, ICI, CommModel,
                              DeviceHandoff, EdgeChannel, HostStagedChannel,
                              mechanism_time, select_mechanism)
@@ -26,11 +27,12 @@ from repro.core.qos import QoSTracker
 from repro.core.types import (RTX_2080TI, TPU_V5E_DEV, V100, Allocation,
                               CompiledTopology, DeviceSpec,
                               MicroserviceProfile, Pipeline, Placement,
-                              ServiceEdge, ServiceGraph, StageAlloc, Tenant,
-                              TenantSet)
+                              PodConfig, ServiceEdge, ServiceGraph,
+                              StageAlloc, Tenant, TenantSet)
 
 __all__ = [
     "CamelotAllocator", "MultiTenantAllocator", "SAConfig", "SolveResult",
+    "HierarchicalSolver", "PodConfig",
     "CommModel",
     "DeviceHandoff", "EdgeChannel", "HostStagedChannel", "GLOBAL_MEMORY",
     "HOST_STAGED", "ICI", "select_mechanism", "mechanism_time",

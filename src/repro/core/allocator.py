@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import math
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
@@ -54,6 +55,7 @@ import numpy as np
 
 from repro.core.comm import CommModel
 from repro.core.deployment import pack_instances
+from repro.core.incremental import IncrementalEvaluator
 from repro.core.predictor import PipelinePredictor
 from repro.core.types import (QUOTA_GRID, QUOTA_STEP, Allocation, DeviceSpec,
                               ServiceEdge, ServiceGraph, StageAlloc,
@@ -82,7 +84,15 @@ class SAConfig:
     qos_slack: float = 0.45
     # "vectorized": population-based annealing over batched table lookups
     # (the runtime hot path); "scalar": the paper-faithful per-candidate
-    # loop, kept as compatibility mode and benchmark baseline.
+    # loop, kept as compatibility mode and benchmark baseline;
+    # "incremental": the vectorized walk with amortized delta evaluation
+    # (core.incremental) — identical RNG stream and constraint landscape,
+    # candidates are re-scored only at the mutated stages, falls back to
+    # dense evaluation on graphs whose path count exceeds the cap;
+    # "jax": the annealing inner loop as a jitted lax.scan kernel
+    # (core.anneal_jax) with a numpy re-evaluation + polish of the
+    # returned incumbents, falling back to "vectorized" when jax is not
+    # installed or the instance does not fit the kernel's preconditions.
     mode: str = "vectorized"
     # candidates evaluated per vectorized step (one batched _eval_many)
     population: int = 128
@@ -181,6 +191,10 @@ class SolveResult:
     # allocation was priced against and the registry name that produced it
     comm: Optional[CommModel] = None
     policy: str = ""
+    # hierarchical solves (core.hierarchy): one entry per pod with its
+    # device range, tenant names and per-pod solve metrics — None for flat
+    # solves.  Serialised so a saved session round-trips the decomposition.
+    pods: Optional[List[dict]] = None
 
     # ---- dict round-trip (allocation persistence) ---------------------
     # ``comm`` and ``history`` are deliberately not serialised: the comm
@@ -200,11 +214,13 @@ class SolveResult:
             "mode": self.mode,
             "warm_started": self.warm_started,
             "policy": self.policy,
+            "pods": self.pods,
         }
 
     @classmethod
     def from_dict(cls, d, comm: Optional[CommModel] = None) -> "SolveResult":
         obj = d["objective"]
+        pods = d.get("pods")
         return cls(
             allocation=Allocation.from_dict(d["allocation"]),
             objective=-math.inf if obj is None else float(obj),
@@ -215,7 +231,8 @@ class SolveResult:
             mode=str(d.get("mode", "scalar")),
             warm_started=bool(d.get("warm_started", False)),
             comm=comm,
-            policy=str(d.get("policy", "")))
+            policy=str(d.get("policy", "")),
+            pods=[dict(p) for p in pods] if pods is not None else None)
 
 
 class CamelotAllocator:
@@ -235,10 +252,12 @@ class CamelotAllocator:
         # quota-multiset memo (packability depends only on the multiset of
         # instance quotas and the device count, so SA revisits hit).  Both
         # live for the allocator's lifetime — periodic re-solves
-        # (CamelotRuntime) reuse them for free; the memo is size-capped and
-        # ``invalidate_caches`` drops everything after a predictor re-fit.
-        self._tables_cache: dict = {}
-        self._ffd_memo: dict = {}
+        # (CamelotRuntime) reuse them for free — and both are bounded
+        # (LRU / FIFO eviction) so a runtime re-solving for months holds a
+        # fixed worst-case footprint; ``invalidate_caches`` drops
+        # everything after a predictor re-fit.
+        self._tables_cache: OrderedDict = OrderedDict()
+        self._ffd_memo: OrderedDict = OrderedDict()
         # multi-tenant hooks (None => the single-service behaviour, bit
         # for bit).  ``_node_norm`` divides each node's aggregate
         # throughput before the min (the weighted max-min objective over
@@ -248,10 +267,16 @@ class CamelotAllocator:
         self._node_norm: Optional[np.ndarray] = None
         self._qos_exit_groups: Optional[list] = None
 
-    #: entries kept in the FFD memo before it is reset (a long-running
-    #: runtime re-solving for months must not grow without bound; one entry
-    #: is ~100 B, so the cap is ~50 MB worst case)
+    #: entries kept in the FFD memo (a long-running runtime re-solving for
+    #: months must not grow without bound; one entry is ~100 B, so the cap
+    #: is ~50 MB worst case).  Eviction is FIFO — oldest entries leave one
+    #: at a time instead of a full clear, so a steady-state solve keeps
+    #: its working set hot.
     FFD_MEMO_MAX = 500_000
+    #: distinct batch sizes whose per-solve lookup tables stay cached (LRU;
+    #: a table set is O(nodes × grid) floats, and runtimes only ever cycle
+    #: through a handful of batch sizes)
+    TABLES_CACHE_MAX = 16
 
     def invalidate_caches(self) -> None:
         """Drop the per-batch tables and the FFD memo.  Call after the
@@ -336,23 +361,35 @@ class CamelotAllocator:
     # Simulated annealing core (paper §VII-C description)
     # ------------------------------------------------------------------
 
+    #: SAConfig.mode values this allocator can run (``res.mode`` records
+    #: the mode that actually executed after any fallback)
+    MODES = ("scalar", "vectorized", "incremental", "jax")
+
     def _anneal(self, batch: int, n_devices: int, objective: str,
                 required_load: Optional[float] = None,
                 warm: Optional[Allocation] = None) -> SolveResult:
-        assert self.sa.mode in ("vectorized", "scalar"), self.sa.mode
+        mode = self.sa.mode
+        assert mode in self.MODES, mode
         pt0 = self.predictor.total_predict_time() \
             if hasattr(self.predictor, "total_predict_time") else 0.0
-        if self.sa.mode == "vectorized":
+        res = None
+        if mode == "jax":
+            from repro.core import anneal_jax
+            res = anneal_jax.run_anneal(self, batch, n_devices, objective,
+                                        required_load, warm=warm)
+            # jax missing or kernel preconditions unmet: dense fallback
+        if res is None and mode != "scalar":
             res = self._anneal_vec(batch, n_devices, objective,
-                                   required_load, warm=warm)
-        else:
+                                   required_load, warm=warm,
+                                   incremental=(mode == "incremental"))
+        elif res is None:
             # warm starts are a vectorized-population feature (an extra
             # walker); the paper-faithful scalar walk stays untouched
             res = self._anneal_scalar(batch, n_devices, objective,
                                       required_load)
+            res.mode = "scalar"
         if hasattr(self.predictor, "total_predict_time"):
             res.predictor_time = self.predictor.total_predict_time() - pt0
-        res.mode = self.sa.mode
         return res
 
     def _anneal_scalar(self, batch: int, n_devices: int, objective: str,
@@ -459,6 +496,7 @@ class CamelotAllocator:
         device sweep) pay zero model inference."""
         tab = self._tables_cache.get(batch)
         if tab is not None:
+            self._tables_cache.move_to_end(batch)
             return tab
         grid = QUOTA_GRID
         n, g = self.pipeline.n_stages, len(grid)
@@ -484,6 +522,8 @@ class CamelotAllocator:
         tab = _PolicyTables(grid=grid, dur=dur, bw=bw, thpt=thpt,
                             foots=foots, edge_src=e_src, edge_dst=e_dst,
                             edge_t_colo=t_colo, edge_t_host=t_host)
+        while len(self._tables_cache) >= self.TABLES_CACHE_MAX:
+            self._tables_cache.popitem(last=False)
         self._tables_cache[batch] = tab
         return tab
 
@@ -496,8 +536,8 @@ class CamelotAllocator:
         hit = self._ffd_memo.get(key)
         if hit is None:
             hit = _ffd_fits_units(counts, n_devices)
-            if len(self._ffd_memo) >= self.FFD_MEMO_MAX:
-                self._ffd_memo.clear()
+            while len(self._ffd_memo) >= self.FFD_MEMO_MAX:
+                self._ffd_memo.popitem(last=False)
             self._ffd_memo[key] = hit
         return hit
 
@@ -589,20 +629,30 @@ class CamelotAllocator:
 
     def _polish(self, ns: np.ndarray, qi: np.ndarray, score: float,
                 scores, tab: "_PolicyTables", n_devices: int, max_inst: int,
-                g: int, history: List[float]):
+                g: int, history: List[float], engine=None):
         """Greedy polish of one incumbent: exhaust its 6n single-move
         neighbourhood until locally optimal (cheap — one batched eval per
         round).  Ties on the objective break towards LOWER total quota:
         plateau moves (e.g. scale-out at unchanged min-throughput) free
         quota that later rounds spend on the bottleneck stage, and
         strictly decreasing quota on plateaus rules out cycles.
-        Deterministic (no RNG); returns (ns, qi, score)."""
+        Deterministic (no RNG); returns (ns, qi, score).  With an
+        ``engine`` (IncrementalEvaluator) each neighbour is scored by
+        single-stage delta against the incumbent instead of a full dense
+        pass — the 6n fan shares everything but one stage with it."""
         if not np.isfinite(score):
             return ns, qi, score
         best_quota = float((ns * tab.grid[qi]).sum())
+        nb_base = None
         for _ in range(max(0, self.sa.polish_rounds)):
             NS, QI = self._neighbourhood(ns, qi, max_inst, g)
-            ev = self._eval_many(NS, QI, tab, n_devices)
+            if engine is not None:
+                if nb_base is None:
+                    nb_base = np.zeros(len(NS), np.int64)
+                engine.rebase(ns[None], qi[None])
+                ev = engine.eval(NS, QI, nb_base)
+            else:
+                ev = self._eval_many(NS, QI, tab, n_devices)
             s = scores(ev)
             j = int(np.argmax(s))
             if np.isfinite(s[j]) and s[j] > score + 1e-12:
@@ -621,9 +671,36 @@ class CamelotAllocator:
             history.append(score)
         return ns, qi, score
 
+    def _seed_walkers(self, tab: "_PolicyTables", n_devices: int, w: int,
+                      g: int, max_inst: int):
+        """Initial population shared by the vectorized and jitted kernels:
+        walker 0 is the scalar path's even init, a few walkers are
+        closed-form throughput-balanced seeds (argmax f/p grid level,
+        N_i ∝ 1/f_i), and the rest spread across the quota grid at the
+        device-saturating instance count (see the _anneal_vec comment)."""
+        n = self.pipeline.n_stages
+        p0 = min(1.0, n_devices / n)
+        qi0 = int(np.clip(round(p0 / QUOTA_STEP), 1, g)) - 1
+        levels = np.round(np.linspace(0, qi0, w)).astype(np.int64)
+        levels[0] = qi0                      # walker 0 = scalar init
+        QI_cur = np.repeat(levels[:, None], n, axis=1)
+        NS_cur = np.clip(n_devices // (n * tab.grid[QI_cur]), 1,
+                         max_inst).astype(np.int64)
+        NS_cur[0] = 1
+        eff_qi = np.argmax(tab.thpt / tab.grid, axis=1)
+        for wi, off in zip(range(1, w), range(0, 4)):
+            qi_b = np.clip(eff_qi + off, 0, g - 1)
+            f = tab.thpt[np.arange(n), qi_b]
+            t_bal = n_devices / (tab.grid[qi_b] / f).sum()
+            QI_cur[wi] = qi_b
+            NS_cur[wi] = np.clip(np.rint(t_bal / f).astype(np.int64), 1,
+                                 max_inst)
+        return NS_cur, QI_cur
+
     def _anneal_vec(self, batch: int, n_devices: int, objective: str,
                     required_load: Optional[float] = None,
-                    warm: Optional[Allocation] = None) -> SolveResult:
+                    warm: Optional[Allocation] = None,
+                    incremental: bool = False) -> SolveResult:
         t_start = time.perf_counter()
         sa = self.sa
         rng = np.random.default_rng(sa.seed)
@@ -631,6 +708,14 @@ class CamelotAllocator:
         tab = self._policy_tables(batch)
         g = len(tab.grid)
         max_inst = n_devices * self.device.max_instances
+        # amortized delta evaluation (mode "incremental"): same RNG stream
+        # and constraint landscape as the dense walk; graphs past the path
+        # cap fall back to dense evaluation transparently
+        engine = None
+        if incremental:
+            engine = IncrementalEvaluator(self, tab, n_devices)
+            if not engine.usable:
+                engine = None
 
         def scores(ev):
             thpt, quota, lat, feas = ev
@@ -657,22 +742,7 @@ class CamelotAllocator:
         w = int(np.clip(sa.walkers, 1, k))
         c = max(1, k // w)                   # proposals per walker per step
         n_mut = max(1, int(sa.max_mutations))
-        p0 = min(1.0, n_devices / n)
-        qi0 = int(np.clip(round(p0 / QUOTA_STEP), 1, g)) - 1
-        levels = np.round(np.linspace(0, qi0, w)).astype(np.int64)
-        levels[0] = qi0                      # walker 0 = scalar init
-        QI_cur = np.repeat(levels[:, None], n, axis=1)
-        NS_cur = np.clip(n_devices // (n * tab.grid[QI_cur]), 1,
-                         max_inst).astype(np.int64)
-        NS_cur[0] = 1
-        eff_qi = np.argmax(tab.thpt / tab.grid, axis=1)
-        for wi, off in zip(range(1, w), range(0, 4)):
-            qi_b = np.clip(eff_qi + off, 0, g - 1)
-            f = tab.thpt[np.arange(n), qi_b]
-            t_bal = n_devices / (tab.grid[qi_b] / f).sum()
-            QI_cur[wi] = qi_b
-            NS_cur[wi] = np.clip(np.rint(t_bal / f).astype(np.int64), 1,
-                                 max_inst)
+        NS_cur, QI_cur = self._seed_walkers(tab, n_devices, w, g, max_inst)
         # warm start (diurnal re-solves): ONE extra walker seeded from the
         # previous allocation, drawing from its OWN RNG stream.  The base
         # walkers consume exactly the draws of a cold solve, so their
@@ -715,6 +785,8 @@ class CamelotAllocator:
         ev0 = self._eval_many(NS_cur, QI_cur, tab, n_devices)
         if track_fb:
             _track_fb(ev0, NS_cur, QI_cur)
+        if engine is not None:
+            engine.rebase(NS_cur, QI_cur)
         cur = scores(ev0)
         j0 = int(np.argmax(cur))
         best_ns, best_qi = NS_cur[j0].copy(), QI_cur[j0].copy()
@@ -726,6 +798,7 @@ class CamelotAllocator:
         base_score = float(cur[jb0])
         history: List[float] = []
         wr = np.arange(w_all)
+        cand_base = np.repeat(wr, c)         # candidate row -> base walker
 
         # align the proposed-mutation budget with the scalar iteration count
         steps = max(1, -(-sa.iterations * n_mut // (w * c)))  # ceil division
@@ -758,7 +831,10 @@ class CamelotAllocator:
                                       rng_w.integers(n, size=len(wrows)),
                                       rng_w.integers(6, size=len(wrows)),
                                       max_inst, g)
-            ev = self._eval_many(NS, QI, tab, n_devices)
+            if engine is not None:
+                ev = engine.eval(NS, QI, cand_base)
+            else:
+                ev = self._eval_many(NS, QI, tab, n_devices)
             if track_fb:
                 _track_fb(ev, NS, QI)
             s_flat = scores(ev)
@@ -800,6 +876,8 @@ class CamelotAllocator:
             NS_cur[accept] = NS[rows]
             QI_cur[accept] = QI[rows]
             cur[accept] = sj[accept]
+            if engine is not None and rows.size:
+                engine.commit(np.flatnonzero(accept), rows)
             # best-so-far tracks the whole evaluated population, not just
             # the walker-picked rows — exploration picks discard strong
             # candidates for the WALKER state, never for the incumbent
@@ -822,11 +900,11 @@ class CamelotAllocator:
         # warm result is >= it by construction.
         best_ns, best_qi, best_score = self._polish(
             best_ns, best_qi, best_score, scores, tab, n_devices, max_inst,
-            g, history)
+            g, history, engine=engine)
         if n_warm:
             base_ns, base_qi, base_score = self._polish(
                 base_ns, base_qi, base_score, scores, tab, n_devices,
-                max_inst, g, history)
+                max_inst, g, history, engine=engine)
             better = base_score > best_score + 1e-12
             if not better and np.isfinite(base_score) and \
                     abs(base_score - best_score) <= 1e-12:
@@ -861,6 +939,8 @@ class CamelotAllocator:
                            feasible=feasible,
                            solve_time=time.perf_counter() - t_start,
                            iterations=sa.iterations, history=history,
+                           mode="incremental" if engine is not None
+                           else "vectorized",
                            warm_started=bool(n_warm))
 
     # ------------------------------------------------------------------
@@ -940,7 +1020,7 @@ class CamelotAllocator:
         problems, so the incumbent is usually one polish away); scalar
         mode keeps the paper-faithful sequential ``y += 1`` climb."""
         y = self.min_devices(batch, load)
-        vec = self.sa.mode == "vectorized"
+        vec = self.sa.mode != "scalar"
         if vec:
             y = max(y, self._min_rung_bound(batch, load))
         warm = warm_start

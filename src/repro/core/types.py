@@ -337,6 +337,54 @@ class ServiceGraph:
         best = self.critical_path_nodes(node_costs, edge_costs)
         return best[..., self.compiled.exits].max(axis=-1)
 
+    # ---- explicit path enumeration (sparse/incremental hot paths) -----
+
+    def count_paths(self) -> int:
+        """Number of distinct entry→exit paths (DP over the topo order —
+        no enumeration, so safe on graphs with exponentially many)."""
+        counts = [0] * len(self.nodes)
+        for u in self.topo_order:
+            counts[u] = sum(counts[p] for p in self.preds[u]) \
+                if self.preds[u] else 1
+        return sum(counts[x] for x in self.exits)
+
+    def enumerate_paths(self, cap: int = 4096,
+                        ) -> Optional[List[Tuple[np.ndarray, np.ndarray]]]:
+        """Every entry→exit path as a ``(node_ids, edge_ids)`` pair (edge
+        ids index ``self.edges``), or ``None`` when the graph has more than
+        ``cap`` paths.  The critical path is then ``max`` over this list of
+        per-path node+edge cost sums — the form the incremental evaluator
+        and the jitted annealing kernel consume: a single-node mutation
+        perturbs only the paths through that node, and each path is a flat
+        gather instead of a topo-order recurrence.  Iterative DFS (a
+        900-node union-graph chain must not hit the recursion limit)."""
+        if self.count_paths() > cap:
+            return None
+        out: List[Tuple[np.ndarray, np.ndarray]] = []
+        for entry in self.entries:
+            # stack of (node, successor cursor); path holds the DFS spine
+            path = [entry]
+            edges: List[int] = []
+            cursor = [0]
+            while path:
+                u = path[-1]
+                succ = self.succs[u]
+                if not succ:                      # exit node: emit path
+                    out.append((np.asarray(path, np.int64),
+                                np.asarray(edges, np.int64)))
+                if cursor[-1] < len(succ):
+                    v = succ[cursor[-1]]
+                    cursor[-1] += 1
+                    path.append(v)
+                    edges.append(self._edge_index[(u, v)])
+                    cursor.append(0)
+                else:
+                    path.pop()
+                    cursor.pop()
+                    if edges:
+                        edges.pop()
+        return out
+
     def __repr__(self) -> str:
         return (f"ServiceGraph({self.name!r}, nodes={len(self.nodes)}, "
                 f"edges={[(e.src, e.dst) for e in self.edges]})")
@@ -546,6 +594,11 @@ class TenantSet:
                 placement=pl))
         return out
 
+    def subset(self, indices: Sequence[int]) -> "TenantSet":
+        """A new TenantSet over ``[self.tenants[i] for i in indices]`` (the
+        hierarchical solver's per-pod view; order follows ``indices``)."""
+        return TenantSet([self.tenants[i] for i in indices])
+
     def join_allocations(self, allocs: Sequence[Allocation]) -> Allocation:
         """Concatenate per-tenant Allocations into the union namespace (the
         warm-start path: per-tenant incumbents seed a joint re-solve)."""
@@ -562,3 +615,46 @@ class TenantSet:
         return Allocation(
             stages=stages,
             placement=Placement(per_stage=per_stage) if placeable else None)
+
+
+# --------------------------------------------------------------------------
+# Hierarchical (pod-decomposed) solves over large device pools
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PodConfig:
+    """Knobs for the hierarchical pod decomposition (``core.hierarchy``).
+
+    ``pod_size`` devices per pod (the last pod takes the remainder);
+    ``repair_rounds`` boundary-repair attempts moving one tenant from the
+    bottleneck pod to the pod with the most headroom; ``parallel`` refines
+    pods concurrently (thread pool — the per-pod annealers are numpy-bound
+    and release the GIL for most of their time)."""
+    pod_size: int
+    repair_rounds: int = 2
+    parallel: bool = True
+
+    def to_dict(self) -> dict:
+        return {"pod_size": self.pod_size,
+                "repair_rounds": self.repair_rounds,
+                "parallel": self.parallel}
+
+    @classmethod
+    def from_dict(cls, d) -> "PodConfig":
+        return cls(pod_size=int(d["pod_size"]),
+                   repair_rounds=int(d.get("repair_rounds", 2)),
+                   parallel=bool(d.get("parallel", True)))
+
+
+@dataclass
+class PodAssignment:
+    """One pod of a hierarchical solve: a contiguous device range plus the
+    tenant-group assigned to it (indices into the global TenantSet)."""
+    pod_id: int
+    device_start: int
+    device_stop: int                     # exclusive
+    tenant_indices: List[int]
+
+    @property
+    def n_devices(self) -> int:
+        return self.device_stop - self.device_start

@@ -6,7 +6,8 @@ from repro.sim.simulator import (MultiSimResult, MultiTenantSimulator,
 from repro.sim.workloads import (artifact_pipelines, artifact_stage,
                                  camelot_suite, dag_suite, diamond_service,
                                  ensemble_service, multitenant_suite,
-                                 shared_backbone_service, workload_specs)
+                                 shared_backbone_service, synthetic_predictor,
+                                 synthetic_tenant_set, workload_specs)
 
 __all__ = [
     "camelot", "camelot_min_resource", "camelot_nc", "even_allocation",
@@ -14,5 +15,6 @@ __all__ = [
     "PipelineSimulator", "SimConfig", "SimResult", "find_joint_peak",
     "find_peak_load", "artifact_pipelines", "artifact_stage", "camelot_suite",
     "dag_suite", "diamond_service", "ensemble_service", "multitenant_suite",
-    "shared_backbone_service", "workload_specs",
+    "shared_backbone_service", "synthetic_predictor", "synthetic_tenant_set",
+    "workload_specs",
 ]

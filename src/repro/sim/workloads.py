@@ -18,6 +18,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Sequence
 
+import numpy as np
+
 from repro.configs import active_param_count, get_config
 from repro.core.types import (RTX_2080TI, DeviceSpec, MicroserviceProfile,
                               Pipeline, ServiceEdge, ServiceGraph, Tenant)
@@ -225,6 +227,58 @@ def multitenant_suite(device: DeviceSpec = RTX_2080TI,
             Tenant("backbone-3h", dags["backbone-3h"]),
         ],
     }
+
+
+def synthetic_tenant_set(n_tenants: int, device: DeviceSpec = RTX_2080TI,
+                         seed: int = 0) -> "TenantSet":
+    """A datacenter-scale tenant population for solver-scaling benchmarks.
+
+    Tenants are drawn from the suite templates (the four Table-I chains
+    plus the DAG services) with a jittered per-tenant QoS target and a
+    **diurnal load mix** for the weights: tenant phases are spread around
+    the clock, so at the snapshot the solver sees the usual datacenter
+    blend of peak tenants (weight ~1) and off-peak tenants (weight ~0.25)
+    — the weighted max-min objective then has real imbalance to exploit.
+    Node profiles are SHARED with the templates (``MicroserviceProfile``
+    is frozen), so ``synthetic_predictor`` fits one model per distinct
+    profile instead of one per tenant."""
+    from repro.core.types import TenantSet
+    rng = np.random.default_rng(seed)
+    templates = {**camelot_suite(device), **dag_suite(device)}
+    names = sorted(templates)
+    tenants = []
+    for i in range(n_tenants):
+        tmpl = templates[names[int(rng.integers(len(names)))]]
+        qos = float(tmpl.qos_target * rng.uniform(0.9, 1.4))
+        graph = ServiceGraph(f"{tmpl.name}-{i:03d}", tmpl.nodes,
+                             tmpl.edges, qos_target=qos)
+        phase = rng.uniform(0.0, 1.0)
+        weight = 0.25 + 0.75 * 0.5 * (1.0 + np.sin(2 * np.pi * phase))
+        tenants.append(Tenant(graph.name, graph, weight=round(weight, 3)))
+    return TenantSet(tenants)
+
+
+def synthetic_predictor(tenants, device: DeviceSpec = RTX_2080TI,
+                        seed: int = 0):
+    """Per-node predictors for a (synthetic) TenantSet with one fit per
+    DISTINCT profile: the generator reuses the template stages across
+    tenants, so a 256-tenant population needs ~a dozen model fits instead
+    of ~900.  Returns a ``PipelinePredictor`` over the union node order."""
+    from repro.core.predictor import (PipelinePredictor, collect_samples,
+                                      TabulatedStagePredictor)
+    fitted: Dict = {}
+    stages = []
+    for i, prof in enumerate(tenants.union_graph.nodes):
+        sp = fitted.get(prof)
+        if sp is None:
+            samples = collect_samples(prof, device,
+                                      seed=seed + len(fitted))
+            sp = TabulatedStagePredictor(
+                prof.name, "dt", seed=seed + len(fitted)).fit(
+                    samples, profile=prof)
+            fitted[prof] = sp
+        stages.append(sp)
+    return PipelinePredictor(stages)
 
 
 def workload_specs(device: DeviceSpec = RTX_2080TI,
