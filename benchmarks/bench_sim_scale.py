@@ -1,0 +1,301 @@
+"""Measurement-plane benchmark: tabulated sim physics + O(1) dispatch +
+QoS early-abort + seeded/parallel lattice peak search, against the legacy
+curve-per-event simulator and the blind bracketed search it served.
+
+Three sections, all pinned to bit-identical verdicts:
+
+  1. events/s — one simulator run per scenario (paper chains, a DAG, a
+     multi-tenant co-location), fast vs legacy, asserting the two paths
+     produce bit-identical results (p99, mean, completed, events, every
+     recorded latency, per-device busy seconds);
+  2. peak search end-to-end — per multi-tenant scenario, the legacy plane
+     (blind [2, 4096] bracket, curve physics, fresh simulator per probe,
+     sequential, no abort) vs the new plane (bracket seeded from
+     ``SolveResult.load``, shared simulator, tabulated physics, QoS
+     early-abort, 2-way speculative probes).  Probes land on a FIXED
+     geometric lattice, so both searches return the *identical* peak load
+     and per-tenant verdicts even though they take different paths;
+  3. scale point — the PR 6 synthetic tenant population (8 quick / 16
+     full tenants) simulated on a shared pool, fast vs legacy events/s.
+
+Emits ``BENCH_sim.json``.  ``--budget-s`` (CI smoke) fails the process if
+the quick run exceeds the budget, if any fast run's results diverge from
+legacy, if the searches disagree on a peak or a verdict, or if the new
+plane fails to beat the legacy plane end to end.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from dataclasses import replace
+from typing import Dict, List
+
+from benchmarks.common import Row, emit
+
+from repro.camelot import ClusterSpec, MultiServiceSession, SAConfig
+from repro.core import RTX_2080TI
+from repro.sim import (SimConfig, camelot_suite, dag_suite, even_allocation,
+                       find_joint_peak, multitenant_suite,
+                       synthetic_tenant_set)
+from repro.sim.simulator import MultiTenantSimulator, PipelineSimulator
+
+SMOKE = "chain+diamond"
+_DEVICES = {"chain+diamond": 3, "two-chains": 3, "3-tenant-mixed": 4}
+_BATCH = 8
+#: per-scenario offered load for the events/s section — saturating enough
+#: to exercise queueing, low enough that the run is latency-feasible
+_RATE_QPS = 120.0
+
+
+def _bit_identical(a, b) -> bool:
+    """Full result equality between a legacy and a fast SimResult."""
+    return (a.p99 == b.p99 and a.mean_latency == b.mean_latency
+            and a.completed == b.completed and a.events == b.events
+            and list(a.qos.latencies) == list(b.qos.latencies)
+            and a.device_busy == b.device_busy)
+
+
+def _events_entry(name, run_legacy, run_fast) -> Dict:
+    t0 = time.perf_counter()
+    rl = run_legacy()
+    t_legacy = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rf = run_fast()
+    t_fast = time.perf_counter() - t0
+    per_l = rl.per_tenant if hasattr(rl, "per_tenant") else [rl]
+    per_f = rf.per_tenant if hasattr(rf, "per_tenant") else [rf]
+    identical = (rl.events == rf.events
+                 and all(_bit_identical(a, b)
+                         for a, b in zip(per_l, per_f)))
+    return {
+        "events": rl.events,
+        "legacy_s": t_legacy,
+        "fast_s": t_fast,
+        "legacy_events_per_s": rl.events / max(t_legacy, 1e-9),
+        "fast_events_per_s": rf.events / max(t_fast, 1e-9),
+        "speedup": t_legacy / max(t_fast, 1e-9),
+        "bit_identical": identical,
+    }
+
+
+def _events_section(sim_cfg: SimConfig) -> Dict[str, Dict]:
+    out: Dict[str, Dict] = {}
+    chains = camelot_suite()
+    graphs = {n: chains[n] for n in ("img-to-img", "text-to-text")}
+    graphs["diamond"] = dag_suite()["diamond"]
+    for name, graph in graphs.items():
+        alloc, comm = even_allocation(graph, RTX_2080TI, 2, batch=_BATCH)
+        def one(fast, _g=graph, _a=alloc, _c=comm):
+            cfg = replace(sim_cfg, fast=fast)
+            sim = PipelineSimulator(_g, _a, RTX_2080TI, _c, cfg)
+            return lambda: sim.run(_RATE_QPS)
+        out[name] = _events_entry(name, one(False), one(True))
+    # one multi-tenant co-location, through the same shared-timeline sim
+    tenants = multitenant_suite()[SMOKE]
+    sess = MultiServiceSession(tenants, ClusterSpec(devices=_DEVICES[SMOKE]),
+                               batch=_BATCH, name=SMOKE)
+    allocs = [even_allocation(t.graph, RTX_2080TI, _DEVICES[SMOKE],
+                              batch=_BATCH)[0] for t in tenants]
+    comm = sess.cluster.comm_model()
+    loads = [_RATE_QPS * w for w in sess.weights]
+    def multi(fast):
+        cfg = replace(sim_cfg, fast=fast)
+        sim = MultiTenantSimulator(sess.tenant_set, allocs,
+                                   sess.cluster.device_spec, comm, sim=cfg)
+        return lambda: sim.run(loads)
+    out[SMOKE] = _events_entry(SMOKE, multi(False), multi(True))
+    return out
+
+
+def _search_scenario(name: str, tenants, sim_cfg: SimConfig,
+                     iterations: int) -> Dict:
+    sess = MultiServiceSession(tenants, ClusterSpec(devices=_DEVICES[name]),
+                               batch=_BATCH, name=name)
+    joint = sess.solve(policy="max-peak",
+                       sa=SAConfig(iterations=iterations, seed=0))
+    out: Dict = {"devices": _DEVICES[name], "feasible": joint.feasible}
+    if not joint.feasible:
+        return out
+    allocs = sess.split(result=joint)
+    dev, comm = sess.cluster.device_spec, sess.cluster.comm_model()
+
+    def arm(fast, abort, parallel, shared, seed):
+        cfg = replace(sim_cfg, fast=fast)
+        probes = [0]
+        if shared:
+            sim = MultiTenantSimulator(sess.tenant_set, allocs, dev, comm,
+                                       sim=cfg)
+            def mk():
+                probes[0] += 1
+                return sim
+        else:
+            def mk():
+                probes[0] += 1
+                return MultiTenantSimulator(sess.tenant_set, allocs, dev,
+                                            comm, sim=cfg)
+        t0 = time.perf_counter()
+        lam, r = find_joint_peak(mk, sess.qos_targets, weights=sess.weights,
+                                 lo=2.0, hi=4096.0, seed_load=seed,
+                                 parallel=parallel, abort=abort)
+        return lam, r, time.perf_counter() - t0, probes[0]
+
+    # legacy plane: blind bracket, curve physics, fresh sims, sequential
+    lam_l, r_l, t_l, n_l = arm(False, False, 1, False, None)
+    # new plane: solver-seeded bracket, tabulated physics, early-abort,
+    # shared simulator, 2-way speculative probes
+    lam_f, r_f, t_f, n_f = arm(True, True, 2, True, joint.load)
+
+    verdicts_l = [r.meets_qos(t) for r, t in zip(r_l.per_tenant,
+                                                 sess.qos_targets)]
+    verdicts_f = [r.meets_qos(t) for r, t in zip(r_f.per_tenant,
+                                                 sess.qos_targets)]
+    out.update({
+        "seed_load": joint.load,
+        "peak_legacy": lam_l,
+        "peak_fast": lam_f,
+        "peaks_identical": lam_l == lam_f,
+        "verdicts_legacy": verdicts_l,
+        "verdicts_fast": verdicts_f,
+        "verdicts_identical": verdicts_l == verdicts_f,
+        "result_bit_identical": all(
+            _bit_identical(a, b)
+            for a, b in zip(r_l.per_tenant, r_f.per_tenant)),
+        "legacy_s": t_l,
+        "fast_s": t_f,
+        "probes_legacy": n_l,
+        "probes_fast": n_f,
+        "speedup": t_l / max(t_f, 1e-9),
+    })
+    return out
+
+
+def _scale_point(n_tenants: int, sim_cfg: SimConfig) -> Dict:
+    tenants = synthetic_tenant_set(n_tenants, RTX_2080TI, seed=0)
+    n_dev = max(2, n_tenants // 2)
+    allocs = [even_allocation(t.graph, RTX_2080TI, n_dev, batch=_BATCH)[0]
+              for t in tenants.tenants]
+    comm = ClusterSpec(devices=n_dev).comm_model()
+    loads = [30.0 * t.weight for t in tenants.tenants]
+    def one(fast):
+        cfg = replace(sim_cfg, fast=fast)
+        sim = MultiTenantSimulator(tenants, allocs, RTX_2080TI, comm,
+                                   sim=cfg)
+        return lambda: sim.run(loads)
+    entry = _events_entry("scale", one(False), one(True))
+    entry.update({"tenants": n_tenants, "devices": n_dev})
+    return entry
+
+
+def run(quick: bool = False, iterations: int = 0) -> List[Row]:
+    iterations = iterations or (600 if quick else 1200)
+    sim_cfg = SimConfig(duration=5.0 if quick else 10.0, warmup=1.0)
+    t_start = time.perf_counter()
+    report: Dict = {"quick": quick, "iterations": iterations,
+                    "batch": _BATCH, "duration_s": sim_cfg.duration}
+    rows: List[Row] = []
+
+    report["events_per_s"] = _events_section(sim_cfg)
+    for name, e in report["events_per_s"].items():
+        rows.append((f"sim/events/{name}", e["fast_s"] * 1e6,
+                     f"fast={e['fast_events_per_s']:.0f}ev/s;"
+                     f"legacy={e['legacy_events_per_s']:.0f}ev/s;"
+                     f"speedup={e['speedup']:.2f}x;"
+                     f"identical={e['bit_identical']}"))
+
+    report["peak_search"] = {}
+    tot_l = tot_f = 0.0
+    for name, tenants in multitenant_suite().items():
+        sc = _search_scenario(name, tenants, sim_cfg, iterations)
+        report["peak_search"][name] = sc
+        if not sc.get("feasible"):
+            rows.append((f"sim/search/{name}", 0.0, "infeasible"))
+            continue
+        tot_l += sc["legacy_s"]
+        tot_f += sc["fast_s"]
+        rows.append((f"sim/search/{name}", sc["fast_s"] * 1e6,
+                     f"legacy={sc['legacy_s']:.2f}s;"
+                     f"fast={sc['fast_s']:.3f}s;"
+                     f"speedup={sc['speedup']:.1f}x;"
+                     f"probes={sc['probes_legacy']}->{sc['probes_fast']};"
+                     f"identical={sc['peaks_identical']}"))
+
+    report["scale_point"] = _scale_point(8 if quick else 16, sim_cfg)
+    e = report["scale_point"]
+    rows.append((f"sim/events/scale-{e['tenants']}t", e["fast_s"] * 1e6,
+                 f"fast={e['fast_events_per_s']:.0f}ev/s;"
+                 f"legacy={e['legacy_events_per_s']:.0f}ev/s;"
+                 f"speedup={e['speedup']:.2f}x;"
+                 f"identical={e['bit_identical']}"))
+
+    searches = [s for s in report["peak_search"].values()
+                if s.get("feasible")]
+    report["headline"] = {
+        "suite_legacy_s": tot_l,
+        "suite_fast_s": tot_f,
+        "suite_speedup": tot_l / max(tot_f, 1e-9),
+        "all_peaks_identical": all(s["peaks_identical"] for s in searches),
+        "all_verdicts_identical": all(s["verdicts_identical"]
+                                      for s in searches),
+        "all_bit_identical": (
+            all(s["result_bit_identical"] for s in searches)
+            and all(e["bit_identical"]
+                    for e in report["events_per_s"].values())
+            and report["scale_point"]["bit_identical"]),
+    }
+    report["elapsed_s"] = time.perf_counter() - t_start
+    rows.append(("sim/suite", tot_f * 1e6,
+                 f"legacy={tot_l:.2f}s;fast={tot_f:.2f}s;"
+                 f"speedup={report['headline']['suite_speedup']:.1f}x"))
+    with open("BENCH_sim.json", "w") as f:
+        json.dump(report, f, indent=2)
+    run.last_report = report
+    return rows
+
+
+run.last_report = None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--iterations", type=int, default=0)
+    ap.add_argument("--budget-s", type=float, default=30.0,
+                    help="fail if the whole run exceeds this many seconds")
+    args = ap.parse_args()
+    emit(run(quick=args.quick, iterations=args.iterations))
+    report = run.last_report
+    head = report["headline"]
+    print(f"suite: legacy={head['suite_legacy_s']:.2f}s "
+          f"fast={head['suite_fast_s']:.2f}s "
+          f"speedup={head['suite_speedup']:.1f}x "
+          f"(elapsed {report['elapsed_s']:.1f}s, "
+          f"budget {args.budget_s:.1f}s)")
+    if report["elapsed_s"] > args.budget_s:
+        print(f"ERROR: run took {report['elapsed_s']:.1f}s > budget",
+              file=sys.stderr)
+        return 1
+    if not head["all_bit_identical"]:
+        print("ERROR: fast path diverged from legacy bit-parity",
+              file=sys.stderr)
+        return 1
+    if not (head["all_peaks_identical"] and head["all_verdicts_identical"]):
+        print("ERROR: fast search peak/verdict differs from legacy",
+              file=sys.stderr)
+        return 1
+    if head["suite_speedup"] <= 1.0:
+        print("ERROR: fast plane did not beat the legacy plane",
+              file=sys.stderr)
+        return 1
+    slow = [n for n, s in report["peak_search"].items()
+            if s.get("feasible") and s["speedup"] <= 1.0]
+    if slow:
+        print(f"ERROR: fast plane slower than legacy on {slow}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,9 @@ sweep; default runs everything (matches the paper's evaluation section).
   dag    — DAG services: diamond + backbone  (beyond paper)
   alloc  — policy hot path: scalar vs vectorized allocator, sim events/s
   multitenant — joint cross-service allocation vs static partitions
+  sim    — measurement plane: tabulated physics + O(1) dispatch +
+           QoS early-abort + seeded lattice peak search vs legacy
+           (bit-identical verdicts pinned)
   specs  — repro.camelot spec round-trip over every shipped workload
   roofline — dry-run roofline table          (deliverable g)
   kernel — model-kernel microbenchmarks
@@ -29,8 +32,8 @@ from benchmarks import (bench_alloc, bench_artifact, bench_comm, bench_dag,
                         bench_diurnal, bench_fig19, bench_kernels,
                         bench_min_resource, bench_multitenant,
                         bench_overhead, bench_pcie, bench_peak_load,
-                        bench_predictor, bench_roofline, bench_solver_scale,
-                        bench_specs)
+                        bench_predictor, bench_roofline, bench_sim_scale,
+                        bench_solver_scale, bench_specs)
 from benchmarks.common import emit
 
 MODULES = {
@@ -46,6 +49,7 @@ MODULES = {
     "dag": bench_dag,
     "alloc": bench_alloc,
     "multitenant": bench_multitenant,
+    "sim": bench_sim_scale,
     "scale": bench_solver_scale,
     "specs": bench_specs,
     "roofline": bench_roofline,

@@ -212,6 +212,8 @@ class BaselinePolicy:
             solve_time=time.perf_counter() - t0,
             iterations=0, mode="closed-form")
         res.comm, res.policy = comm, self.name
+        if res.feasible and res.objective > 0:
+            res.load = res.objective     # predicted min node throughput
         return res
 
 

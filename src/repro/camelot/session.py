@@ -160,12 +160,26 @@ class CamelotSession:
 
     def find_peak(self, sim: Optional[SimConfig] = None,
                   result: Optional[SolveResult] = None, lo: float = 1.0,
-                  hi: float = 4096.0) -> Tuple[float, SimResult]:
-        """Binary-search the highest load whose simulated p99 meets the
-        QoS target (paper §IV-A methodology)."""
+                  hi: float = 4096.0, tol: float = 0.03, max_iter: int = 14,
+                  seed_load: Optional[float] = None, parallel: int = 1,
+                  abort: bool = True) -> Tuple[float, SimResult]:
+        """Search the highest load whose simulated p99 meets the QoS
+        target (paper §IV-A methodology).  One simulator is built and
+        shared across probes (its physics tables amortize), the bracket
+        seeds from the solver's own predicted load (``SolveResult.load``;
+        pass ``seed_load`` to override, ``seed_load=0`` to disable), and
+        infeasible probes stop at the exact early-abort bound — abort
+        never changes a verdict, so the peak matches ``abort=False``.
+        ``parallel > 1`` speculates probe loads on a thread pool with
+        results identical to the sequential search."""
         res = self._resolve_result(result)
-        return find_peak_load(lambda: self._make_sim(res, sim),
-                              self.qos_target, lo=lo, hi=hi)
+        simulator = self._make_sim(res, sim)
+        if seed_load is None:
+            seed_load = res.load
+        return find_peak_load(lambda: simulator, self.qos_target, lo=lo,
+                              hi=hi, tol=tol, max_iter=max_iter,
+                              seed_load=seed_load or None,
+                              parallel=parallel, abort=abort)
 
     # ---- 4. serve (live) -----------------------------------------------
 
@@ -634,15 +648,24 @@ class MultiServiceSession:
 
     def find_peak(self, sim: Optional[SimConfig] = None,
                   result: Optional[SolveResult] = None, lo: float = 1.0,
-                  hi: float = 4096.0) -> Tuple[float, MultiSimResult]:
-        """Binary-search the highest normalized load λ at which EVERY
-        tenant's simulated p99 meets its own target when tenant t is
-        offered λ·weight_t qps — the measurement counterpart of the joint
-        max-peak objective."""
+                  hi: float = 4096.0, tol: float = 0.03, max_iter: int = 14,
+                  seed_load: Optional[float] = None, parallel: int = 1,
+                  abort: bool = True) -> Tuple[float, MultiSimResult]:
+        """Search the highest normalized load λ at which EVERY tenant's
+        simulated p99 meets its own target when tenant t is offered
+        λ·weight_t qps — the measurement counterpart of the joint
+        max-peak objective.  Shares one simulator across probes, seeds
+        the bracket from the joint solve's predicted λ
+        (``SolveResult.load``) and early-aborts infeasible probes; see
+        ``CamelotSession.find_peak`` for the knobs."""
         res = self._resolve_result(result)
-        return find_joint_peak(lambda: self._make_sim(res, sim),
-                               self.qos_targets, weights=self.weights,
-                               lo=lo, hi=hi)
+        simulator = self._make_sim(res, sim)
+        if seed_load is None:
+            seed_load = res.load
+        return find_joint_peak(lambda: simulator, self.qos_targets,
+                               weights=self.weights, lo=lo, hi=hi, tol=tol,
+                               max_iter=max_iter, seed_load=seed_load or None,
+                               parallel=parallel, abort=abort)
 
     def simulate_static(self, results: List[SolveResult], loads,
                         sim: Optional[SimConfig] = None) -> MultiSimResult:

@@ -195,6 +195,12 @@ class SolveResult:
     # device range, tenant names and per-pod solve metrics — None for flat
     # solves.  Serialised so a saved session round-trips the decomposition.
     pods: Optional[List[dict]] = None
+    # the allocator's own prediction of the load this allocation sustains
+    # (max-load solves: the objective; min-resource solves: the required
+    # load; joint solves: the normalized λ).  The measurement plane seeds
+    # its peak-search bracket from it (``find_peak_load(seed_load=...)``)
+    # instead of searching blind from (1, 4096).  None when unknown.
+    load: Optional[float] = None
 
     # ---- dict round-trip (allocation persistence) ---------------------
     # ``comm`` and ``history`` are deliberately not serialised: the comm
@@ -215,6 +221,8 @@ class SolveResult:
             "warm_started": self.warm_started,
             "policy": self.policy,
             "pods": self.pods,
+            "load": self.load
+            if self.load is None or math.isfinite(self.load) else None,
         }
 
     @classmethod
@@ -232,7 +240,8 @@ class SolveResult:
             warm_started=bool(d.get("warm_started", False)),
             comm=comm,
             policy=str(d.get("policy", "")),
-            pods=[dict(p) for p in pods] if pods is not None else None)
+            pods=[dict(p) for p in pods] if pods is not None else None,
+            load=float(d["load"]) if d.get("load") is not None else None)
 
 
 class CamelotAllocator:
@@ -953,8 +962,11 @@ class CamelotAllocator:
         """Case 1 (Eq. 1): maximise the peak supported load.
         ``warm_start`` seeds the vectorized search from a previous
         allocation (periodic re-solves)."""
-        return self._anneal(batch, self.n_devices, "max_load",
-                            warm=warm_start)
+        res = self._anneal(batch, self.n_devices, "max_load",
+                           warm=warm_start)
+        if res.feasible:
+            res.load = res.objective     # predicted peak: the bracket seed
+        return res
 
     def min_devices(self, batch: int, load: float) -> int:
         """Eq. 2: y = max(ΣC(i,s)/G, ΣM(i,s)/F) scaled to the target load.
@@ -1029,7 +1041,8 @@ class CamelotAllocator:
             res = self._anneal(batch, y, "min_resource", required_load=load,
                                warm=warm)
             if res.feasible:
-                return res
+                res.load = load          # supported by construction: the
+                return res               # peak-search bracket seed
             # carry the rung's fallback incumbent forward (vectorized
             # mode): it already chases the load under Constraints 1–5, so
             # the next (looser) rung polishes it instead of rediscovering
@@ -1096,10 +1109,17 @@ class MultiTenantAllocator(CamelotAllocator):
         self._node_norm = self.tenants.node_values(
             [max(float(l), 1e-9) for l in loads])
         try:
-            return super().solve_min_resource(batch, 1.0,
-                                              warm_start=warm_start)
+            res = super().solve_min_resource(batch, 1.0,
+                                             warm_start=warm_start)
         finally:
             self._node_norm = self._weight_nodes
+        if res.feasible:
+            # the λ at which every tenant is offered at most its required
+            # load (tenant t gets λ·weight_t ≤ loads[t]) — the sure-side
+            # seed for find_joint_peak's weighted bracket
+            res.load = min(float(l) / max(w, 1e-9) for l, w in
+                           zip(loads, self.tenants.weights))
+        return res
 
     def per_tenant_allocations(self, alloc: Allocation,
                                batch: int) -> List[Allocation]:

@@ -51,6 +51,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
+from heapq import heappop, heappush
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple, Union
 
 from repro.core.comm import CommModel, select_mechanism
@@ -83,7 +84,7 @@ class BatchingPolicy:
         return oldest_arrival + self.timeout
 
 
-@dataclass
+@dataclass(slots=True)
 class StageInstance:
     """One schedulable instance of a node: a (device, quota) slot from the
     Placement.  ``bandwidth`` is simulator-side contention bookkeeping."""
@@ -95,9 +96,11 @@ class StageInstance:
     bandwidth: float = 0.0
     dispatches: int = 0
     busy_time: float = 0.0
+    gen: int = 0      # placement generation — stale releases are no-ops
+    tbl: Optional[tuple] = None   # fast-path (dur, bw, len) physics table
 
 
-@dataclass
+@dataclass(slots=True)
 class ReadyBatch:
     """A formed batch travelling through the service graph.  ``items`` is
     opaque to the core (Query objects in the live engine, arrival
@@ -141,7 +144,8 @@ class ExecCore:
                  placement: Placement,
                  batching: BatchingPolicy, comm: Optional[CommModel] = None,
                  edge_nbytes: Optional[Callable[[ServiceEdge, int],
-                                               float]] = None):
+                                               float]] = None,
+                 fast: bool = False):
         if isinstance(topology, int):
             self.graph: Optional[ServiceGraph] = None
             n = topology
@@ -167,6 +171,9 @@ class ExecCore:
         self.batching = batching
         self.comm = comm
         self._edge_nbytes = edge_nbytes
+        self.fast = fast
+        self._gen = 0
+        self._free: List[List[int]] = []
         self.stage_instances: List[List[StageInstance]] = []
         self._build_instances(placement)
         # entry admission: (arrival, item)
@@ -184,11 +191,16 @@ class ExecCore:
     def _build_instances(self, placement: Placement) -> None:
         self.placement = placement
         self.stage_instances = []
+        self._gen += 1
         for si, placed in enumerate(placement.per_stage):
             assert placed, f"node {si} has no placed instance"
             self.stage_instances.append([
-                StageInstance(si, k, dev, quota)
+                StageInstance(si, k, dev, quota, gen=self._gen)
                 for k, (dev, quota) in enumerate(placed)])
+        # fast-path free-lists: min-heap of free instance indices per stage.
+        # A range is already heap-ordered; popping the min index reproduces
+        # the legacy first-free linear scan exactly.
+        self._free = [list(range(len(st))) for st in self.stage_instances]
 
     def reset_instances(self, placement: Placement) -> None:
         """Swap to a new Placement between batches (live re-allocation).
@@ -260,12 +272,17 @@ class ExecCore:
         the first-arrival ``items`` order, so per-query ordering survives
         the join."""
         key = (dst, bid)
-        pending = self._joins.setdefault(key, {})
+        joins = self._joins
+        pending = joins.get(key)
+        if pending is None:
+            pending = joins[key] = {}
+            self._join_items[key] = items
         assert src not in pending, \
             f"duplicate delivery over edge {src}->{dst} for batch {bid}"
         pending[src] = data
-        self._join_items.setdefault(key, items)
-        if set(pending) != set(self.preds[dst]):
+        # each predecessor delivers exactly once (asserted above), so a
+        # length check is the full set comparison
+        if len(pending) != len(self.preds[dst]):
             return None
         inputs = self._joins.pop(key)
         joined_items = self._join_items.pop(key)
@@ -304,6 +321,16 @@ class ExecCore:
         batches, first free instance)."""
         out = []
         q = self.ready[stage]
+        if self.fast:
+            free = self._free[stage]
+            insts = self.stage_instances[stage]
+            while q and free:
+                inst = insts[heappop(free)]
+                rb = q.popleft()
+                inst.busy = True
+                inst.dispatches += 1
+                out.append((inst, rb))
+            return out
         while q:
             inst = self._free_instance(stage)
             if inst is None:
@@ -327,6 +354,11 @@ class ExecCore:
         inst.busy = False
         inst.bandwidth = 0.0
         inst.busy_time += busy_for
+        # Return to the free-list only for current-generation instances:
+        # after ``reset_instances`` an in-flight release refers to the old
+        # pool, and the legacy scan never sees it either.
+        if self.fast and inst.gen == self._gen:
+            heappush(self._free[inst.stage], inst.index)
 
     # ---- per-edge communication routing -------------------------------
 

@@ -289,7 +289,10 @@ class HierarchicalSolver:
     def solve_max_load(self, batch: int) -> SolveResult:
         """Joint Case 1 over pods: maximise ``min_t load_t / weight_t``
         (the pod-wise minimum of the per-pod objectives)."""
-        return self._solve(batch, "max_load", None)
+        res = self._solve(batch, "max_load", None)
+        if res.feasible:
+            res.load = res.objective     # predicted λ: the bracket seed
+        return res
 
     def solve_min_resource(self, batch: int, loads) -> SolveResult:
         """Joint Case 2 over pods: minimise total quota with tenant t
@@ -298,4 +301,9 @@ class HierarchicalSolver:
             loads = [float(loads)] * len(self.tenants)
         assert len(loads) == len(self.tenants), \
             "need one required load per tenant"
-        return self._solve(batch, "min_resource", list(loads))
+        res = self._solve(batch, "min_resource", list(loads))
+        if res.feasible:
+            # sure-side weighted-λ seed (see MultiTenantAllocator)
+            res.load = min(float(l) / max(w, 1e-9) for l, w in
+                           zip(loads, self.tenants.weights))
+        return res

@@ -246,6 +246,32 @@ class TabulatedStagePredictor(StagePredictor):
         return super().quota_row(key, batch, quotas)
 
 
+def tabulate_physics(profile: MicroserviceProfile, device: DeviceSpec,
+                     max_batch: int, quotas: Sequence[float],
+                     ) -> Dict[float, tuple]:
+    """Tabulate one node's ground-truth sim physics.
+
+    Returns ``{quota: (dur, bw)}`` where ``dur[b]``/``bw[b]`` hold the node's
+    ``MicroserviceProfile.duration``/``bandwidth`` for batch ``b`` (index 0
+    unused) on ``device``, for every distinct placed ``quota``.  The table
+    stores the curves' own outputs at exactly the (batch, quota) points the
+    simulator's hot loop would evaluate — in-flight batches are always
+    1..max_batch — so an on-table lookup is bit-identical to a fresh call;
+    the same contract (exact on-grid, caller falls back off-grid) as
+    ``TabulatedStagePredictor``."""
+    out: Dict[float, tuple] = {}
+    for q in quotas:
+        if q in out:
+            continue
+        dur = [0.0] * (max_batch + 1)
+        bw = [0.0] * (max_batch + 1)
+        for b in range(1, max_batch + 1):
+            dur[b] = profile.duration(b, q, device)
+            bw[b] = profile.bandwidth(b, q, device)
+        out[q] = (dur, bw)
+    return out
+
+
 class PipelinePredictor:
     """Per-node predictors for one service, built from offline profiling.
 

@@ -1,7 +1,8 @@
 from repro.sim.baselines import (camelot, camelot_min_resource, camelot_nc,
                                  even_allocation, laius, standalone)
-from repro.sim.simulator import (MultiSimResult, MultiTenantSimulator,
-                                 PipelineSimulator, SimConfig, SimResult,
+from repro.sim.simulator import (MIN_COMPLETED, MultiSimResult,
+                                 MultiTenantSimulator, PipelineSimulator,
+                                 SimConfig, SimResult, bracketed_peak_search,
                                  find_joint_peak, find_peak_load)
 from repro.sim.workloads import (artifact_pipelines, artifact_stage,
                                  camelot_suite, dag_suite, diamond_service,
@@ -11,8 +12,9 @@ from repro.sim.workloads import (artifact_pipelines, artifact_stage,
 
 __all__ = [
     "camelot", "camelot_min_resource", "camelot_nc", "even_allocation",
-    "laius", "standalone", "MultiSimResult", "MultiTenantSimulator",
-    "PipelineSimulator", "SimConfig", "SimResult", "find_joint_peak",
+    "laius", "standalone", "MIN_COMPLETED", "MultiSimResult",
+    "MultiTenantSimulator", "PipelineSimulator", "SimConfig", "SimResult",
+    "bracketed_peak_search", "find_joint_peak",
     "find_peak_load", "artifact_pipelines", "artifact_stage", "camelot_suite",
     "dag_suite", "diamond_service", "ensemble_service", "multitenant_suite",
     "shared_backbone_service", "synthetic_predictor", "synthetic_tenant_set",

@@ -1,0 +1,236 @@
+"""Measurement-plane contracts: the fast simulator path is bit-identical
+to the legacy path, QoS early-abort never flips a verdict, and the
+lattice peak search is path- and parallelism-independent."""
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.camelot import ClusterSpec, MultiServiceSession
+from repro.core import RTX_2080TI
+from repro.core.qos import abort_threshold
+from repro.sim import (MIN_COMPLETED, SimConfig, camelot_suite, dag_suite,
+                       even_allocation, find_joint_peak, multitenant_suite)
+from repro.sim.simulator import (MultiTenantSimulator, PipelineSimulator,
+                                 bracketed_peak_search)
+
+CFG = SimConfig(duration=4.0, warmup=1.0, seed=0)
+FAST = SimConfig(duration=4.0, warmup=1.0, seed=0, fast=True)
+SLOW = SimConfig(duration=4.0, warmup=1.0, seed=0, fast=False)
+ABORT = SimConfig(duration=4.0, warmup=1.0, seed=0, fast=True,
+                  abort_over_target=True)
+
+
+def _assert_bit_identical(a, b):
+    assert a.p99 == b.p99
+    assert a.mean_latency == b.mean_latency
+    assert a.completed == b.completed
+    assert a.events == b.events
+    assert list(a.qos.latencies) == list(b.qos.latencies)
+    assert a.device_busy == b.device_busy
+
+
+def _multi_setup(name):
+    tenants = multitenant_suite()[name]
+    devices = {"chain+diamond": 3, "two-chains": 3, "3-tenant-mixed": 4}[name]
+    sess = MultiServiceSession(tenants, ClusterSpec(devices=devices),
+                               batch=8, name=name)
+    allocs = [even_allocation(t.graph, RTX_2080TI, devices, batch=8)[0]
+              for t in tenants]
+    return sess, allocs, sess.cluster.comm_model()
+
+
+# ---- fast-vs-legacy bit parity --------------------------------------------
+
+@pytest.mark.parametrize("name", list(camelot_suite()))
+@pytest.mark.parametrize("qps", [20.0, 150.0])
+def test_chain_parity(name, qps):
+    graph = camelot_suite()[name]
+    alloc, comm = even_allocation(graph, RTX_2080TI, 2, batch=8)
+    rl = PipelineSimulator(graph, alloc, RTX_2080TI, comm, SLOW).run(qps)
+    rf = PipelineSimulator(graph, alloc, RTX_2080TI, comm, FAST).run(qps)
+    _assert_bit_identical(rl, rf)
+
+
+@pytest.mark.parametrize("name", list(dag_suite()))
+def test_dag_parity(name):
+    graph = dag_suite()[name]
+    alloc, comm = even_allocation(graph, RTX_2080TI, 2, batch=8)
+    for qps in (15.0, 120.0):
+        rl = PipelineSimulator(graph, alloc, RTX_2080TI, comm, SLOW).run(qps)
+        rf = PipelineSimulator(graph, alloc, RTX_2080TI, comm, FAST).run(qps)
+        _assert_bit_identical(rl, rf)
+
+
+@pytest.mark.parametrize("name", list(multitenant_suite()))
+def test_multitenant_parity(name):
+    sess, allocs, comm = _multi_setup(name)
+    loads = [80.0 * w for w in sess.weights]
+    rl = MultiTenantSimulator(sess.tenant_set, allocs,
+                              sess.cluster.device_spec, comm,
+                              sim=SLOW).run(loads)
+    rf = MultiTenantSimulator(sess.tenant_set, allocs,
+                              sess.cluster.device_spec, comm,
+                              sim=FAST).run(loads)
+    assert rl.events == rf.events
+    assert rl.device_busy == rf.device_busy
+    for a, b in zip(rl.per_tenant, rf.per_tenant):
+        _assert_bit_identical(a, b)
+
+
+def test_shared_simulator_rerun_parity():
+    """A shared (table-warm) simulator reproduces a fresh one exactly."""
+    sess, allocs, comm = _multi_setup("chain+diamond")
+    shared = MultiTenantSimulator(sess.tenant_set, allocs,
+                                  sess.cluster.device_spec, comm, sim=FAST)
+    for loads in ([30.0, 30.0], [120.0, 120.0], [30.0, 30.0]):
+        fresh = MultiTenantSimulator(sess.tenant_set, allocs,
+                                     sess.cluster.device_spec, comm,
+                                     sim=FAST)
+        a, b = shared.run(loads), fresh.run(loads)
+        for x, y in zip(a.per_tenant, b.per_tenant):
+            _assert_bit_identical(x, y)
+
+
+# ---- per-tenant result ownership (the aliasing fix) ------------------------
+
+def test_per_tenant_results_not_aliased():
+    sess, allocs, comm = _multi_setup("two-chains")
+    r = MultiTenantSimulator(sess.tenant_set, allocs,
+                             sess.cluster.device_spec, comm,
+                             sim=FAST).run([60.0, 60.0])
+    busies = [t.device_busy for t in r.per_tenant]
+    assert all(b is not r.device_busy for b in busies)
+    assert busies[0] is not busies[1]
+    for dev, total in r.device_busy.items():
+        per = sum(b.get(dev, 0.0) for b in busies)
+        assert math.isclose(per, total, rel_tol=1e-9)
+    assert sum(t.events for t in r.per_tenant) == r.events
+    assert all(t.events < r.events for t in r.per_tenant)
+
+
+# ---- unified feasibility predicate ----------------------------------------
+
+def test_meets_qos_min_completed():
+    graph = camelot_suite()["img-to-img"]
+    alloc, comm = even_allocation(graph, RTX_2080TI, 2, batch=8)
+    r = PipelineSimulator(graph, alloc, RTX_2080TI, comm, FAST).run(30.0)
+    assert r.qos.count() >= MIN_COMPLETED
+    assert r.meets_qos(graph.qos_target) == (r.p99 <= graph.qos_target)
+    # starved run: too few samples can never pass, whatever its p99
+    r2 = PipelineSimulator(graph, alloc, RTX_2080TI, comm,
+                           SimConfig(duration=1.2, warmup=1.0, seed=0,
+                                     fast=True)).run(1.0)
+    if r2.qos.count() < MIN_COMPLETED:
+        assert not r2.meets_qos(graph.qos_target)
+
+
+# ---- the exact abort bound ------------------------------------------------
+
+@settings(max_examples=40)
+@given(n=st.integers(1, 5000), pct=st.sampled_from([90.0, 95.0, 99.0]))
+def test_abort_threshold_bound(n, pct):
+    """thr(n) is the MINIMAL over-target count that forces the numpy
+    linear-interpolation percentile over the target, and is monotone."""
+    t = 1.0
+    thr = abort_threshold(n, pct)
+    assert 1 <= thr <= n
+    # soundness: thr barely-over samples force the percentile over the
+    # target even when every other sample sits exactly AT the target
+    worst = np.array([t] * (n - thr) + [t + 1e-6] * thr)
+    assert np.percentile(worst, pct) > t
+    # minimality: with one fewer over-target sample a compliant run exists
+    ok = np.array([0.0] * (n - thr + 1) + [t + 1e-9] * (thr - 1))
+    assert np.percentile(ok, pct) <= t
+    assert abort_threshold(n + 1, pct) >= thr
+
+
+@settings(max_examples=8)
+@given(mult=st.floats(0.4, 3.0))
+def test_abort_never_flips_verdict(mult):
+    sess, allocs, comm = _multi_setup("chain+diamond")
+    loads = [170.0 * mult * w for w in sess.weights]
+    full = MultiTenantSimulator(sess.tenant_set, allocs,
+                                sess.cluster.device_spec, comm,
+                                sim=FAST).run(loads)
+    ab = MultiTenantSimulator(sess.tenant_set, allocs,
+                              sess.cluster.device_spec, comm,
+                              sim=ABORT).run(loads)
+    assert ab.meets_qos(sess.qos_targets) == full.meets_qos(sess.qos_targets)
+    if ab.aborted:
+        assert not ab.meets_qos(sess.qos_targets)
+    else:   # no abort fired: the runs must be bit-identical
+        for a, b in zip(full.per_tenant, ab.per_tenant):
+            _assert_bit_identical(a, b)
+
+
+# ---- lattice peak search: path and parallelism independence ---------------
+
+def _fake_probe(true_peak):
+    return lambda load: {"load": load, "feasible": load <= true_peak}
+
+
+def test_lattice_search_path_independent():
+    """Blind, seeded-accurate, and seeded-overshooting searches all land
+    on the same lattice point — the boundary belongs to the system, not
+    to the search path."""
+    probe = _fake_probe(460.0)
+    meets = lambda r: r["feasible"]
+    blind, _ = bracketed_peak_search(probe, meets, lo=2.0, hi=4096.0)
+    for seed in (455.0, 470.0, 800.0, 40.0):
+        peak, r = bracketed_peak_search(probe, meets, lo=2.0, hi=4096.0,
+                                        seed_load=seed)
+        assert peak == blind
+        assert r["load"] == peak and r["feasible"]
+    assert 460.0 / 1.03 < blind <= 460.0
+
+
+def test_lattice_search_parallel_identity():
+    probe = _fake_probe(123.0)
+    meets = lambda r: r["feasible"]
+    seq = bracketed_peak_search(probe, meets, lo=2.0, hi=4096.0,
+                                seed_load=120.0)
+    for k in (2, 4):
+        par = bracketed_peak_search(probe, meets, lo=2.0, hi=4096.0,
+                                    seed_load=120.0, parallel=k)
+        assert par == seq
+
+
+def test_lattice_search_lo_fails():
+    probe = _fake_probe(0.5)
+    peak, r = bracketed_peak_search(probe, lambda r: r["feasible"],
+                                    lo=2.0, hi=4096.0)
+    assert peak == 0.0 and not r["feasible"]
+
+
+def test_lattice_search_budget_exact():
+    calls = []
+    probe = lambda load: (calls.append(load), load)[1]
+    meets = lambda r: r <= 300.0
+    bracketed_peak_search(probe, meets, lo=2.0, hi=4096.0, max_iter=3)
+    # lo is probed outside the budget; exactly max_iter refinement probes
+    assert len(calls) == 1 + 3
+
+
+def test_sim_search_parallel_and_abort_identity():
+    """On the real simulator: sequential/parallel and abort-on/off agree
+    on the peak and return bit-identical results at that peak."""
+    sess, allocs, comm = _multi_setup("chain+diamond")
+    mk = lambda: MultiTenantSimulator(sess.tenant_set, allocs,
+                                      sess.cluster.device_spec, comm,
+                                      sim=FAST)
+    base = find_joint_peak(mk, sess.qos_targets, weights=sess.weights,
+                           lo=2.0, hi=2048.0)
+    for kw in ({"parallel": 4}, {"abort": True},
+               {"parallel": 2, "abort": True},
+               {"seed_load": base[0], "abort": True}):
+        lam, r = find_joint_peak(mk, sess.qos_targets, weights=sess.weights,
+                                 lo=2.0, hi=2048.0, **kw)
+        assert lam == base[0]
+        for a, b in zip(base[1].per_tenant, r.per_tenant):
+            _assert_bit_identical(a, b)
