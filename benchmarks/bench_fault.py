@@ -1,0 +1,283 @@
+"""Fault-recovery benchmark: seeded device death under load, with and
+without the health-monitored recovery loop.
+
+For every scenario in ``repro.sim.workloads.multitenant_suite`` it
+
+  1. solves ONE joint max-peak allocation and pins the no-fault parity
+     gate: a run with ``faults=None`` and a run with an inactive
+     ``FaultSpec()`` must be bit-identical (the fault plane costs nothing
+     when no faults are scheduled);
+  2. kills the most loaded device mid-run (a seeded ``DeviceFailure``)
+     and measures the BASELINE arm — the static allocation rides through
+     the failure with no recovery.  Every query routed to a stage whose
+     instances all lived on the victim is lost, so at least one tenant's
+     verdict (p99 on target AND zero failed queries) must drop;
+  3. measures the RECOVERY arm: phase A simulates up to one control
+     interval past the failure and feeds the ``HealthMonitor`` the
+     per-device completion heartbeats; the monitor must flag exactly the
+     victim; ``MultiTenantRuntime.on_device_failure`` (warm-started from
+     the incumbent via ``resume=True`` — NO cold solve) re-solves with
+     the dead device masked; phase B re-simulates the remaining timeline
+     under the recovery allocation WITH the victim dead from t=0 (proving
+     the new placement never touches it).  Every surviving (non-shed)
+     tenant's verdict must be restored;
+  4. checks that all four solver modes — vectorized (dense), incremental,
+     jax, and the hierarchical pod solver — accept ``device_mask`` and
+     place only on surviving devices.
+
+Emits ``BENCH_fault.json``: time-to-recover (detection latency + masked
+re-solve time), per-arm p99s/verdicts, and the recovery event's
+``reason``/``shed``.  ``--budget-s`` (CI smoke) fails the process on any
+gate: parity broken, baseline did not lose a verdict, recovery did not
+restore one, monitor misidentified the victim, a solver mode placed on a
+dead device, or time-to-recover exceeded the budget.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from dataclasses import replace
+from typing import Dict, List
+
+from benchmarks.common import Row, emit
+
+from repro.camelot import ClusterSpec, MultiServiceSession, SAConfig
+from repro.core.allocator import MultiTenantAllocator
+from repro.core.faults import DeviceFailure, FaultSpec
+from repro.core.hierarchy import HierarchicalSolver
+from repro.core.runtime import HealthMonitor, RuntimeConfig
+from repro.sim import SimConfig, multitenant_suite
+from repro.sim.simulator import MultiTenantSimulator
+
+SMOKE = "chain+diamond"
+_DEVICES = {"chain+diamond": 3, "two-chains": 3, "3-tenant-mixed": 4}
+_BATCH = 8
+#: offered load as a fraction of the predicted joint peak — low enough
+#: that the surviving pool can still hold every tenant after losing one
+#: of 3-4 devices (the masked min-resource ceiling sits well below the
+#: masked peak), high enough that the run is not trivially idle; the
+#: baseline arm loses its verdict regardless of load because the victim's
+#: exclusive stages lose their queries outright
+_FRAC = 0.30
+_T_FAIL = 2.5                  # virtual time of the device death
+_DETECT_INTERVAL = 0.5         # control interval: detection happens at
+                               # _T_FAIL + _DETECT_INTERVAL
+_HEARTBEAT_TIMEOUT = 0.4       # silence threshold (< control interval)
+
+
+def _victim_device(alloc, n_devices: int) -> int:
+    """The device whose death hurts most: prefer one hosting EVERY
+    instance of some stage (its queries have nowhere to retry), break
+    ties by total hosted quota."""
+    quota = [0.0] * n_devices
+    exclusive = [0] * n_devices
+    for placed in alloc.placement.per_stage:
+        devs = {d for d, _ in placed}
+        if len(devs) == 1:
+            exclusive[next(iter(devs))] += 1
+        for d, q in placed:
+            quota[d] += q
+    return max(range(n_devices), key=lambda d: (exclusive[d], quota[d]))
+
+
+def _verdicts(result, qos_targets) -> List[bool]:
+    """Per-tenant pass: p99 on target AND no failed/abandoned queries
+    (``meets_qos`` alone can pass on pre-fault samples while every
+    post-fault query of a starved stage is lost)."""
+    return [bool(r.meets_qos(t) and r.failed == 0)
+            for r, t in zip(result.per_tenant, qos_targets)]
+
+
+def _mask_modes(sess, sa: SAConfig, avail: List[int]) -> Dict[str, bool]:
+    """All four solver modes accept ``device_mask`` and place only on
+    surviving devices."""
+    out: Dict[str, bool] = {}
+    n = sess.cluster.devices
+    ok_set = set(avail)
+    for mode in ("vectorized", "incremental", "jax"):
+        alloc_sa = replace(sa, mode=mode)
+        solver = MultiTenantAllocator(
+            sess.tenant_set, sess._require_predictor(),
+            sess.cluster.device_spec, n, comm=sess.cluster.comm_model(),
+            sa=alloc_sa)
+        res = solver.solve_max_load(_BATCH, device_mask=avail)
+        out[mode] = bool(
+            res.feasible and res.allocation.placement is not None and
+            all(d in ok_set for placed in res.allocation.placement.per_stage
+                for d, _ in placed))
+    hier = HierarchicalSolver(
+        sess.tenant_set, sess._require_predictor(),
+        sess.cluster.device_spec, n, comm=sess.cluster.comm_model(), sa=sa)
+    res = hier.solve_max_load(_BATCH, device_mask=avail)
+    out["hierarchical"] = bool(
+        res.feasible and res.allocation.placement is not None and
+        all(d in ok_set for placed in res.allocation.placement.per_stage
+            for d, _ in placed))
+    return out
+
+
+def _scenario(name: str, tenants, quick: bool, iterations: int) -> Dict:
+    sess = MultiServiceSession(tenants, ClusterSpec(devices=_DEVICES[name]),
+                               batch=_BATCH, name=name)
+    sa = SAConfig(iterations=iterations, seed=0)
+    duration = 6.0 if quick else 10.0
+    sim_cfg = SimConfig(duration=duration, warmup=1.0)
+
+    joint = sess.solve(policy="max-peak", sa=sa)
+    out: Dict = {"devices": _DEVICES[name],
+                 "tenants": [t.name for t in tenants],
+                 "qos_targets": sess.qos_targets,
+                 "solve_time_s": joint.solve_time,
+                 "feasible": joint.feasible}
+    if not joint.feasible:
+        out["ok"] = False
+        return out
+    loads = [_FRAC * joint.objective * w for w in sess.weights]
+    out["offered_qps"] = loads
+
+    # -- gate 1: inactive faults are free (bit-parity) -------------------
+    r_none = sess.simulate(loads, sim=sim_cfg)
+    r_empty = sess.simulate(loads, sim=sim_cfg, faults=FaultSpec())
+    out["parity"] = all(
+        a.p99 == b.p99 and a.completed == b.completed
+        for a, b in zip(r_none.per_tenant, r_empty.per_tenant))
+
+    victim = _victim_device(joint.allocation, _DEVICES[name])
+    out["victim_device"] = victim
+    fault = FaultSpec(device_failures=(
+        DeviceFailure(time=_T_FAIL, device=victim),), seed=0)
+
+    # -- gate 2: baseline (no recovery) loses a verdict ------------------
+    r_base = sess.simulate(loads, sim=sim_cfg, faults=fault)
+    base_v = _verdicts(r_base, sess.qos_targets)
+    out["baseline"] = {
+        "p99": [r.p99 for r in r_base.per_tenant],
+        "failed": [r.failed for r in r_base.per_tenant],
+        "retries": [r.retries for r in r_base.per_tenant],
+        "verdicts": base_v}
+
+    # -- gate 3: recovery restores every surviving tenant ----------------
+    t_detect = _T_FAIL + _DETECT_INTERVAL
+    cfg_a = replace(sim_cfg, duration=t_detect)
+    r_a = sess.simulate(loads, sim=cfg_a, faults=fault)
+    mon = HealthMonitor(range(_DEVICES[name]),
+                        heartbeat_timeout=_HEARTBEAT_TIMEOUT)
+    mon.observe(t_detect, r_a.heartbeats)
+    dead = mon.dead_devices(t_detect)
+    out["detected_dead"] = dead
+
+    rt = sess.runtime(rt=RuntimeConfig(ewma_alpha=1.0, headroom=1.15),
+                      sa=sa, resume=True)     # NO cold solve: seeded from
+    rt.observe(loads)                         # the persisted joint result
+    t0 = time.perf_counter()
+    recov_alloc = rt.on_device_failure(t_detect, dead)
+    solve_s = time.perf_counter() - t0
+    event = rt.history[-1]
+    out["recovery_event"] = event.to_dict()
+    out["time_to_recover_s"] = _DETECT_INTERVAL + solve_s
+    shed = set(event.shed)
+
+    cfg_b = replace(sim_cfg, duration=duration - t_detect, warmup=0.5)
+    fault_b = FaultSpec(device_failures=(
+        DeviceFailure(time=0.0, device=victim),), seed=0)
+    r_b = MultiTenantSimulator(
+        sess.tenant_set, sess.tenant_set.split_allocation(recov_alloc),
+        sess.cluster.device_spec, sess.cluster.comm_model(),
+        sim=cfg_b).run(loads, faults=fault_b)
+    recov_v = _verdicts(r_b, sess.qos_targets)
+    out["recovery"] = {
+        "p99": [r.p99 for r in r_b.per_tenant],
+        "failed": [r.failed for r in r_b.per_tenant],
+        "verdicts": recov_v}
+
+    # -- gate 4: every mode accepts the mask -----------------------------
+    avail = [d for d in range(_DEVICES[name]) if d != victim]
+    out["mask_modes"] = _mask_modes(sess, sa, avail)
+
+    surviving_ok = all(v for v, t in zip(recov_v, tenants)
+                       if t.name not in shed)
+    out["ok"] = bool(
+        out["parity"] and dead == [victim] and not all(base_v) and
+        event.reason in ("device_failure", "degraded") and
+        surviving_ok and all(out["mask_modes"].values()))
+    return out
+
+
+def run(quick: bool = False, iterations: int = 0) -> List[Row]:
+    iterations = iterations or (600 if quick else 1500)
+    suite = multitenant_suite()
+    if quick:
+        suite = {SMOKE: suite[SMOKE]}
+    report = {"iterations": iterations, "batch": _BATCH, "frac": _FRAC,
+              "scenarios": {}}
+    rows: List[Row] = []
+    for name, tenants in suite.items():
+        sc = _scenario(name, tenants, quick, iterations)
+        report["scenarios"][name] = sc
+        if not sc.get("feasible"):
+            rows.append((f"fault/{name}", 0.0, "infeasible"))
+            continue
+        rows.append((f"fault/{name}/recover",
+                     sc["time_to_recover_s"] * 1e6,
+                     f"reason={sc['recovery_event']['reason']};"
+                     f"dead={sc['detected_dead']};ok={sc['ok']}"))
+        rows.append((f"fault/{name}/verdicts", 0.0,
+                     f"baseline={sc['baseline']['verdicts']};"
+                     f"recovery={sc['recovery']['verdicts']};"
+                     f"shed={sc['recovery_event']['shed']}"))
+    with open("BENCH_fault.json", "w") as f:
+        json.dump(report, f, indent=2)
+    run.last_report = report
+    return rows
+
+
+run.last_report = None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--iterations", type=int, default=0)
+    ap.add_argument("--budget-s", type=float, default=30.0,
+                    help="fail if time-to-recover exceeds this")
+    args = ap.parse_args()
+    emit(run(quick=args.quick, iterations=args.iterations))
+    report = run.last_report
+    rc = 0
+    for name, sc in report["scenarios"].items():
+        if not sc.get("feasible"):
+            print(f"ERROR: {name}: joint solve infeasible", file=sys.stderr)
+            rc = 1
+            continue
+        if not sc["parity"]:
+            print(f"ERROR: {name}: inactive FaultSpec broke bit-parity",
+                  file=sys.stderr)
+            rc = 1
+        if sc["detected_dead"] != [sc["victim_device"]]:
+            print(f"ERROR: {name}: monitor flagged {sc['detected_dead']}, "
+                  f"victim was {sc['victim_device']}", file=sys.stderr)
+            rc = 1
+        if all(sc["baseline"]["verdicts"]):
+            print(f"ERROR: {name}: baseline survived the device death — "
+                  "the failure arm is not stressing anything",
+                  file=sys.stderr)
+            rc = 1
+        if not sc["ok"]:
+            print(f"ERROR: {name}: recovery gates failed "
+                  f"(see BENCH_fault.json)", file=sys.stderr)
+            rc = 1
+        ttr = sc["time_to_recover_s"]
+        print(f"{name}: time-to-recover {ttr:.3f}s "
+              f"(reason={sc['recovery_event']['reason']}, "
+              f"shed={sc['recovery_event']['shed']})")
+        if ttr > args.budget_s:
+            print(f"ERROR: {name}: time-to-recover {ttr:.3f}s exceeds "
+                  f"budget {args.budget_s:.1f}s", file=sys.stderr)
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

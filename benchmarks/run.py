@@ -17,6 +17,8 @@ sweep; default runs everything (matches the paper's evaluation section).
   dag    — DAG services: diamond + backbone  (beyond paper)
   alloc  — policy hot path: scalar vs vectorized allocator, sim events/s
   multitenant — joint cross-service allocation vs static partitions
+  fault  — seeded device death: no-recovery baseline vs health-monitored
+           masked re-solve (time-to-recover, restored QoS verdicts)
   sim    — measurement plane: tabulated physics + O(1) dispatch +
            QoS early-abort + seeded lattice peak search vs legacy
            (bit-identical verdicts pinned)
@@ -29,8 +31,8 @@ import sys
 import time
 
 from benchmarks import (bench_alloc, bench_artifact, bench_comm, bench_dag,
-                        bench_diurnal, bench_fig19, bench_kernels,
-                        bench_min_resource, bench_multitenant,
+                        bench_diurnal, bench_fault, bench_fig19,
+                        bench_kernels, bench_min_resource, bench_multitenant,
                         bench_overhead, bench_pcie, bench_peak_load,
                         bench_predictor, bench_roofline, bench_sim_scale,
                         bench_solver_scale, bench_specs)
@@ -49,6 +51,7 @@ MODULES = {
     "dag": bench_dag,
     "alloc": bench_alloc,
     "multitenant": bench_multitenant,
+    "fault": bench_fault,
     "sim": bench_sim_scale,
     "scale": bench_solver_scale,
     "specs": bench_specs,

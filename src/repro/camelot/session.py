@@ -30,6 +30,7 @@ from repro.camelot.specs import (ClusterSpec, LoadSpec, MultiServiceSpec,
                                  TenantSpec)
 from repro.core.allocator import (CamelotAllocator, MultiTenantAllocator,
                                   SAConfig, SolveResult)
+from repro.core.faults import FaultSpec
 from repro.core.predictor import (DEFAULT_BATCHES, PipelinePredictor,
                                   ProfileSample, StagePredictor,
                                   TabulatedStagePredictor)
@@ -147,16 +148,19 @@ class CamelotSession:
 
     def simulate(self, load: Optional[float] = None,
                  sim: Optional[SimConfig] = None,
-                 result: Optional[SolveResult] = None) -> SimResult:
+                 result: Optional[SolveResult] = None,
+                 faults: Optional[FaultSpec] = None) -> SimResult:
         """Charge the (last) solved allocation in the discrete-event
-        simulator at ``load`` qps (default: ``QoSSpec.load``'s level)."""
+        simulator at ``load`` qps (default: ``QoSSpec.load``'s level).
+        ``faults`` injects a seeded fault script (device death, straggle,
+        transient errors) into the run."""
         res = self._resolve_result(result)
         if load is None:
             if self.qos.load is None:
                 raise ValueError("simulate needs a load: pass load=... or "
                                  "set QoSSpec.load")
             load = self.qos.load.qps
-        return self._make_sim(res, sim).run(float(load))
+        return self._make_sim(res, sim).run(float(load), faults=faults)
 
     def find_peak(self, sim: Optional[SimConfig] = None,
                   result: Optional[SolveResult] = None, lo: float = 1.0,
@@ -223,14 +227,20 @@ class CamelotSession:
     # ---- 5. online runtime ---------------------------------------------
 
     def runtime(self, rt: Optional[RuntimeConfig] = None,
-                sa=None) -> CamelotRuntime:
+                sa=None, resume: bool = False) -> CamelotRuntime:
         """The online reallocation loop (lazily built; solves the peak
-        allocation once on first use)."""
+        allocation once on first use).  ``resume=True`` seeds the runtime
+        from the session's persisted ``last_result`` (crash-restart: a
+        loaded session re-attaches with NO cold solve)."""
         if self._runtime is None:
+            initial = self.last_result if resume and \
+                self.last_result is not None and \
+                self.last_result.feasible else None
             self._runtime = CamelotRuntime(
                 self.graph, self._require_predictor(),
                 self.cluster.device_spec, self.cluster.devices, self.batch,
-                rt=rt, sa=sa, comm=self.cluster.comm_model())
+                rt=rt, sa=sa, comm=self.cluster.comm_model(),
+                initial=initial)
         return self._runtime
 
     def observe(self, qps: float) -> None:
@@ -639,12 +649,15 @@ class MultiServiceSession:
             sim=sim)
 
     def simulate(self, loads=None, sim: Optional[SimConfig] = None,
-                 result: Optional[SolveResult] = None) -> MultiSimResult:
+                 result: Optional[SolveResult] = None,
+                 faults: Optional[FaultSpec] = None) -> MultiSimResult:
         """Charge the joint allocation on the shared cluster: every tenant
         offered its own load (default: per-tenant ``QoSSpec.load``), one
-        virtual timeline, shared per-device contention."""
+        virtual timeline, shared per-device contention.  ``faults``
+        injects a seeded fault script into the run."""
         res = self._resolve_result(result)
-        return self._make_sim(res, sim).run(self._required_loads(loads))
+        return self._make_sim(res, sim).run(self._required_loads(loads),
+                                            faults=faults)
 
     def find_peak(self, sim: Optional[SimConfig] = None,
                   result: Optional[SolveResult] = None, lo: float = 1.0,
@@ -725,12 +738,20 @@ class MultiServiceSession:
     # ---- 5. online runtime ---------------------------------------------
 
     def runtime(self, rt: Optional[RuntimeConfig] = None,
-                sa=None) -> MultiTenantRuntime:
+                sa=None, resume: bool = False) -> MultiTenantRuntime:
+        """The joint online loop.  ``resume=True`` seeds it from the
+        session's persisted ``last_result`` (crash-restart: a loaded
+        session re-attaches its incumbent joint allocation with NO cold
+        solve)."""
         if self._runtime is None:
+            initial = self.last_result if resume and \
+                self.last_result is not None and \
+                self.last_result.feasible else None
             self._runtime = MultiTenantRuntime(
                 self.tenant_set, self._require_predictor(),
                 self.cluster.device_spec, self.cluster.devices, self.batch,
-                rt=rt, sa=sa, comm=self.cluster.comm_model())
+                rt=rt, sa=sa, comm=self.cluster.comm_model(),
+                initial=initial)
         return self._runtime
 
     def observe(self, qps_samples) -> None:

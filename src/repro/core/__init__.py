@@ -17,6 +17,8 @@ from repro.core.comm import (GLOBAL_MEMORY, HOST_STAGED, ICI, CommModel,
 from repro.core.deployment import pack_instances, placement_summary
 from repro.core.exec import (BatchingPolicy, EdgeRoute, ExecCore, ReadyBatch,
                              StageInstance, default_allocation, edge_bytes)
+from repro.core.faults import (DeviceFailure, FaultSpec, Straggle,
+                               TransientErrors)
 from repro.core.mlmodels import (DecisionTreeRegressor, LinearRegression,
                                  RandomForestRegressor,
                                  mean_absolute_percentage_error)
@@ -37,6 +39,7 @@ __all__ = [
     "DeviceHandoff", "EdgeChannel", "HostStagedChannel", "GLOBAL_MEMORY",
     "HOST_STAGED", "ICI", "select_mechanism", "mechanism_time",
     "BatchingPolicy", "EdgeRoute", "ExecCore", "ReadyBatch", "StageInstance",
+    "DeviceFailure", "FaultSpec", "Straggle", "TransientErrors",
     "default_allocation", "edge_bytes", "pack_instances",
     "placement_summary", "DecisionTreeRegressor", "LinearRegression",
     "RandomForestRegressor", "mean_absolute_percentage_error",

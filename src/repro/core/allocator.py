@@ -58,10 +58,21 @@ from repro.core.deployment import pack_instances
 from repro.core.incremental import IncrementalEvaluator
 from repro.core.predictor import PipelinePredictor
 from repro.core.types import (QUOTA_GRID, QUOTA_STEP, Allocation, DeviceSpec,
-                              ServiceEdge, ServiceGraph, StageAlloc,
-                              TenantSet)
+                              Placement, ServiceEdge, ServiceGraph,
+                              StageAlloc, TenantSet)
 
 QUOTA_MIN = QUOTA_STEP
+
+
+def _remap_placement(alloc: Allocation, avail: List[int]) -> Allocation:
+    """Rewrite a placement solved over a dense 0..len(avail)-1 pool onto
+    the surviving physical device ids (``avail`` is sorted).  In place —
+    the allocation object is the solve's own output."""
+    if alloc.placement is not None:
+        alloc.placement = Placement(per_stage=[
+            [(avail[d], q) for d, q in placed]
+            for placed in alloc.placement.per_stage])
+    return alloc
 
 # per-move instance/quota-index deltas for the vectorized move kernel
 # (moves 4/5 rescale the quota separately, see _apply_moves)
@@ -953,15 +964,56 @@ class CamelotAllocator:
                            warm_started=bool(n_warm))
 
     # ------------------------------------------------------------------
+    # Device masking (fault recovery: solve over the surviving pool)
+    # ------------------------------------------------------------------
+
+    def _mask_avail(self, device_mask) -> Optional[List[int]]:
+        """Normalise a ``device_mask`` (iterable of AVAILABLE device ids)
+        to a sorted list, or None when it is a no-op (no mask, or the full
+        pool).  Devices are fungible in Constraints 1–5, so masking is a
+        count shrink plus a placement-id remap — every solver mode
+        (scalar, vectorized, incremental, jax, hierarchical) inherits it
+        through ``n_devices``."""
+        if device_mask is None:
+            return None
+        avail = sorted({int(d) for d in device_mask})
+        assert avail, "device_mask must leave at least one device"
+        assert 0 <= avail[0] and avail[-1] < self.n_devices, \
+            f"device_mask {avail} outside pool of {self.n_devices}"
+        if len(avail) == self.n_devices:
+            return None
+        return avail
+
+    def _solve_masked(self, avail: List[int], thunk) -> SolveResult:
+        """Run ``thunk`` (a zero-arg solve) with the pool shrunk to
+        ``len(avail)`` devices, then remap the dense placement ids
+        0..len(avail)-1 back onto the surviving physical ids."""
+        saved = self.n_devices
+        self.n_devices = len(avail)
+        try:
+            res = thunk()
+        finally:
+            self.n_devices = saved
+        if res.allocation is not None:
+            _remap_placement(res.allocation, avail)
+        return res
+
+    # ------------------------------------------------------------------
     # Public policies
     # ------------------------------------------------------------------
 
     def solve_max_load(self, batch: int,
                        warm_start: Optional[Allocation] = None,
-                       ) -> SolveResult:
+                       device_mask=None) -> SolveResult:
         """Case 1 (Eq. 1): maximise the peak supported load.
         ``warm_start`` seeds the vectorized search from a previous
-        allocation (periodic re-solves)."""
+        allocation (periodic re-solves).  ``device_mask`` restricts the
+        solve to the given available device ids (fault recovery)."""
+        avail = self._mask_avail(device_mask)
+        if avail is not None:
+            return self._solve_masked(
+                avail, lambda: CamelotAllocator.solve_max_load(
+                    self, batch, warm_start=warm_start))
         res = self._anneal(batch, self.n_devices, "max_load",
                            warm=warm_start)
         if res.feasible:
@@ -1019,7 +1071,7 @@ class CamelotAllocator:
 
     def solve_min_resource(self, batch: int, load: float,
                            warm_start: Optional[Allocation] = None,
-                           ) -> SolveResult:
+                           device_mask=None) -> SolveResult:
         """Case 2 (Eq. 2 + Eq. 3): minimise resource usage at ``load`` qps.
 
         Vectorized mode sweeps the Eq. 2 device ladder in two moves: a
@@ -1031,6 +1083,11 @@ class CamelotAllocator:
         previous allocation (diurnal re-solves revisit near-identical
         problems, so the incumbent is usually one polish away); scalar
         mode keeps the paper-faithful sequential ``y += 1`` climb."""
+        avail = self._mask_avail(device_mask)
+        if avail is not None:
+            return self._solve_masked(
+                avail, lambda: CamelotAllocator.solve_min_resource(
+                    self, batch, load, warm_start=warm_start))
         y = self.min_devices(batch, load)
         vec = self.sa.mode != "scalar"
         if vec:
@@ -1097,11 +1154,17 @@ class MultiTenantAllocator(CamelotAllocator):
 
     def solve_min_resource(self, batch: int, loads,
                            warm_start: Optional[Allocation] = None,
-                           ) -> SolveResult:
+                           device_mask=None) -> SolveResult:
         """Joint Eq. 2 + Eq. 3: ``loads`` is one required qps per tenant
         (a scalar applies to every tenant).  The solve normalises each
         node's throughput by its tenant's load, so the shared ladder and
-        annealer run with required_load=1.0."""
+        annealer run with required_load=1.0.  ``device_mask`` restricts
+        the solve to the surviving pool (fault recovery)."""
+        avail = self._mask_avail(device_mask)
+        if avail is not None:
+            return self._solve_masked(
+                avail, lambda: self.solve_min_resource(
+                    batch, loads, warm_start=warm_start))
         if np.isscalar(loads):
             loads = [float(loads)] * len(self.tenants)
         assert len(loads) == len(self.tenants), \

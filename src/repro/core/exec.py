@@ -51,7 +51,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
-from heapq import heappop, heappush
+from heapq import heapify, heappop, heappush
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple, Union
 
 from repro.core.comm import CommModel, select_mechanism
@@ -98,6 +98,7 @@ class StageInstance:
     busy_time: float = 0.0
     gen: int = 0      # placement generation — stale releases are no-ops
     tbl: Optional[tuple] = None   # fast-path (dur, bw, len) physics table
+    dead: bool = False            # device failed — never dispatch again
 
 
 @dataclass(slots=True)
@@ -185,6 +186,8 @@ class ExecCore:
         self._join_items: Dict[Tuple[int, int], List[Any]] = {}
         # exit joins: bid -> set of exits still owed
         self._exit_open: Dict[int, Set[int]] = {}
+        # fault path: batches given up on (device death / retry exhaustion)
+        self._abandoned: Set[int] = set()
 
     # ---- instances ----------------------------------------------------
 
@@ -271,6 +274,8 @@ class ExecCore:
         the join holds early arrivals), else None.  The joined batch keeps
         the first-arrival ``items`` order, so per-query ordering survives
         the join."""
+        if bid in self._abandoned:      # a sibling branch already failed
+            return None
         key = (dst, bid)
         joins = self._joins
         pending = joins.get(key)
@@ -298,6 +303,8 @@ class ExecCore:
         """Record that exit ``node`` finished batch ``bid``; True when every
         exit of the graph has — i.e. the batch's queries are end-to-end
         complete (for a chain: immediately true at the last stage)."""
+        if bid in self._abandoned:      # failed batch: never completes
+            return False
         open_exits = self._exit_open.get(bid)
         if open_exits is None:          # untracked bid (direct push_ready)
             return True
@@ -307,11 +314,55 @@ class ExecCore:
         del self._exit_open[bid]
         return True
 
+    # ---- faults --------------------------------------------------------
+
+    def kill_device(self, device: int) -> int:
+        """Mark every instance on ``device`` dead; they are pulled from the
+        dispatch pools immediately (in-flight batches on them are the
+        caller's problem — fail/retry them on release).  Returns how many
+        instances died."""
+        n_dead = 0
+        for si, insts in enumerate(self.stage_instances):
+            stage_hit = False
+            for inst in insts:
+                if inst.device == device and not inst.dead:
+                    inst.dead = True
+                    n_dead += 1
+                    stage_hit = True
+            if stage_hit and self.fast:
+                # filtering a heap of ints keeps ascending pop order, but
+                # re-heapify to restore the invariant explicitly
+                alive = [k for k in self._free[si] if not insts[k].dead]
+                heapify(alive)
+                self._free[si] = alive
+        return n_dead
+
+    def alive_instances(self, stage: int) -> int:
+        return sum(1 for i in self.stage_instances[stage] if not i.dead)
+
+    def abandon(self, bid: int) -> None:
+        """Give up on batch ``bid`` everywhere: forget its exit tracking,
+        drop held join branches, and purge queued copies, so sibling
+        branches can neither complete nor deadlock the join barrier.
+        Idempotent; safe for untracked bids."""
+        if bid in self._abandoned:
+            return
+        self._abandoned.add(bid)
+        self._exit_open.pop(bid, None)
+        for key in [k for k in self._joins if k[1] == bid]:
+            del self._joins[key]
+            self._join_items.pop(key, None)
+        for q in self.ready:
+            if any(rb.bid == bid for rb in q):
+                keep = [rb for rb in q if rb.bid != bid]
+                q.clear()
+                q.extend(keep)
+
     # ---- dispatch -----------------------------------------------------
 
     def _free_instance(self, stage: int) -> Optional[StageInstance]:
         for inst in self.stage_instances[stage]:
-            if not inst.busy:
+            if not inst.busy and not inst.dead:
                 return inst
         return None
 
@@ -354,10 +405,11 @@ class ExecCore:
         inst.busy = False
         inst.bandwidth = 0.0
         inst.busy_time += busy_for
-        # Return to the free-list only for current-generation instances:
-        # after ``reset_instances`` an in-flight release refers to the old
-        # pool, and the legacy scan never sees it either.
-        if self.fast and inst.gen == self._gen:
+        # Return to the free-list only for live, current-generation
+        # instances: after ``reset_instances`` an in-flight release refers
+        # to the old pool, and the legacy scan never sees it either; a dead
+        # instance must never re-enter the dispatch pool.
+        if self.fast and inst.gen == self._gen and not inst.dead:
             heappush(self._free[inst.stage], inst.index)
 
     # ---- per-edge communication routing -------------------------------

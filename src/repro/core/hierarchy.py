@@ -47,7 +47,7 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.core.allocator import (MultiTenantAllocator, SAConfig,
-                                  SolveResult)
+                                  SolveResult, _remap_placement)
 from repro.core.comm import CommModel
 from repro.core.predictor import PipelinePredictor
 from repro.core.types import (QUOTA_GRID, Allocation, DeviceSpec, Placement,
@@ -286,17 +286,50 @@ class HierarchicalSolver:
         self._repair(assigns, results, batch, objective, loads)
         return self._join(assigns, results, batch, objective, t_start)
 
-    def solve_max_load(self, batch: int) -> SolveResult:
+    def _masked(self, device_mask, thunk) -> Optional[SolveResult]:
+        """Shrink the pool to the surviving ids, run ``thunk``, remap the
+        joined placement onto them (same count-shrink contract as
+        ``CamelotAllocator._mask_avail`` — devices are fungible).  Pod
+        metadata stays in masked index space.  None when no-op."""
+        if device_mask is None:
+            return None
+        avail = sorted({int(d) for d in device_mask})
+        assert avail, "device_mask must leave at least one device"
+        assert 0 <= avail[0] and avail[-1] < self.n_devices
+        if len(avail) == self.n_devices:
+            return None
+        saved, saved_pods = self.n_devices, self.pods
+        self.n_devices = len(avail)
+        self.pods = replace(saved_pods,
+                            pod_size=min(saved_pods.pod_size, len(avail)))
+        try:
+            res = thunk()
+        finally:
+            self.n_devices, self.pods = saved, saved_pods
+        if res.allocation is not None:
+            _remap_placement(res.allocation, avail)
+        return res
+
+    def solve_max_load(self, batch: int, device_mask=None) -> SolveResult:
         """Joint Case 1 over pods: maximise ``min_t load_t / weight_t``
         (the pod-wise minimum of the per-pod objectives)."""
+        masked = self._masked(device_mask,
+                              lambda: self.solve_max_load(batch))
+        if masked is not None:
+            return masked
         res = self._solve(batch, "max_load", None)
         if res.feasible:
             res.load = res.objective     # predicted λ: the bracket seed
         return res
 
-    def solve_min_resource(self, batch: int, loads) -> SolveResult:
+    def solve_min_resource(self, batch: int, loads,
+                           device_mask=None) -> SolveResult:
         """Joint Case 2 over pods: minimise total quota with tenant t
         holding ``loads[t]`` qps (scalar applies to every tenant)."""
+        masked = self._masked(device_mask,
+                              lambda: self.solve_min_resource(batch, loads))
+        if masked is not None:
+            return masked
         if np.isscalar(loads):
             loads = [float(loads)] * len(self.tenants)
         assert len(loads) == len(self.tenants), \

@@ -44,6 +44,98 @@ class ReallocationEvent:
     feasible: bool
     objective: float = 0.0             # the solve's objective at this event
     warm_started: bool = False         # previous allocation seeded the solve
+    # why this re-solve happened: "load" (periodic estimate tracking),
+    # "device_failure" (health monitor masked out a dead device), or
+    # "degraded" (surviving pool could not hold every QoS target — load
+    # was shed in priority-weight order; ``shed`` names the victims)
+    reason: str = "load"
+    shed: Tuple[str, ...] = ()
+
+    def to_dict(self) -> dict:
+        return {"time": self.time, "load_estimate": self.load_estimate,
+                "provisioned_for": self.provisioned_for,
+                "total_quota": self.total_quota, "feasible": self.feasible,
+                "objective": self.objective,
+                "warm_started": self.warm_started,
+                "reason": self.reason, "shed": list(self.shed)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ReallocationEvent":
+        return cls(time=float(d["time"]),
+                   load_estimate=float(d["load_estimate"]),
+                   provisioned_for=float(d["provisioned_for"]),
+                   total_quota=float(d["total_quota"]),
+                   feasible=bool(d["feasible"]),
+                   objective=float(d.get("objective", 0.0)),
+                   warm_started=bool(d.get("warm_started", False)),
+                   reason=str(d.get("reason", "load")),
+                   shed=tuple(d.get("shed", ())))
+
+
+class HealthMonitor:
+    """Per-device liveness + straggle detection from completion feeds.
+
+    The serving planes already surface the needed signal for free: the
+    simulator's ``MultiSimResult.heartbeats`` (and a live engine's
+    completion callbacks) record the last time each device finished work.
+    ``observe`` folds those in; ``dead_devices`` flags devices whose
+    heartbeat has been silent for ``heartbeat_timeout`` seconds — one
+    control interval, so detection is within the interval that follows
+    the failure.  A straggle score per device (EWMA of the device's
+    heartbeat gap over the fleet median) flags devices slower than
+    ``straggle_factor``× their peers without declaring them dead."""
+
+    def __init__(self, devices, heartbeat_timeout: float = 1.0,
+                 ewma_alpha: float = 0.3, straggle_factor: float = 3.0):
+        self.devices = sorted(int(d) for d in devices)
+        self.heartbeat_timeout = heartbeat_timeout
+        self.ewma_alpha = ewma_alpha
+        self.straggle_factor = straggle_factor
+        self._last: dict = {}          # device -> last heartbeat time
+        self._gap: dict = {}           # device -> EWMA heartbeat gap
+        self._dead: set = set()
+
+    def observe(self, now: float, heartbeats: dict) -> None:
+        """Fold one round of completion heartbeats (device -> last
+        completion time) observed at wall/virtual time ``now``."""
+        a = self.ewma_alpha
+        for dev, t in heartbeats.items():
+            dev = int(dev)
+            prev = self._last.get(dev)
+            if prev is not None and t > prev:
+                gap = t - prev
+                old = self._gap.get(dev)
+                self._gap[dev] = gap if old is None else \
+                    (1 - a) * old + a * gap
+            if prev is None or t > prev:
+                self._last[dev] = t
+
+    def mark_dead(self, device: int) -> None:
+        self._dead.add(int(device))
+
+    def dead_devices(self, now: float) -> List[int]:
+        """Devices declared dead: marked explicitly, or seen alive once
+        and then silent past the heartbeat timeout.  A device that never
+        produced a heartbeat is unproven, not dead."""
+        out = set(self._dead)
+        for dev, t in self._last.items():
+            if now - t > self.heartbeat_timeout:
+                out.add(dev)
+        return sorted(out)
+
+    def straggle_scores(self) -> dict:
+        """Per-device EWMA heartbeat gap over the fleet median (1.0 ==
+        keeping pace; > straggle_factor == straggling)."""
+        if not self._gap:
+            return {}
+        med = float(np.median(list(self._gap.values())))
+        if med <= 0.0:
+            return {d: 1.0 for d in self._gap}
+        return {d: g / med for d, g in self._gap.items()}
+
+    def stragglers(self) -> List[int]:
+        return sorted(d for d, s in self.straggle_scores().items()
+                      if s >= self.straggle_factor)
 
 
 class CamelotRuntime:
@@ -63,7 +155,8 @@ class CamelotRuntime:
                  device: DeviceSpec, n_devices: int, batch: int,
                  rt: Optional[RuntimeConfig] = None,
                  sa: Optional[SAConfig] = None,
-                 comm: Optional[CommModel] = None):
+                 comm: Optional[CommModel] = None,
+                 initial: Optional[SolveResult] = None):
         self.pipeline = pipeline
         self.predictor = predictor
         self.device = device
@@ -78,7 +171,10 @@ class CamelotRuntime:
             else CommModel(device, global_memory_enabled=True)
         self.allocator = CamelotAllocator(pipeline, predictor, device,
                                           n_devices, comm=self.comm, sa=sa)
-        peak = self.allocator.solve_max_load(batch)
+        # crash-restart: a persisted SolveResult resumes the runtime with
+        # NO cold solve — the incumbent allocation is live immediately
+        peak = initial if initial is not None and initial.feasible \
+            else self.allocator.solve_max_load(batch)
         self.peak_result = peak
         self.peak_qps = peak.objective if peak.feasible else 0.0
         self._load_est = 0.0
@@ -133,6 +229,52 @@ class CamelotRuntime:
             objective=res.objective, warm_started=res.warm_started))
         return alloc
 
+    def on_device_failure(self, now: float, dead) -> Allocation:
+        """Out-of-band recovery re-solve with the dead device(s) masked
+        out, warm-started from the incumbent allocation (device ids in a
+        warm ``Allocation`` are never read — only ``.stages`` — so the
+        incumbent seeds the masked solve unchanged).  Falls back to the
+        surviving pool's peak allocation ("degraded") when the current
+        load target no longer fits."""
+        if np.isscalar(dead):
+            dead = [dead]
+        dd = set(getattr(self, "_dead_devices", set()))
+        dd.update(int(d) for d in dead)
+        self._dead_devices = dd
+        avail = [d for d in range(self.n_devices) if d not in dd]
+        assert avail, "no surviving devices"
+        warm = self.current if self.rt.warm_start else None
+        peak = self.allocator.solve_max_load(self.batch, warm_start=warm,
+                                             device_mask=avail)
+        self.peak_result = peak
+        self.peak_qps = peak.objective if peak.feasible else 0.0
+        target = max(self._load_est * self.rt.headroom, 1.0)
+        res = self.allocator.solve_min_resource(self.batch, load=target,
+                                                warm_start=warm,
+                                                device_mask=avail)
+        reason = "device_failure"
+        if res.feasible:
+            alloc, provisioned, feasible = res.allocation, target, True
+        elif peak.feasible:
+            # the surviving pool cannot hold the estimate: serve what the
+            # pool CAN peak at — graceful degradation, not an outage
+            reason = "degraded"
+            res = peak
+            alloc, provisioned, feasible = (peak.allocation, self.peak_qps,
+                                            False)
+        else:
+            alloc, provisioned, feasible = self.current, 0.0, False
+        self.last_result = res
+        self.current = alloc
+        if self._engine is not None and alloc.placement is not None:
+            self._engine.apply_allocation(alloc)
+        self.history.append(ReallocationEvent(
+            time=now, load_estimate=self._load_est,
+            provisioned_for=provisioned, total_quota=alloc.total_quota(),
+            feasible=feasible, objective=res.objective,
+            warm_started=res.warm_started, reason=reason))
+        return alloc
+
     # ------------------------------------------------------------------
 
     def run_trace(self, load_fn: Callable[[float], float], duration: float,
@@ -170,7 +312,8 @@ class MultiTenantRuntime:
                  device: DeviceSpec, n_devices: int, batch: int,
                  rt: Optional[RuntimeConfig] = None,
                  sa: Optional[SAConfig] = None,
-                 comm: Optional[CommModel] = None):
+                 comm: Optional[CommModel] = None,
+                 initial: Optional[SolveResult] = None):
         if not isinstance(tenants, TenantSet):
             tenants = TenantSet(tenants)
         self.tenants = tenants
@@ -184,7 +327,10 @@ class MultiTenantRuntime:
         self.allocator = MultiTenantAllocator(tenants, predictor, device,
                                               n_devices, comm=self.comm,
                                               sa=sa)
-        peak = self.allocator.solve_max_load(batch)
+        # crash-restart: a persisted SolveResult resumes the runtime with
+        # NO cold solve — the incumbent joint allocation is live at once
+        peak = initial if initial is not None and initial.feasible \
+            else self.allocator.solve_max_load(batch)
         self.peak_result = peak
         # λ: the normalized load every tenant sustains simultaneously
         self.peak_lambda = peak.objective if peak.feasible else 0.0
@@ -249,6 +395,78 @@ class MultiTenantRuntime:
             provisioned_for=provisioned,
             total_quota=alloc.total_quota(), feasible=feasible,
             objective=res.objective, warm_started=res.warm_started))
+        return alloc
+
+    def on_device_failure(self, now: float, dead) -> Allocation:
+        """Out-of-band joint recovery: mask the dead device(s) out of the
+        pool, refresh the peak capability for the survivors, and re-solve
+        min-resource for the current estimates — all warm-started from
+        the incumbent (a warm ``Allocation``'s device ids are never read,
+        only its stage vector, so it seeds the masked solve unchanged).
+
+        When the surviving pool cannot hold every tenant's target,
+        degrade gracefully IN PRIORITY-WEIGHT ORDER: the lowest-weight
+        tenant's target is shed (dropped to the 1 qps floor) first, then
+        the next, until the solve goes feasible — the event records
+        ``reason="degraded"`` and the shed tenant names.  Final fallback
+        is the surviving pool's own peak allocation."""
+        if np.isscalar(dead):
+            dead = [dead]
+        dd = set(getattr(self, "_dead_devices", set()))
+        dd.update(int(d) for d in dead)
+        self._dead_devices = dd
+        avail = [d for d in range(self.n_devices) if d not in dd]
+        assert avail, "no surviving devices"
+        warm = self.current if self.rt.warm_start else None
+        peak = self.allocator.solve_max_load(self.batch, warm_start=warm,
+                                             device_mask=avail)
+        self.peak_result = peak
+        self.peak_lambda = peak.objective if peak.feasible else 0.0
+        targets = [max(est * self.rt.headroom, 1.0)
+                   for est in self._load_est]
+        norm_target = self._normalized_estimate() * self.rt.headroom
+        res = self.allocator.solve_min_resource(self.batch, targets,
+                                                warm_start=warm,
+                                                device_mask=avail)
+        reason: str = "device_failure"
+        shed: Tuple[str, ...] = ()
+        if not res.feasible:
+            order = sorted(range(len(self.tenants.tenants)),
+                           key=lambda ti: self.tenants.tenants[ti].weight)
+            degraded = list(targets)
+            names: List[str] = []
+            for ti in order:
+                if degraded[ti] <= 1.0:
+                    continue             # already at the floor: no shed
+                degraded[ti] = 1.0
+                names.append(self.tenants.tenants[ti].name)
+                res = self.allocator.solve_min_resource(
+                    self.batch, degraded, warm_start=warm,
+                    device_mask=avail)
+                if res.feasible:
+                    break
+            if res.feasible:
+                reason, shed = "degraded", tuple(names)
+        if res.feasible:
+            alloc, provisioned, feasible = res.allocation, norm_target, True
+        elif peak.feasible:
+            reason = "degraded"
+            shed = tuple(t.name for t in self.tenants.tenants)
+            res = peak
+            alloc, provisioned, feasible = (peak.allocation,
+                                            self.peak_lambda, False)
+        else:
+            alloc, provisioned, feasible = self.current, 0.0, False
+        self.last_result = res
+        self.current = alloc
+        if self._engine is not None and alloc.placement is not None:
+            self._engine.apply_allocations(
+                self.tenants.split_allocation(alloc))
+        self.history.append(ReallocationEvent(
+            time=now, load_estimate=self._normalized_estimate(),
+            provisioned_for=provisioned, total_quota=alloc.total_quota(),
+            feasible=feasible, objective=res.objective,
+            warm_started=res.warm_started, reason=reason, shed=shed))
         return alloc
 
     # ------------------------------------------------------------------

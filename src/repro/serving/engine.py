@@ -125,6 +125,10 @@ class ServeStats:
     comm_time: float = 0.0
     compute_time: float = 0.0
     batches: int = 0
+    failed: int = 0                    # queries lost (worker exceptions
+                                       # past the retry budget, deadline
+                                       # abandonment)
+    retries: int = 0                   # worker-side retry attempts
 
     def summary(self) -> dict:
         return {
@@ -135,6 +139,8 @@ class ServeStats:
             "compute_time": self.compute_time,
             "comm_frac": self.comm_time
                          / max(self.comm_time + self.compute_time, 1e-12),
+            "failed": self.failed,
+            "retries": self.retries,
         }
 
 
@@ -160,6 +166,16 @@ class PipelineEngine:
     """Executes a service graph of stage servers over a query trace, driven
     by the shared ``ExecCore``.
 
+    Since the fault-tolerance refactor this is the ONE-TENANT DELEGATION
+    into ``MultiTenantEngine`` — the exact counterpart of
+    ``PipelineSimulator`` delegating to ``MultiTenantSimulator``: with a
+    single tenant the multi-tenant driver loop's admission, batching,
+    dispatch and completion flow are the historical single-service ones,
+    so the delegation preserves the existing contract (pinned by
+    tests/test_api.py and tests/test_serving.py).  The constructor surface
+    is unchanged; ``alloc``/``batch_size``/``swaps`` read through to the
+    inner engine's single tenant.
+
     ``graph`` gives the topology (node i is served by ``stages[i]``);
     omitted, the stages form the linear chain of the paper.
     ``allocation`` (an ``Allocation`` with a ``Placement``) decides how many
@@ -167,6 +183,8 @@ class PipelineEngine:
     omitted, a trivial 1-instance-per-node allocation is built.
     ``comm_mechanism``: "auto" routes each edge payload via the crossover
     rule; "device"/"host" pin the mechanism for A/B comparisons.
+    ``max_retries``/``retry_backoff``/``deadline`` are the fault knobs —
+    see ``MultiTenantEngine``.
     """
 
     def __init__(self, stages: Sequence, comm_mechanism: str = "auto",
@@ -174,7 +192,9 @@ class PipelineEngine:
                  batch_timeout: float = 0.2,
                  allocation: Optional[Allocation] = None,
                  comm_model: Optional[CommModel] = None,
-                 graph: Optional[ServiceGraph] = None):
+                 graph: Optional[ServiceGraph] = None,
+                 max_retries: int = 0, retry_backoff: float = 0.0,
+                 deadline: Optional[float] = None):
         assert comm_mechanism in ("auto", "device", "host")
         self.stages = list(stages)
         if graph is None:
@@ -191,15 +211,28 @@ class PipelineEngine:
             allocation = default_allocation(len(self.stages), batch_size)
         assert allocation.placement is not None, "allocation must be placed"
         assert len(allocation.stages) == len(self.stages)
-        self.alloc = allocation
-        self.batch_size = allocation.stages[0].batch
-        force = None if comm_mechanism == "auto" else comm_mechanism
-        self.channels = _EdgeChannels(graph, self.comm_model, force)
-        self._pending_alloc: Optional[Allocation] = None
-        self._alloc_lock = threading.Lock()
-        self._core: Optional[ExecCore] = None
-        self._executor: Optional[ThreadPoolExecutor] = None
-        self.swaps = 0
+        self._inner = MultiTenantEngine(
+            [self.stages], [graph], [allocation],
+            comm_mechanism=comm_mechanism, batch_timeout=batch_timeout,
+            comm_model=self.comm_model, qos_targets=[qos_target],
+            max_retries=max_retries, retry_backoff=retry_backoff,
+            deadline=deadline)
+        self.channels = self._inner.tenants[0].channels
+
+    # read-through views over the inner engine's single tenant, so the
+    # historical attribute surface (tests, benchmarks, runtimes) survives
+    # the delegation
+    @property
+    def alloc(self) -> Allocation:
+        return self._inner.tenants[0].alloc
+
+    @property
+    def batch_size(self) -> int:
+        return self._inner.tenants[0].batch_size
+
+    @property
+    def swaps(self) -> int:
+        return self._inner.swaps
 
     # ---- live re-allocation -------------------------------------------
 
@@ -210,27 +243,7 @@ class PipelineEngine:
         (e.g. a CamelotRuntime reallocating against live load)."""
         assert allocation.placement is not None, "allocation must be placed"
         assert len(allocation.stages) == len(self.stages)
-        with self._alloc_lock:
-            self._pending_alloc = allocation
-
-    def _apply_pending_alloc(self, core: ExecCore) -> None:
-        # read+clear under the lock so a swap queued by another thread in
-        # this window is never silently dropped
-        with self._alloc_lock:
-            alloc = self._pending_alloc
-            self._pending_alloc = None
-        if alloc is None:
-            return
-        self.alloc = alloc
-        self.batch_size = alloc.stages[0].batch
-        core.batching.batch_size = self.batch_size
-        core.reset_instances(alloc.placement)
-        # the executor spawns threads lazily up to _max_workers; grow the
-        # cap so a placement with MORE instances gains real concurrency
-        ex = self._executor
-        if ex is not None and hasattr(ex, "_max_workers"):
-            ex._max_workers = max(ex._max_workers, len(core.instances))
-        self.swaps += 1
+        self._inner.apply_allocations([allocation])
 
     # ---- trace replay --------------------------------------------------
 
@@ -239,104 +252,7 @@ class PipelineEngine:
         batches on size/timeout and dispatches them to free stage instances;
         each dispatch runs on a worker thread (the jitted call releases the
         GIL); wall-clock latencies are recorded."""
-        stats = ServeStats(qos=QoSTracker(self.qos_target))
-        for st in self.stages:
-            st.warmup(self.batch_size)
-        core = ExecCore(self.graph, self.alloc.placement,
-                        BatchingPolicy(self.batch_size, self.batch_timeout),
-                        comm=self.comm_model)
-        self._core = core
-        completions: queue.Queue = queue.Queue()
-        in_flight = 0
-        i, n = 0, len(queries)
-        start = time.perf_counter()
-        try:
-            with ThreadPoolExecutor(
-                    max_workers=max(len(core.instances), 1)) as ex:
-                self._executor = ex
-                while i < n or in_flight or core.has_work():
-                    now = time.perf_counter() - start
-                    self._apply_pending_alloc(core)
-                    while i < n and queries[i].arrival <= now:
-                        core.admit(queries[i], queries[i].arrival)
-                        i += 1
-                    for rb in core.form_batches(now):
-                        rb.data = self._stack([q.tokens for q in rb.items])
-                    for inst, rb in core.dispatch(now):
-                        in_flight += 1
-                        ex.submit(self._worker, inst, rb, completions)
-                    # sleep until the next event: a completion, the next
-                    # arrival, or the oldest pending query's batch deadline
-                    wake = []
-                    if i < n:
-                        wake.append(queries[i].arrival)
-                    deadline = core.batch_deadline()
-                    if deadline is not None:
-                        wake.append(deadline)
-                    timeout = (min(wake) - now) if wake else 0.05
-                    timeout = min(max(timeout, 0.0005), 0.05)
-                    try:
-                        ev = completions.get(timeout=timeout)
-                    except queue.Empty:
-                        continue
-                    while True:
-                        in_flight -= 1
-                        self._complete(ev, core, stats, start)
-                        try:
-                            ev = completions.get_nowait()
-                        except queue.Empty:
-                            break
-        finally:
-            self._core = None
-            self._executor = None
-        return stats
-
-    # ---- internals -----------------------------------------------------
-
-    def _stack(self, tokens_list: List[np.ndarray]) -> jax.Array:
-        return _stack_tokens(tokens_list, self.batch_size)
-
-    def _worker(self, inst: StageInstance, rb: ReadyBatch,
-                completions: queue.Queue) -> None:
-        t0 = time.perf_counter()
-        try:
-            out, err = self.stages[inst.stage].process(rb.data), None
-        except BaseException as e:      # re-raised on the driver thread
-            out, err = None, e
-        completions.put((inst, rb, out, time.perf_counter() - t0, err))
-
-    def _fanin_data(self, node: int, inputs: Dict[int, jax.Array]) -> jax.Array:
-        return _fanin_combine(self.stages, node, inputs)
-
-    def _complete(self, ev, core: ExecCore, stats: ServeStats,
-                  start: float) -> None:
-        inst, rb, out, dt, err = ev
-        core.release(inst, busy_for=dt)
-        if err is not None:
-            raise err
-        stats.compute_time += dt
-        u = rb.stage
-        now = time.perf_counter() - start
-        succs = core.succs[u]
-        if succs:
-            # fan-out: one payload per out-edge, each routed by its own
-            # channel; fan-in consumers become ready once the core's join
-            # barrier has every branch
-            for v in succs:
-                same = inst.device in core.consumer_devices(v)
-                t0 = time.perf_counter()
-                handed = self.channels[(u, v)].send(out, same_device=same)
-                stats.comm_time += time.perf_counter() - t0
-                joined = core.deliver(u, v, rb.bid, rb.items, now,
-                                      data=handed)
-                if joined is not None:
-                    joined.data = self._fanin_data(v, joined.inputs)
-        elif core.complete_exit(rb.bid, u):
-            # every exit node has produced this batch: queries complete
-            for q in rb.items:
-                q.done = now
-                stats.qos.record(now - q.arrival)
-            stats.batches += 1
+        return self._inner.run_traces([queries])[0]
 
 
 def make_trace(n: int, qps: float, seq_len: int, vocab: int,
@@ -402,13 +318,30 @@ class MultiTenantEngine:
     the others, observably.  ``apply_allocations`` swaps all tenants'
     allocations between batches (``MultiTenantRuntime`` pushes the
     service-scoped slices of each joint re-solve here).
+
+    Fault knobs:
+
+    * ``max_retries`` — a worker whose stage raises retries the execution
+      in place (bounded, with ``retry_backoff × 2^attempt`` sleeps
+      between tries) before reporting failure;
+    * on a reported failure the batch is *abandoned* (failed queries in
+      ``ServeStats.failed``) and the trace DRAINS — a worker exception
+      used to strand its batch in the core's join/exit tracking and hang
+      ``run_traces`` waiting on completions that could never come;
+    * ``deadline`` — queries still waiting past this many seconds after
+      arrival are abandoned at admission (per-query deadline, counted
+      failed), so a degraded pool sheds backlog instead of serving
+      un-meetable requests.
     """
 
     def __init__(self, tenant_stages: Sequence[Sequence],
                  graphs: Sequence[ServiceGraph],
                  allocations: Sequence[Allocation],
                  comm_mechanism: str = "auto", batch_timeout: float = 0.05,
-                 comm_model: Optional[CommModel] = None):
+                 comm_model: Optional[CommModel] = None,
+                 qos_targets: Optional[Sequence[float]] = None,
+                 max_retries: int = 0, retry_backoff: float = 0.0,
+                 deadline: Optional[float] = None):
         assert comm_mechanism in ("auto", "device", "host")
         assert len(tenant_stages) == len(graphs) == len(allocations), \
             "need stages, graph and allocation per tenant"
@@ -423,7 +356,14 @@ class MultiTenantEngine:
                 stages=list(stages), graph=g, alloc=alloc,
                 channels=_EdgeChannels(g, self.comm_model, force),
                 batch_size=alloc.stages[0].batch))
+        if qos_targets is None:
+            qos_targets = [g.qos_target for g in graphs]
+        assert len(qos_targets) == len(self.tenants)
+        self.qos_targets = [float(t) for t in qos_targets]
         self.batch_timeout = batch_timeout
+        self.max_retries = int(max_retries)
+        self.retry_backoff = float(retry_backoff)
+        self.deadline = deadline
         self._pending_allocs: Optional[List[Allocation]] = None
         self._alloc_lock = threading.Lock()
         self.swaps = 0
@@ -464,8 +404,7 @@ class MultiTenantEngine:
         """Replay one query trace per tenant on the shared pool; returns
         one ``ServeStats`` per tenant (each against its own QoS target)."""
         assert len(traces) == len(self.tenants)
-        stats = [ServeStats(qos=QoSTracker(t.graph.qos_target))
-                 for t in self.tenants]
+        stats = [ServeStats(qos=QoSTracker(qt)) for qt in self.qos_targets]
         for t in self.tenants:
             for st in t.stages:
                 st.warmup(t.batch_size)
@@ -490,6 +429,15 @@ class MultiTenantEngine:
                             tr[idx[ti]].arrival <= now:
                         core.admit(tr[idx[ti]], tr[idx[ti]].arrival)
                         idx[ti] += 1
+                    if self.deadline is not None and core.pending:
+                        # per-query deadline: abandon arrivals that have
+                        # already waited past it instead of batching them
+                        keep = [(a, q) for a, q in core.pending
+                                if now - a <= self.deadline]
+                        n_drop = len(core.pending) - len(keep)
+                        if n_drop:
+                            core.pending = keep
+                            stats[ti].failed += n_drop
                     for rb in core.form_batches(now):
                         rb.data = _stack_tokens(
                             [q.tokens for q in rb.items], t.batch_size)
@@ -521,22 +469,44 @@ class MultiTenantEngine:
 
     def _worker(self, ti: int, inst: StageInstance, rb: ReadyBatch,
                 completions: queue.Queue) -> None:
+        """One stage execution with bounded in-place retry.  The worker
+        owns its thread, so backoff sleeps here never stall the driver;
+        every outcome — success or exhausted retries — is reported through
+        the completions queue so the driver can always drain."""
         t0 = time.perf_counter()
-        try:
-            out = self.tenants[ti].stages[inst.stage].process(rb.data)
-            err = None
-        except BaseException as e:      # re-raised on the driver thread
-            out, err = None, e
-        completions.put((ti, inst, rb, out, time.perf_counter() - t0, err))
+        out = err = None
+        attempts = 0
+        for attempt in range(self.max_retries + 1):
+            attempts = attempt + 1
+            try:
+                out, err = \
+                    self.tenants[ti].stages[inst.stage].process(rb.data), \
+                    None
+                break
+            except BaseException as e:
+                out, err = None, e
+                if attempt < self.max_retries and self.retry_backoff > 0.0:
+                    time.sleep(self.retry_backoff * (2 ** attempt))
+        completions.put((ti, inst, rb, out, time.perf_counter() - t0, err,
+                         attempts))
 
     def _complete(self, ev, cores: List[ExecCore],
                   stats: List[ServeStats], start: float) -> None:
-        ti, inst, rb, out, dt, err = ev
+        ti, inst, rb, out, dt, err, attempts = ev
         t = self.tenants[ti]
         core = cores[ti]
         core.release(inst, busy_for=dt)
+        stats[ti].retries += attempts - 1
         if err is not None:
-            raise err
+            # the retry budget is spent: record the batch as failed and
+            # abandon it so its join/exit bookkeeping cannot strand
+            # ``has_work`` — the pre-fix behaviour re-raised here, leaking
+            # the batch and deadlocking the driver loop on in_flight work
+            # that no longer existed
+            if rb.bid not in core._abandoned:
+                stats[ti].failed += len(rb.items)
+                core.abandon(rb.bid)
+            return
         stats[ti].compute_time += dt
         u = rb.stage
         now = time.perf_counter() - start

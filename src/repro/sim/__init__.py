@@ -1,3 +1,5 @@
+from repro.core.faults import (DeviceFailure, FaultSpec, Straggle,
+                               TransientErrors)
 from repro.sim.baselines import (camelot, camelot_min_resource, camelot_nc,
                                  even_allocation, laius, standalone)
 from repro.sim.simulator import (MIN_COMPLETED, MultiSimResult,
@@ -11,6 +13,7 @@ from repro.sim.workloads import (artifact_pipelines, artifact_stage,
                                  synthetic_tenant_set, workload_specs)
 
 __all__ = [
+    "DeviceFailure", "FaultSpec", "Straggle", "TransientErrors",
     "camelot", "camelot_min_resource", "camelot_nc", "even_allocation",
     "laius", "standalone", "MIN_COMPLETED", "MultiSimResult",
     "MultiTenantSimulator", "PipelineSimulator", "SimConfig", "SimResult",

@@ -57,6 +57,7 @@ import numpy as np
 
 from repro.core.comm import HOST_STAGED, CommModel, mechanism_time
 from repro.core.exec import BatchingPolicy, ExecCore
+from repro.core.faults import FaultSpec
 from repro.core.predictor import tabulate_physics
 from repro.core.qos import QoSTracker, abort_threshold
 from repro.core.types import (Allocation, DeviceSpec, ServiceGraph, Tenant,
@@ -69,7 +70,7 @@ MIN_COMPLETED = 5
 
 # event kinds (ints: cheaper records than strings; ordering is by (t, seq)
 # so the code never compares kinds)
-_ARRIVE, _TIMEOUT, _COMPUTE, _TRANSFER = 0, 1, 2, 3
+_ARRIVE, _TIMEOUT, _COMPUTE, _TRANSFER, _FAULT = 0, 1, 2, 3, 4
 
 
 @dataclass
@@ -109,6 +110,8 @@ class SimResult:
     events: int = 0                    # discrete events processed (the
                                        # benchmark's sim-steps/sec basis)
     aborted: bool = False              # stopped early by abort_over_target
+    failed: int = 0                    # queries lost to injected faults
+    retries: int = 0                   # fault-path re-dispatches
 
     @property
     def normalized_p99(self) -> float:
@@ -149,13 +152,14 @@ class PipelineSimulator:
 
     # ------------------------------------------------------------------
 
-    def run(self, offered_qps: float,
-            cfg: Optional[SimConfig] = None) -> SimResult:
+    def run(self, offered_qps: float, cfg: Optional[SimConfig] = None,
+            faults: Optional[FaultSpec] = None) -> SimResult:
         if self._multi is None:
             self._multi = MultiTenantSimulator(
                 TenantSet([Tenant(self.pipeline.name, self.pipeline)]),
                 [self.alloc], self.device, self.comm, sim=self.cfg)
-        return self._multi.run([offered_qps], cfg=cfg).per_tenant[0]
+        return self._multi.run([offered_qps], cfg=cfg,
+                               faults=faults).per_tenant[0]
 
 
 @dataclass
@@ -169,6 +173,9 @@ class MultiSimResult:
     device_busy: Dict[int, float] = field(default_factory=dict)
     events: int = 0
     aborted: bool = False
+    # device -> virtual time of the last successful completion on it: the
+    # health monitor's heartbeat feed (a dead device's heartbeat freezes)
+    heartbeats: Dict[int, float] = field(default_factory=dict)
 
     def meets_qos(self, targets: List[float],
                   min_completed: int = MIN_COMPLETED) -> bool:
@@ -247,13 +254,21 @@ class MultiTenantSimulator:
             self._phys = phys
         return self._phys
 
-    def run(self, offered_qps,
-            cfg: Optional[SimConfig] = None) -> MultiSimResult:
+    def run(self, offered_qps, cfg: Optional[SimConfig] = None,
+            faults: Optional[FaultSpec] = None) -> MultiSimResult:
         """Simulate one run.  ``cfg`` overrides the construction-time
         ``SimConfig`` for this call only (the peak searchers use it to
         flip ``abort_over_target`` per probe without mutating the shared
-        simulator)."""
+        simulator).
+
+        ``faults`` injects a seeded :class:`FaultSpec` fault script —
+        device death, straggle windows, transient stage errors — as
+        first-class events.  Fault randomness draws from its OWN
+        generator (``faults.seed``), never the workload RNG, so a run
+        with ``faults=None`` or an empty spec is bit-identical to the
+        fault-free simulator on both the fast and legacy paths."""
         cfg = cfg if cfg is not None else self.cfg
+        active = faults is not None and faults.active()
         tenants = self.tenants.tenants
         nt = len(tenants)
         if np.isscalar(offered_qps):
@@ -313,19 +328,44 @@ class MultiTenantSimulator:
         # event queue drains, nothing is dropped), so each tenant's final
         # sample count is known now — the abort bound needs it up front.
         n_final = [0] * nt
+        n_arr = [0] * nt
         for ti, qps in enumerate(offered_qps):
             n_arrivals = min(int(qps * cfg.duration) + 1, cfg.max_queries)
             gaps = rng.exponential(1.0 / max(qps, 1e-9), n_arrivals)
             at = np.cumsum(gaps)
             arr = at[at < cfg.duration]
+            n_arr[ti] = int(arr.size)
             n_final[ti] = int(np.count_nonzero(arr >= cfg.warmup))
             for t in arr:
                 evq.append((t, nxt(), _ARRIVE, ti))
+        # ---- fault script (seeded separately — workload RNG untouched).
+        # Fault events are appended AFTER the arrivals so an inactive spec
+        # leaves the arrival sequence numbers, and thus pop order,
+        # unchanged.
+        straggle: Dict[int, float] = {}
+        dead_devices: set = set()
+        frng = trans = None
+        if active:
+            for f in faults.device_failures:
+                evq.append((f.time, nxt(), _FAULT, ("die", f.device, 0.0)))
+            for s in faults.straggles:
+                evq.append((s.time, nxt(), _FAULT,
+                            ("slow", s.device, s.factor)))
+                if not math.isinf(s.until):
+                    evq.append((s.until, nxt(), _FAULT,
+                                ("recover", s.device, 0.0)))
+            trans = faults.transient
+            if trans is not None and trans.rate <= 0.0:
+                trans = None
+            frng = np.random.default_rng(faults.seed)
         # bulk-seeding the queue then heapifying is O(n); pop order is
         # identical to n pushes (same tuples, total order unique by seq)
         heapq.heapify(evq)
         abort_at: Optional[List[Optional[int]]] = None
-        if cfg.abort_over_target:
+        # the abort bound assumes every arrival is eventually recorded,
+        # which faults break (failed queries never complete) — keep the
+        # exact-counting contract by disabling it under an active script
+        if cfg.abort_over_target and not active:
             abort_at = [abort_threshold(n_final[ti], qos[ti].percentile)
                         if qos[ti].window is None
                         or n_final[ti] <= qos[ti].window else None
@@ -367,6 +407,10 @@ class MultiTenantSimulator:
                 if factor < 1.0:
                     factor = 1.0
                 dur = base * factor * (1 + abs(noise_next()))
+                if straggle:
+                    sf = straggle.get(dev)
+                    if sf is not None:
+                        dur *= sf
                 device_busy[dev] = device_busy.get(dev, 0.0) + dur
                 bt = busy_t[ti]
                 bt[dev] = bt.get(dev, 0.0) + dur
@@ -383,6 +427,10 @@ class MultiTenantSimulator:
             factor = max(1.0, total_bw / mem_bandwidth)
             dur = base * factor * (1 + abs(rng.normal(
                 0, cfg.contention_noise)))
+            if straggle:
+                sf = straggle.get(inst.device)
+                if sf is not None:
+                    dur *= sf
             device_busy[inst.device] = device_busy.get(inst.device, 0.0) + dur
             bt = busy_t[ti]
             bt[inst.device] = bt.get(inst.device, 0.0) + dur
@@ -406,6 +454,9 @@ class MultiTenantSimulator:
         events_t = [0] * nt
         aborted = False
         warmup = cfg.warmup
+        heartbeats: Dict[int, float] = {}
+        n_retries = [0] * nt
+        retries_left: Dict[Tuple[int, int, int], int] = {}
         while evq:
             now, _, kind, payload = heappop(evq)
             events += 1
@@ -434,6 +485,26 @@ class MultiTenantSimulator:
                         dev_bw.get(inst.device, 0.0) - inst.bandwidth
                 core.release(inst, dur)
                 u = rb.stage
+                if active:
+                    if rb.bid in core._abandoned:
+                        dispatch(ti, u, now)     # batch already given up on
+                        continue
+                    if inst.dead or (trans is not None
+                                     and trans.start <= now < trans.until
+                                     and frng.random() < trans.rate):
+                        # this execution failed: retry on a surviving
+                        # instance (bounded per (batch, stage)) or abandon
+                        key = (ti, rb.bid, u)
+                        left = retries_left.get(key, faults.max_retries)
+                        if left > 0 and core.alive_instances(u) > 0:
+                            retries_left[key] = left - 1
+                            n_retries[ti] += 1
+                            core.ready[u].append(rb)
+                        else:
+                            core.abandon(rb.bid)
+                        dispatch(ti, u, now)
+                        continue
+                heartbeats[inst.device] = now
                 succs = core.succs[u]
                 if succs:
                     count = len(rb.items)
@@ -489,8 +560,24 @@ class MultiTenantSimulator:
                         0, host_streams.get(from_dev, 0) - 1)
                 if cores[ti].deliver(src, dst, bid, items, now) is not None:
                     dispatch(ti, dst, now)
+            elif kind == _FAULT:
+                action, dev, factor = payload
+                if action == "die":
+                    dead_devices.add(dev)
+                    straggle.pop(dev, None)
+                    for core in cores:
+                        core.kill_device(dev)
+                elif action == "slow":
+                    if dev not in dead_devices:
+                        straggle[dev] = factor
+                else:                              # "recover" from straggle
+                    straggle.pop(dev, None)
 
         horizon = max(cfg.duration - cfg.warmup, 1e-9)
+        # under a fault script, whatever arrived but never completed was
+        # lost to the faults (abandoned batches, starved queues)
+        failed = [n_arr[ti] - completed[ti] if active else 0
+                  for ti in range(nt)]
         per_tenant = [SimResult(
             p99=qos[ti].tail_latency(),
             mean_latency=qos[ti].mean(),
@@ -500,9 +587,12 @@ class MultiTenantSimulator:
             qos=qos[ti],
             device_busy=busy_t[ti],
             events=events_t[ti],
-            aborted=aborted) for ti in range(nt)]
+            aborted=aborted,
+            failed=failed[ti],
+            retries=n_retries[ti]) for ti in range(nt)]
         return MultiSimResult(per_tenant=per_tenant, device_busy=device_busy,
-                              events=events, aborted=aborted)
+                              events=events, aborted=aborted,
+                              heartbeats=heartbeats)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,503 @@
+"""Fault-tolerant serving plane: seeded failure injection, no-fault
+bit-parity, health-monitored detection, masked re-solve with weight-order
+degradation, engine-level retry/deadline/deadlock robustness, and
+crash-restart recovery with no cold solve."""
+import math
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # degrade to deterministic example sweeps
+    from _hypothesis_fallback import given, settings, st
+
+from repro.camelot import ClusterSpec, MultiServiceSession, SAConfig
+from repro.core import (RTX_2080TI, BatchingPolicy, CamelotAllocator,
+                        DeviceFailure, ExecCore, FaultSpec,
+                        MultiTenantAllocator, PipelinePredictor, Straggle,
+                        TransientErrors, default_allocation)
+from repro.core.allocator import _remap_placement
+from repro.core.hierarchy import HierarchicalSolver
+from repro.core.runtime import (HealthMonitor, MultiTenantRuntime,
+                                ReallocationEvent, RuntimeConfig)
+from repro.core.types import (Allocation, Placement, StageAlloc, Tenant,
+                              TenantSet)
+from repro.serving import MultiTenantEngine, PipelineEngine, Query
+from repro.sim import MultiTenantSimulator, SimConfig
+from repro.sim.workloads import camelot_suite, dag_suite
+
+SA = SAConfig(iterations=400, seed=0)
+SIM = SimConfig(duration=3.0, warmup=0.5, seed=0)
+
+
+# --------------------------------------------------------------------------
+# FaultSpec round-trip + activity predicate
+# --------------------------------------------------------------------------
+
+def test_faultspec_roundtrip():
+    fs = FaultSpec(
+        device_failures=(DeviceFailure(time=1.5, device=2),),
+        straggles=(Straggle(time=0.5, device=1, factor=4.0, until=2.0),
+                   Straggle(time=1.0, device=0)),       # open-ended
+        transient=TransientErrors(rate=0.1, start=0.5, until=2.5),
+        seed=7, max_retries=3)
+    back = FaultSpec.from_dict(fs.to_dict())
+    assert back == fs
+    assert math.isinf(back.straggles[1].until)
+
+
+def test_faultspec_active_predicate():
+    assert not FaultSpec().active()
+    assert not FaultSpec(transient=TransientErrors(rate=0.0)).active()
+    assert FaultSpec(device_failures=(DeviceFailure(1.0, 0),)).active()
+    assert FaultSpec(straggles=(Straggle(1.0, 0),)).active()
+    assert FaultSpec(transient=TransientErrors(rate=0.2)).active()
+
+
+# --------------------------------------------------------------------------
+# simulator fault injection (shared joint scenario)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def joint():
+    """chain+diamond on 3 shared devices: solved once, simulated many."""
+    sess = MultiServiceSession(
+        [Tenant("img-to-img", camelot_suite()["img-to-img"]),
+         Tenant("diamond", dag_suite()["diamond"])],
+        ClusterSpec(devices=3), batch=8, name="fault-fixture")
+    res = sess.solve(policy="max-peak", sa=SA)
+    assert res.feasible
+    loads = [0.3 * res.objective * w for w in sess.weights]
+    return sess, res, loads
+
+
+def _fingerprint(result):
+    return [(r.p99, r.mean_latency, r.completed, r.failed, r.retries)
+            for r in result.per_tenant]
+
+
+@pytest.mark.parametrize("fast", [True, False])
+def test_nofault_bit_parity(joint, fast):
+    """faults=None, an inactive FaultSpec, and the pre-fault call shape
+    are bit-identical — on the fast AND the legacy plane."""
+    sess, res, loads = joint
+    cfg = SimConfig(duration=SIM.duration, warmup=SIM.warmup, fast=fast)
+    base = sess.simulate(loads, sim=cfg)
+    empty = sess.simulate(loads, sim=cfg, faults=FaultSpec())
+    inert = sess.simulate(loads, sim=cfg, faults=FaultSpec(
+        transient=TransientErrors(rate=0.0), seed=99))
+    assert _fingerprint(base) == _fingerprint(empty) == _fingerprint(inert)
+    assert all(r.failed == 0 and r.retries == 0 for r in base.per_tenant)
+
+
+def test_device_death_freezes_heartbeat_and_fails_queries(joint):
+    sess, res, loads = joint
+    t_fail = 1.5
+    quota = {}
+    for placed in res.allocation.placement.per_stage:
+        for d, q in placed:
+            quota[d] = quota.get(d, 0.0) + q
+    victim = max(quota, key=quota.get)
+    r = sess.simulate(loads, sim=SIM, faults=FaultSpec(
+        device_failures=(DeviceFailure(time=t_fail, device=victim),)))
+    # the victim's heartbeat froze at (or before) the kill; survivors kept
+    # completing work until the end of the timeline
+    assert r.heartbeats[victim] <= t_fail
+    assert any(t > t_fail for d, t in r.heartbeats.items() if d != victim)
+    assert sum(t.failed for t in r.per_tenant) > 0
+
+
+def test_straggle_inflates_then_recovers(joint):
+    sess, res, loads = joint
+    base = sess.simulate(loads, sim=SIM)
+    slow = sess.simulate(loads, sim=SIM, faults=FaultSpec(
+        straggles=(Straggle(time=0.0, device=0, factor=8.0),)))
+    eased = sess.simulate(loads, sim=SIM, faults=FaultSpec(
+        straggles=(Straggle(time=0.0, device=0, factor=8.0, until=0.2),)))
+    assert max(r.p99 for r in slow.per_tenant) > \
+        max(r.p99 for r in base.per_tenant)
+    # a straggle that lifts early hurts less than one that never does
+    assert max(r.p99 for r in eased.per_tenant) < \
+        max(r.p99 for r in slow.per_tenant)
+
+
+def test_transient_errors_retry_then_fail(joint):
+    sess, res, loads = joint
+    trans = TransientErrors(rate=0.25, start=0.5, until=2.0)
+    with_retry = sess.simulate(loads, sim=SIM, faults=FaultSpec(
+        transient=trans, seed=3, max_retries=2))
+    no_retry = sess.simulate(loads, sim=SIM, faults=FaultSpec(
+        transient=trans, seed=3, max_retries=0))
+    assert sum(r.retries for r in with_retry.per_tenant) > 0
+    assert sum(r.failed for r in no_retry.per_tenant) > \
+        sum(r.failed for r in with_retry.per_tenant)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000), victim=st.integers(0, 2),
+       t_fail=st.floats(0.5, 2.5))
+def test_chaos_seeded_faults_are_deterministic(joint, seed, victim, t_fail):
+    """Same seeded FaultSpec ⇒ bit-identical outcome, run to run: the
+    fault plane draws from its OWN rng stream and the recovery story is
+    replayable."""
+    sess, res, loads = joint
+    fs = FaultSpec(
+        device_failures=(DeviceFailure(time=t_fail, device=victim),),
+        straggles=(Straggle(time=0.25, device=(victim + 1) % 3,
+                            factor=3.0, until=1.0),),
+        transient=TransientErrors(rate=0.1, start=0.5), seed=seed,
+        max_retries=1)
+    a = sess.simulate(loads, sim=SIM, faults=fs)
+    b = sess.simulate(loads, sim=SIM,
+                      faults=FaultSpec.from_dict(fs.to_dict()))
+    assert _fingerprint(a) == _fingerprint(b)
+    assert a.heartbeats == b.heartbeats
+
+
+# --------------------------------------------------------------------------
+# device_mask: all four solver modes place only on survivors
+# --------------------------------------------------------------------------
+
+def _placed_devices(res):
+    return {d for placed in res.allocation.placement.per_stage
+            for d, _ in placed}
+
+
+@pytest.mark.parametrize("mode", ["vectorized", "incremental", "jax"])
+def test_device_mask_modes_single_tenant(mode):
+    graph = camelot_suite()["img-to-img"]
+    pred = PipelinePredictor.from_graph(graph, RTX_2080TI, seed=0)
+    sa = SAConfig(iterations=400, seed=0, mode=mode)
+    alloc = CamelotAllocator(graph, pred, RTX_2080TI, 3, sa=sa)
+    masked = alloc.solve_max_load(8, device_mask=[0, 2])
+    assert masked.feasible and _placed_devices(masked) <= {0, 2}
+    # the masked solve IS the shrunk-pool solve, remapped onto survivors
+    small = CamelotAllocator(graph, pred, RTX_2080TI, 2, sa=sa)\
+        .solve_max_load(8)
+    assert masked.objective == small.objective
+    assert masked.allocation.placement.per_stage == \
+        _remap_placement(small.allocation, [0, 2]).placement.per_stage
+    # masking restores the pool afterwards
+    assert alloc.n_devices == 3
+    full = alloc.solve_max_load(8)
+    assert _placed_devices(full) <= {0, 1, 2}
+
+
+def test_device_mask_joint_and_hierarchical(joint):
+    sess, res, loads = joint
+    pred = sess._require_predictor()
+    joint_alloc = MultiTenantAllocator(
+        sess.tenant_set, pred, sess.cluster.device_spec, 3,
+        comm=sess.cluster.comm_model(), sa=SA)
+    masked = joint_alloc.solve_max_load(8, device_mask=[1, 2])
+    assert masked.feasible and _placed_devices(masked) <= {1, 2}
+    tgt = [0.3 * res.objective] * 2
+    mres = joint_alloc.solve_min_resource(8, tgt, device_mask=[1, 2])
+    assert mres.feasible and _placed_devices(mres) <= {1, 2}
+    hier = HierarchicalSolver(sess.tenant_set, pred,
+                              sess.cluster.device_spec, 3,
+                              comm=sess.cluster.comm_model(), sa=SA)
+    hmasked = hier.solve_max_load(8, device_mask=[1, 2])
+    assert hmasked.feasible and _placed_devices(hmasked) <= {1, 2}
+    assert hier.n_devices == 3                    # pool restored
+
+
+# --------------------------------------------------------------------------
+# degradation sheds strictly in priority-weight order
+# --------------------------------------------------------------------------
+
+def _stub_runtime(weights, feasible_after_sheds):
+    """A MultiTenantRuntime wired to a stub allocator whose min-resource
+    solve goes feasible only once ``feasible_after_sheds`` targets have
+    been floored — isolates the degradation loop from the SA solver."""
+    g = camelot_suite()["img-to-img"]
+    tenants = TenantSet([Tenant(f"t{i}", g, weight=w)
+                         for i, w in enumerate(weights)])
+    alloc = Allocation(stages=[StageAlloc(1, 0.5, 8)],
+                      placement=Placement(per_stage=[[(0, 0.5)]]))
+
+    class _Stub:
+        def __init__(self):
+            self.min_calls = []
+
+        def solve_max_load(self, batch, warm_start=None, device_mask=None):
+            return types.SimpleNamespace(
+                feasible=True, objective=100.0, allocation=alloc,
+                warm_started=warm_start is not None, solve_time=0.0)
+
+        def solve_min_resource(self, batch, targets, warm_start=None,
+                               device_mask=None):
+            self.min_calls.append(list(targets))
+            ok = sum(1 for t in targets if t <= 1.0) >= feasible_after_sheds
+            return types.SimpleNamespace(
+                feasible=ok, objective=-1.0 if ok else 0.0,
+                allocation=alloc, warm_started=warm_start is not None,
+                solve_time=0.0)
+
+    rt = MultiTenantRuntime.__new__(MultiTenantRuntime)
+    rt.tenants = tenants
+    rt.rt = RuntimeConfig(ewma_alpha=1.0, headroom=1.0)
+    rt.n_devices = 3
+    rt.batch = 8
+    rt.allocator = _Stub()
+    rt.peak_result = rt.allocator.solve_max_load(8)
+    rt.peak_lambda = 100.0
+    rt._load_est = [50.0] * len(weights)
+    rt.current = alloc
+    rt.last_result = rt.peak_result
+    rt.history = []
+    rt._engine = None
+    return rt
+
+
+def test_degradation_sheds_in_weight_order():
+    rt = _stub_runtime(weights=[1.0, 0.25, 0.5], feasible_after_sheds=2)
+    rt.on_device_failure(5.0, [2])
+    ev = rt.history[-1]
+    assert ev.reason == "degraded"
+    # lowest weight first (t1 w=0.25, then t2 w=0.5); t0 survives
+    assert ev.shed == ("t1", "t2")
+    floored = [[i for i, t in enumerate(c) if t <= 1.0]
+               for c in rt.allocator.min_calls]
+    assert floored == [[], [1], [1, 2]]           # strictly one at a time
+
+
+def test_no_shed_when_masked_solve_fits():
+    rt = _stub_runtime(weights=[1.0, 0.25], feasible_after_sheds=0)
+    rt.on_device_failure(5.0, [2])
+    ev = rt.history[-1]
+    assert ev.reason == "device_failure" and ev.shed == ()
+    assert ev.feasible
+
+
+def test_reallocation_event_roundtrip():
+    ev = ReallocationEvent(time=3.0, load_estimate=50.0,
+                           provisioned_for=55.0, total_quota=1.5,
+                           feasible=True, objective=-1.5,
+                           warm_started=True, reason="degraded",
+                           shed=("a", "b"))
+    assert ReallocationEvent.from_dict(ev.to_dict()) == ev
+    # events persisted before the fault plane existed load with defaults
+    old = {"time": 1.0, "load_estimate": 2.0, "provisioned_for": 3.0,
+           "total_quota": 0.5, "feasible": True}
+    back = ReallocationEvent.from_dict(old)
+    assert back.reason == "load" and back.shed == ()
+
+
+# --------------------------------------------------------------------------
+# health monitor
+# --------------------------------------------------------------------------
+
+def test_health_monitor_detects_silent_device():
+    mon = HealthMonitor(range(3), heartbeat_timeout=0.4)
+    mon.observe(1.0, {0: 0.9, 1: 0.95, 2: 0.99})
+    assert mon.dead_devices(1.0) == []
+    # device 1 goes silent; the others keep beating
+    mon.observe(2.0, {0: 1.9, 1: 1.1, 2: 1.95})
+    assert mon.dead_devices(2.0) == [1]
+    mon.mark_dead(2)
+    assert mon.dead_devices(2.0) == [1, 2]
+    # a device never seen alive is unproven, not dead
+    assert 3 not in mon.dead_devices(2.0)
+
+
+def test_health_monitor_straggle_scores():
+    mon = HealthMonitor(range(3), heartbeat_timeout=10.0,
+                        ewma_alpha=1.0, straggle_factor=3.0)
+    for k in range(1, 6):
+        mon.observe(k * 1.0, {0: k * 0.1, 1: k * 0.1, 2: k * 0.5})
+    scores = mon.straggle_scores()
+    assert scores[2] > scores[0]
+    assert mon.stragglers() == [2]
+    assert mon.dead_devices(5.0) == []            # slow, not dead
+
+
+# --------------------------------------------------------------------------
+# exec core: kill/abandon bookkeeping
+# --------------------------------------------------------------------------
+
+def _exec_core(per_stage, batch=2, timeout=0.0):
+    return ExecCore(len(per_stage), Placement(per_stage=per_stage),
+                    BatchingPolicy(batch, timeout))
+
+
+def test_kill_device_removes_instances_from_dispatch():
+    core = _exec_core([[(0, 0.5), (1, 0.5)]], batch=1)
+    assert core.kill_device(0) == 1
+    assert core.alive_instances(0) == 1
+    for q in ("a", "b"):
+        core.admit(q, 0.0)
+    core.form_batches(0.0)
+    got = core.dispatch(0.0)
+    assert len(got) == 1 and got[0][0].device == 1
+    # releasing a dead instance never re-enters the free pool
+    dead = next(i for i in core.stage_instances[0] if i.device == 0)
+    dead.busy = True
+    core.release(dead)
+    assert all(inst.device == 1 for inst, _ in core.dispatch(0.0))
+
+
+def test_abandon_poisons_joins_and_exit():
+    core = _exec_core([[(0, 1.0)]], batch=1)
+    core.admit("a", 0.0)
+    core.form_batches(0.0)
+    [(inst, rb)] = core.dispatch(0.0)
+    core.release(inst)                            # engine order: release,
+    core.abandon(rb.bid)                          # then abandon
+    core.abandon(rb.bid)                          # idempotent
+    assert core.complete_exit(rb.bid, 0) is False
+    assert not core.has_work()
+
+
+# --------------------------------------------------------------------------
+# live engines: deadlock regression, retry, deadline, fold parity
+# --------------------------------------------------------------------------
+
+class SleepStage:
+    def __init__(self, service_time=0.02, vocab=16):
+        self.service_time = service_time
+        self.cfg = types.SimpleNamespace(vocab_size=vocab)
+        self.calls = 0
+
+    def warmup(self, batch):
+        pass
+
+    def process(self, tokens):
+        time.sleep(self.service_time)
+        self.calls += 1
+        return np.zeros((tokens.shape[0],), np.int32)
+
+
+class FailingStage(SleepStage):
+    """Raises on the first ``fail_first`` process calls, then succeeds."""
+
+    def __init__(self, fail_first=10 ** 9, **kw):
+        super().__init__(**kw)
+        self.fail_first = fail_first
+
+    def process(self, tokens):
+        self.calls += 1
+        if self.calls <= self.fail_first:
+            raise RuntimeError("injected stage fault")
+        return super().process(tokens)
+
+
+def _burst(n):
+    return [Query(qid=i, arrival=0.0, tokens=np.zeros(8, np.int32))
+            for i in range(n)]
+
+
+def _run_with_watchdog(fn, timeout=20.0):
+    """The pre-fix engine deadlocked on a raising worker; run the trace on
+    a side thread so a regression fails the test instead of hanging it."""
+    box = {}
+
+    def target():
+        box["stats"] = fn()
+
+    th = threading.Thread(target=target, daemon=True)
+    th.start()
+    th.join(timeout)
+    assert not th.is_alive(), "engine deadlocked on worker exception"
+    return box["stats"]
+
+
+def test_worker_exception_drains_not_deadlocks():
+    eng = PipelineEngine([FailingStage()],
+                         allocation=default_allocation(1, batch=2),
+                         qos_target=2.0, batch_timeout=0.005)
+    stats = _run_with_watchdog(lambda: eng.run_trace(_burst(4)))
+    assert stats.failed == 4
+    assert stats.qos.count() == 0
+
+
+def test_worker_retry_recovers():
+    stage = FailingStage(fail_first=2)
+    eng = PipelineEngine([stage], allocation=default_allocation(1, batch=4),
+                         qos_target=5.0, batch_timeout=0.005,
+                         max_retries=2, retry_backoff=0.0)
+    stats = _run_with_watchdog(lambda: eng.run_trace(_burst(4)))
+    assert stats.failed == 0
+    assert stats.retries >= 2
+    assert stats.qos.count() == 4
+
+
+def test_deadline_abandons_stale_queries():
+    eng = PipelineEngine([SleepStage()],
+                         allocation=default_allocation(1, batch=4),
+                         qos_target=5.0, batch_timeout=0.5, deadline=0.05)
+    stage = eng.stages[0]
+    # 2 queries never fill the 4-batch; the 0.5 s batch timeout sits far
+    # past the 50 ms deadline, so both are abandoned before dispatch
+    stats = _run_with_watchdog(lambda: eng.run_trace(_burst(2)))
+    assert stats.failed == 2
+    assert stats.qos.count() == 0 and stage.calls == 0
+
+
+def test_pipeline_engine_is_one_tenant_delegation():
+    """Satellite: PipelineEngine is the one-tenant face of
+    MultiTenantEngine — same driver loop, shared state, same contract."""
+    eng = PipelineEngine([SleepStage()],
+                         allocation=default_allocation(1, batch=2),
+                         qos_target=2.0, batch_timeout=0.005)
+    assert isinstance(eng._inner, MultiTenantEngine)
+    assert eng.alloc is eng._inner.tenants[0].alloc
+    assert eng.channels is eng._inner.tenants[0].channels
+    stats = eng.run_trace(_burst(6))
+    assert stats.qos.count() == 6 and stats.batches == 3
+    two = Allocation(stages=[StageAlloc(2, 0.5, 2)],
+                     placement=Placement(per_stage=[[(0, 0.5), (0, 0.5)]]))
+    eng.apply_allocation(two)
+    stats2 = eng.run_trace(_burst(4))
+    assert stats2.qos.count() == 4
+    assert eng.swaps == 1
+    assert len(eng.alloc.placement.per_stage[0]) == 2
+
+
+# --------------------------------------------------------------------------
+# crash-restart: resume from persistence with NO cold solve
+# --------------------------------------------------------------------------
+
+def test_kill_and_restart_resumes_without_cold_solve(joint, tmp_path,
+                                                     monkeypatch):
+    sess, res, loads = joint
+    path = str(tmp_path / "sess.json")
+    sess.save(path)
+
+    back = MultiServiceSession.load(path)         # the restarted process
+    assert back.last_result is not None and back.last_result.feasible
+
+    def _boom(self, *a, **kw):
+        raise AssertionError("cold solve after restart")
+
+    monkeypatch.setattr(MultiTenantAllocator, "solve_max_load", _boom)
+    rt = back.runtime(rt=RuntimeConfig(ewma_alpha=1.0), sa=SA, resume=True)
+    assert rt.peak_lambda == res.objective
+    assert rt.current.placement is not None
+    # the resumed incumbent simulates identically to the pre-crash one
+    monkeypatch.undo()
+    a = sess.simulate(loads, sim=SIM)
+    b = back.simulate(loads, sim=SIM)
+    assert _fingerprint(a) == _fingerprint(b)
+
+
+def test_runtime_without_resume_still_solves(joint, monkeypatch):
+    sess, res, loads = joint
+    calls = []
+    real = MultiTenantAllocator.solve_max_load
+
+    def _spy(self, *a, **kw):
+        calls.append(1)
+        return real(self, *a, **kw)
+
+    monkeypatch.setattr(MultiTenantAllocator, "solve_max_load", _spy)
+    fresh = MultiServiceSession(
+        [Tenant("img-to-img", camelot_suite()["img-to-img"]),
+         Tenant("diamond", dag_suite()["diamond"])],
+        ClusterSpec(devices=3), batch=8, name="cold")
+    fresh.profile()
+    fresh.runtime(sa=SA)                          # no resume: cold solve
+    assert calls
