@@ -19,6 +19,8 @@ sweep; default runs everything (matches the paper's evaluation section).
   multitenant — joint cross-service allocation vs static partitions
   fault  — seeded device death: no-recovery baseline vs health-monitored
            masked re-solve (time-to-recover, restored QoS verdicts)
+  lifecycle — tenant churn control plane: admission safety, certified
+           denials, warm-vs-cold admission, priority-ordered preemption
   sim    — measurement plane: tabulated physics + O(1) dispatch +
            QoS early-abort + seeded lattice peak search vs legacy
            (bit-identical verdicts pinned)
@@ -32,10 +34,10 @@ import time
 
 from benchmarks import (bench_alloc, bench_artifact, bench_comm, bench_dag,
                         bench_diurnal, bench_fault, bench_fig19,
-                        bench_kernels, bench_min_resource, bench_multitenant,
-                        bench_overhead, bench_pcie, bench_peak_load,
-                        bench_predictor, bench_roofline, bench_sim_scale,
-                        bench_solver_scale, bench_specs)
+                        bench_kernels, bench_lifecycle, bench_min_resource,
+                        bench_multitenant, bench_overhead, bench_pcie,
+                        bench_peak_load, bench_predictor, bench_roofline,
+                        bench_sim_scale, bench_solver_scale, bench_specs)
 from benchmarks.common import emit
 
 MODULES = {
@@ -52,6 +54,7 @@ MODULES = {
     "alloc": bench_alloc,
     "multitenant": bench_multitenant,
     "fault": bench_fault,
+    "lifecycle": bench_lifecycle,
     "sim": bench_sim_scale,
     "scale": bench_solver_scale,
     "specs": bench_specs,

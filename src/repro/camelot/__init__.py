@@ -22,6 +22,8 @@ from repro.camelot.policies import (BaselinePolicy, MaxPeakPolicy,
                                     get_policy, register_policy)
 from repro.camelot.session import CamelotSession, MultiServiceSession
 from repro.core.allocator import SAConfig, SolveResult
+from repro.core.lifecycle import (AdmissionDecision, AdmissionQuote,
+                                  LifecycleEvent, LifecycleManager)
 
 __all__ = [
     "KNOWN_DEVICES", "ClusterSpec", "LoadSpec", "MultiServiceSpec",
@@ -29,4 +31,6 @@ __all__ = [
     "MaxPeakPolicy", "MinResourcePolicy", "Policy", "UnknownPolicyError",
     "available_policies", "get_policy", "register_policy", "CamelotSession",
     "MultiServiceSession", "SAConfig", "SolveResult",
+    "AdmissionDecision", "AdmissionQuote", "LifecycleEvent",
+    "LifecycleManager",
 ]

@@ -31,6 +31,7 @@ from repro.camelot.specs import (ClusterSpec, LoadSpec, MultiServiceSpec,
 from repro.core.allocator import (CamelotAllocator, MultiTenantAllocator,
                                   SAConfig, SolveResult)
 from repro.core.faults import FaultSpec
+from repro.core.lifecycle import AdmissionDecision, LifecycleManager
 from repro.core.predictor import (DEFAULT_BATCHES, PipelinePredictor,
                                   ProfileSample, StagePredictor,
                                   TabulatedStagePredictor)
@@ -350,6 +351,8 @@ class MultiServiceSession:
         self._allocator: Optional[MultiTenantAllocator] = None
         self._runtime: Optional[MultiTenantRuntime] = None
         self._stages = None             # per-tenant live servers (serve())
+        self._lifecycle: Optional[LifecycleManager] = None
+        self._lifecycle_events: List[dict] = []   # restored by load()
 
     @staticmethod
     def _lift(services, name: str) -> MultiServiceSpec:
@@ -364,12 +367,17 @@ class MultiServiceSession:
                 continue
             if isinstance(item, Tenant):
                 # core Tenant (e.g. straight from multitenant_suite):
-                # weight and required_load must survive the lift
+                # weight, required_load and the lifecycle knobs must
+                # survive the lift
                 tenants.append(TenantSpec(
                     ServiceSpec.from_graph(item.graph),
                     QoSSpec(load=LoadSpec(qps=item.required_load)
                             if item.required_load is not None else None),
-                    weight=item.weight))
+                    weight=item.weight,
+                    priority=item.priority,
+                    quota_floor=item.quota_floor,
+                    quota_cap=item.quota_cap,
+                    utility=item.utility))
                 continue
             if isinstance(item, tuple):
                 svc, qos = item
@@ -765,6 +773,124 @@ class MultiServiceSession:
     def attach_engine(self, engine) -> None:
         self.runtime().attach_engine(engine)
 
+    # ---- 5b. tenant lifecycle control plane ----------------------------
+
+    def lifecycle(self, rt: Optional[RuntimeConfig] = None, sa=None,
+                  resume: bool = False) -> LifecycleManager:
+        """The tenant lifecycle control plane (``core.lifecycle``):
+        admission with certified denial quotes, priority preemption and
+        spec mutation over this session's tenants.  Built once; the
+        ``admit``/``evict``/``scale_tenant``/``retarget_qos`` wrappers
+        below keep the session's specs, tenant set, predictor and
+        runtime in lock-step with it."""
+        if self._lifecycle is None:
+            initial = self.last_result if resume and \
+                self.last_result is not None and \
+                self.last_result.feasible else None
+            if sa is None and self.solver is not None:
+                sa = self.solver.sa_config()
+            self._lifecycle = LifecycleManager(
+                self.tenant_set, self._require_predictor(),
+                self.cluster.device_spec, self.cluster.devices, self.batch,
+                rt=rt, sa=sa, comm=self.cluster.comm_model(),
+                initial=initial, profile_seed=self.seed)
+            if self._lifecycle_events:
+                self._lifecycle.restore_events(self._lifecycle_events)
+            self._runtime = self._lifecycle.runtime
+        return self._lifecycle
+
+    def _sync_from_lifecycle(self) -> None:
+        """Pull the manager's post-operation state into the session: the
+        tenant set and predictor (the union namespace may have changed),
+        the live runtime, and the allocator cache (now stale)."""
+        mgr = self._lifecycle
+        self.tenant_set = mgr.tenants
+        self.predictor = mgr.predictor
+        self._allocator = None
+        self._runtime = mgr.runtime
+
+    def _record_joint(self, res: Optional[SolveResult]) -> None:
+        if res is not None and res.feasible:
+            res.comm = self.cluster.comm_model()
+            self.last_result = res
+            self.results.append(res)
+
+    def admit(self, service, now: float = 0.0, **kw) -> AdmissionDecision:
+        """Admission-controlled tenant arrival.  ``service`` takes any
+        form ``MultiServiceSession(services=[...])`` accepts (TenantSpec,
+        core Tenant, (service, qos) pair, ServiceGraph, spec dict).
+        Extra keywords reach ``LifecycleManager.admit`` (``warm``,
+        ``quote``, ``quote_kinds``, ``stage_predictor``).  On admission
+        the session's spec/tenant set/runtime all advance; on denial the
+        returned decision carries the certified quotes."""
+        spec_t = service if isinstance(service, TenantSpec) else \
+            self._lift([service], self.spec.name).tenants[0]
+        decision = self.lifecycle().admit(now, spec_t.build(), **kw)
+        if decision.admitted:
+            self.spec = MultiServiceSpec(self.spec.name,
+                                         self.spec.tenants + (spec_t,))
+            self._sync_from_lifecycle()
+            self._record_joint(decision.result)
+        return decision
+
+    def evict(self, name: str, now: float = 0.0) -> SolveResult:
+        """Remove tenant ``name`` and re-solve the survivors (warm from
+        their own slices of the incumbent joint allocation)."""
+        res = self.lifecycle().remove(now, name)
+        self.spec = MultiServiceSpec(
+            self.spec.name,
+            tuple(t for t in self.spec.tenants if t.name != name))
+        self._sync_from_lifecycle()
+        self._record_joint(res)
+        return res
+
+    def scale_tenant(self, name: str,
+                     required_load: Optional[float] = None,
+                     weight: Optional[float] = None,
+                     now: float = 0.0) -> SolveResult:
+        """Change a tenant's demand and/or weight; the spec mutation
+        commits only when the warm re-solve is feasible."""
+        res = self.lifecycle().scale_tenant(now, name,
+                                            required_load=required_load,
+                                            weight=weight)
+        if res.feasible:
+            new = []
+            for t in self.spec.tenants:
+                if t.name == name:
+                    qos = t.qos
+                    if required_load is not None:
+                        load = LoadSpec(qps=float(required_load)) \
+                            if qos.load is None \
+                            else replace(qos.load, qps=float(required_load))
+                        qos = replace(qos, load=load)
+                    t = replace(t, qos=qos,
+                                weight=float(weight)
+                                if weight is not None else t.weight)
+                new.append(t)
+            self.spec = MultiServiceSpec(self.spec.name, tuple(new))
+            self._sync_from_lifecycle()
+            self._record_joint(res)
+        return res
+
+    def retarget_qos(self, name: str, qos_target: float,
+                     now: float = 0.0) -> SolveResult:
+        """Change a tenant's end-to-end latency target; commits only on a
+        feasible warm re-solve."""
+        res = self.lifecycle().retarget_qos(now, name, qos_target)
+        if res.feasible:
+            self.spec = MultiServiceSpec(self.spec.name, tuple(
+                replace(t, qos=replace(t.qos,
+                                       latency_target=float(qos_target)))
+                if t.name == name else t for t in self.spec.tenants))
+            self._sync_from_lifecycle()
+            self._record_joint(res)
+        return res
+
+    def preempt(self, now: float = 0.0, targets=None) -> Allocation:
+        """Load-spike preemption: shed low tiers in strict ascending
+        ``(priority, weight)`` order until the pool holds the rest."""
+        return self.lifecycle().preempt(now, targets=targets)
+
     # ---- 6. persistence -------------------------------------------------
 
     def save(self, path: str) -> None:
@@ -780,6 +906,9 @@ class MultiServiceSession:
             if self.solver is not None else None,
             "result": self.last_result.to_dict()
             if self.last_result is not None else None,
+            "lifecycle": self._lifecycle.events_to_dict()
+            if self._lifecycle is not None else
+            (self._lifecycle_events or None),
         }
         tmp = f"{path}.tmp"
         with open(tmp, "w") as f:
@@ -804,6 +933,8 @@ class MultiServiceSession:
                                         comm=sess.cluster.comm_model())
             sess.last_result = res
             sess.results.append(res)
+        if doc.get("lifecycle"):
+            sess._lifecycle_events = [dict(e) for e in doc["lifecycle"]]
         return sess
 
 

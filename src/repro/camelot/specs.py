@@ -27,9 +27,10 @@ from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 from repro.core.comm import CommModel
 from repro.core.qos import QoSTracker
-from repro.core.types import (QUOTA_STEP, RTX_2080TI, TPU_V5E_DEV, V100,
-                              DeviceSpec, MicroserviceProfile, Pipeline,
-                              ServiceEdge, ServiceGraph, Tenant)
+from repro.core.types import (QUOTA_STEP, RTX_2080TI, TPU_V5E_DEV,
+                              UTILITY_FNS, V100, DeviceSpec,
+                              MicroserviceProfile, Pipeline, ServiceEdge,
+                              ServiceGraph, Tenant)
 
 #: devices addressable by name in ``ClusterSpec.from_dict``
 KNOWN_DEVICES: Dict[str, DeviceSpec] = {
@@ -359,14 +360,36 @@ class TenantSpec:
     maximises the worst ``supported_load / weight`` across tenants —
     weights express that one tenant needs proportionally more capacity);
     the tenant's required load for joint min-resource solves comes from
-    ``qos.load``."""
+    ``qos.load``.
+
+    Lifecycle / isolation knobs (data mirrors of the executable
+    ``Tenant`` fields; all default to the pre-lifecycle behaviour):
+    ``priority`` is the preemption tier (lower sheds first),
+    ``quota_floor``/``quota_cap`` bound the tenant's total compute quota
+    as hard solver constraints, and ``utility`` picks the joint max-peak
+    objective curve (``linear`` | ``log`` | ``sqrt``)."""
     service: ServiceSpec
     qos: QoSSpec = QoSSpec()
     weight: float = 1.0
+    priority: int = 0
+    quota_floor: float = 0.0
+    quota_cap: Optional[float] = None
+    utility: str = "linear"
 
     def __post_init__(self):
         if self.weight <= 0:
             raise ValueError(f"tenant weight must be > 0, got {self.weight}")
+        if self.quota_floor < 0:
+            raise ValueError(f"quota_floor must be >= 0, got "
+                             f"{self.quota_floor}")
+        if self.quota_cap is not None and \
+                self.quota_cap < max(self.quota_floor, QUOTA_STEP):
+            raise ValueError(
+                f"quota_cap={self.quota_cap} is below max(quota_floor="
+                f"{self.quota_floor}, one lattice step {QUOTA_STEP})")
+        if self.utility not in UTILITY_FNS:
+            raise ValueError(f"unknown utility {self.utility!r}; "
+                             f"available: {', '.join(UTILITY_FNS)}")
 
     @property
     def name(self) -> str:
@@ -381,12 +404,20 @@ class TenantSpec:
             graph=self.service.build(self.qos),
             weight=self.weight,
             required_load=self.qos.load.qps
-            if self.qos.load is not None else None)
+            if self.qos.load is not None else None,
+            priority=self.priority,
+            quota_floor=self.quota_floor,
+            quota_cap=self.quota_cap,
+            utility=self.utility)
 
     def to_dict(self) -> dict:
         return {"service": self.service.to_dict(),
                 "qos": self.qos.to_dict(),
-                "weight": self.weight}
+                "weight": self.weight,
+                "priority": self.priority,
+                "quota_floor": self.quota_floor,
+                "quota_cap": self.quota_cap,
+                "utility": self.utility}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "TenantSpec":
@@ -395,7 +426,12 @@ class TenantSpec:
             service=ServiceSpec.from_dict(d["service"]),
             qos=QoSSpec.from_dict(qos) if isinstance(qos, Mapping)
             else (qos if qos is not None else QoSSpec()),
-            weight=float(d.get("weight", 1.0)))
+            weight=float(d.get("weight", 1.0)),
+            priority=int(d.get("priority", 0)),
+            quota_floor=float(d.get("quota_floor", 0.0)),
+            quota_cap=None if d.get("quota_cap") is None
+            else float(d["quota_cap"]),
+            utility=str(d.get("utility", "linear")))
 
 
 @dataclass(frozen=True)

@@ -19,6 +19,8 @@ from repro.core.exec import (BatchingPolicy, EdgeRoute, ExecCore, ReadyBatch,
                              StageInstance, default_allocation, edge_bytes)
 from repro.core.faults import (DeviceFailure, FaultSpec, Straggle,
                                TransientErrors)
+from repro.core.lifecycle import (AdmissionDecision, AdmissionQuote,
+                                  LifecycleEvent, LifecycleManager)
 from repro.core.mlmodels import (DecisionTreeRegressor, LinearRegression,
                                  RandomForestRegressor,
                                  mean_absolute_percentage_error)
@@ -26,8 +28,8 @@ from repro.core.predictor import (PipelinePredictor, StagePredictor,
                                   TabulatedStagePredictor, collect_samples,
                                   profile_from_engine)
 from repro.core.qos import QoSTracker
-from repro.core.types import (RTX_2080TI, TPU_V5E_DEV, V100, Allocation,
-                              CompiledTopology, DeviceSpec,
+from repro.core.types import (RTX_2080TI, TPU_V5E_DEV, UTILITY_FNS, V100,
+                              Allocation, CompiledTopology, DeviceSpec,
                               MicroserviceProfile, Pipeline, Placement,
                               PodConfig, ServiceEdge, ServiceGraph,
                               StageAlloc, Tenant, TenantSet)
@@ -35,6 +37,8 @@ from repro.core.types import (RTX_2080TI, TPU_V5E_DEV, V100, Allocation,
 __all__ = [
     "CamelotAllocator", "MultiTenantAllocator", "SAConfig", "SolveResult",
     "HierarchicalSolver", "PodConfig",
+    "AdmissionDecision", "AdmissionQuote", "LifecycleEvent",
+    "LifecycleManager", "UTILITY_FNS",
     "CommModel",
     "DeviceHandoff", "EdgeChannel", "HostStagedChannel", "GLOBAL_MEMORY",
     "HOST_STAGED", "ICI", "select_mechanism", "mechanism_time",

@@ -49,7 +49,7 @@ import math
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -59,7 +59,7 @@ from repro.core.incremental import IncrementalEvaluator
 from repro.core.predictor import PipelinePredictor
 from repro.core.types import (QUOTA_GRID, QUOTA_STEP, Allocation, DeviceSpec,
                               Placement, ServiceEdge, ServiceGraph,
-                              StageAlloc, TenantSet)
+                              StageAlloc, TenantSet, apply_utility)
 
 QUOTA_MIN = QUOTA_STEP
 
@@ -286,6 +286,13 @@ class CamelotAllocator:
         # union graph instead of once over all exits.
         self._node_norm: Optional[np.ndarray] = None
         self._qos_exit_groups: Optional[list] = None
+        # lifecycle hooks (both None => pre-lifecycle behaviour, bit for
+        # bit).  ``_iso_bounds`` = (segment starts, floors, caps) bounds
+        # each tenant's total quota as a first-class constraint;
+        # ``_util_codes`` applies per-node monotone utility curves to the
+        # normalized throughputs before the max-min objective.
+        self._iso_bounds = None
+        self._util_codes: Optional[np.ndarray] = None
 
     #: entries kept in the FFD memo (a long-running runtime re-solving for
     #: months must not grow without bound; one entry is ~100 B, so the cap
@@ -326,6 +333,12 @@ class CamelotAllocator:
         # Constraint-1: Σ N_i p_i <= C·R, refined to per-device packability
         if float(ns @ ps) > n_devices * 1.0 + 1e-9:
             return None
+        # isolation (lifecycle): per-tenant total quota within [floor, cap]
+        if self._iso_bounds is not None:
+            starts, floors, caps = self._iso_bounds
+            tq = np.add.reduceat(ns * ps, starts)
+            if (tq < floors - 1e-9).any() or (tq > caps + 1e-9).any():
+                return None
         quotas = [ps[i] for i in range(n) for _ in range(int(ns[i]))]
         if not _ffd_fits(quotas, n_devices):
             return None
@@ -366,8 +379,10 @@ class CamelotAllocator:
                     return None
                 latency = max(latency, lt)
         if self._node_norm is not None:
-            return (float((thpts / self._node_norm).min()), float(ns @ ps),
-                    latency)
+            vals = thpts / self._node_norm
+            if self._util_codes is not None:
+                vals = apply_utility(vals, self._util_codes)
+            return float(vals.min()), float(ns @ ps), latency
         return float(thpts.min()), float(ns @ ps), latency
 
     def _edge_comm_time(self, e: ServiceEdge, ps: np.ndarray,
@@ -376,6 +391,51 @@ class CamelotAllocator:
         return self.comm.transfer_time(
             self.pipeline.edge_nbytes(e.src, e.dst, batch),
             same_device=colocatable and self.comm.global_memory_enabled)
+
+    def _iso_project(self, ns: np.ndarray, ps: np.ndarray,
+                     max_inst: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Greedily project a state into the per-tenant isolation boxes.
+
+        Single-step SA moves cannot cross a wide infeasible band: a seed
+        whose tenant total sits several lattice steps outside its
+        [floor, cap] makes every one-step neighbour infeasible too, and
+        the walk never leaves the seed.  Stepping quotas (then instance
+        counts) toward the nearest box wall before annealing keeps the
+        walk inside — or one step from — the feasible region.  No-op
+        when no isolation constraint is active."""
+        if self._iso_bounds is None:
+            return ns, ps
+        starts, floors, caps = self._iso_bounds
+        ns, ps = ns.copy(), ps.copy()
+        ends = list(starts[1:]) + [len(ps)]
+        for a, b, floor, cap in zip(starts, ends, floors, caps):
+            a, b = int(a), int(b)
+            total = float(np.sum(ns[a:b] * ps[a:b]))
+            while np.isfinite(cap) and total > cap + 1e-9:
+                i = a + int(np.argmax(ps[a:b]))
+                if ps[i] > QUOTA_MIN + 1e-12:
+                    ps[i] = round(ps[i] - QUOTA_STEP, 4)
+                    total -= ns[i] * QUOTA_STEP
+                elif int(np.max(ns[a:b])) > 1:
+                    i = a + int(np.argmax(ns[a:b]))
+                    ns[i] -= 1
+                    total -= ps[i]
+                else:
+                    break            # all at (1, QUOTA_MIN): cap infeasible
+            while total < floor - 1e-9:
+                below = np.flatnonzero(ps[a:b] < 1.0 - 1e-12)
+                if below.size:
+                    i = a + int(below[np.argmin(ps[a:b][below])])
+                    step = min(QUOTA_STEP, round(1.0 - ps[i], 4))
+                    ps[i] = round(ps[i] + step, 4)
+                    total += ns[i] * step
+                else:
+                    i = a + int(np.argmin(ns[a:b]))
+                    if ns[i] >= max_inst:
+                        break        # box exceeds pool: floor infeasible
+                    ns[i] += 1
+                    total += ps[i]
+        return ns, ps
 
     # ------------------------------------------------------------------
     # Simulated annealing core (paper §VII-C description)
@@ -419,10 +479,14 @@ class CamelotAllocator:
         n = self.pipeline.n_stages
         sa = self.sa
 
-        # initial state: even allocation, one instance per stage
+        # initial state: even allocation, one instance per stage, projected
+        # into any active isolation boxes (else the walk may start stranded
+        # in an infeasible band wider than one lattice step)
         ns = np.ones(n, dtype=np.int64)
         ps = np.full(n, min(1.0, n_devices / n), dtype=np.float64)
         ps = np.clip(np.round(ps / QUOTA_STEP) * QUOTA_STEP, QUOTA_MIN, 1.0)
+        ns, ps = self._iso_project(ns, ps,
+                                   n_devices * self.device.max_instances)
 
         def score(ev):
             if ev is None:
@@ -573,12 +637,21 @@ class CamelotAllocator:
         dur = tab.dur[ar, QI]                               # (K, n)
         thpt_all = NS * tab.thpt[ar, QI]
         if self._node_norm is not None:
-            thpt_min = (thpt_all / self._node_norm).min(axis=1)
+            vals = thpt_all / self._node_norm
+            if self._util_codes is not None:
+                vals = apply_utility(vals, self._util_codes)
+            thpt_min = vals.min(axis=1)
         else:
             thpt_min = thpt_all.min(axis=1)
         quota = (NS * PS).sum(axis=1)
         # Constraint-1 (aggregate), Constraint-2, Constraint-3, Constraint-4
         feas = quota <= n_devices * 1.0 + 1e-9
+        # isolation (lifecycle): per-tenant total quota within [floor, cap]
+        if self._iso_bounds is not None:
+            starts, floors, caps = self._iso_bounds
+            tq = np.add.reduceat(NS * PS, starts, axis=1)
+            feas &= (tq >= floors - 1e-9).all(axis=1)
+            feas &= (tq <= caps + 1e-9).all(axis=1)
         feas &= NS.sum(axis=1) <= n_devices * dev.max_instances
         if self.sa.bandwidth_constraint:
             feas &= (NS * tab.bw[ar, QI]).sum(axis=1) \
@@ -1016,8 +1089,11 @@ class CamelotAllocator:
                     self, batch, warm_start=warm_start))
         res = self._anneal(batch, self.n_devices, "max_load",
                            warm=warm_start)
-        if res.feasible:
-            res.load = res.objective     # predicted peak: the bracket seed
+        if res.feasible and self._util_codes is None:
+            # predicted peak: the bracket seed.  With non-linear utility
+            # curves the objective is in utility units, not qps — leave
+            # ``load`` unset rather than seed the bracket off-scale.
+            res.load = res.objective
         return res
 
     def min_devices(self, batch: int, load: float) -> int:
@@ -1071,7 +1147,8 @@ class CamelotAllocator:
 
     def solve_min_resource(self, batch: int, load: float,
                            warm_start: Optional[Allocation] = None,
-                           device_mask=None) -> SolveResult:
+                           device_mask=None,
+                           min_rung: Optional[int] = None) -> SolveResult:
         """Case 2 (Eq. 2 + Eq. 3): minimise resource usage at ``load`` qps.
 
         Vectorized mode sweeps the Eq. 2 device ladder in two moves: a
@@ -1082,13 +1159,25 @@ class CamelotAllocator:
         re-annealing cold.  ``warm_start`` seeds the first rung with a
         previous allocation (diurnal re-solves revisit near-identical
         problems, so the incumbent is usually one polish away); scalar
-        mode keeps the paper-faithful sequential ``y += 1`` climb."""
+        mode keeps the paper-faithful sequential ``y += 1`` climb.
+        ``min_rung`` floors the ladder start — the feasible region at
+        rung y is a subset of rung y+1's, so skipping rungs never costs
+        feasibility (the lifecycle admission path uses it to skip rungs
+        below the incumbents' committed footprint)."""
         avail = self._mask_avail(device_mask)
         if avail is not None:
             return self._solve_masked(
                 avail, lambda: CamelotAllocator.solve_min_resource(
-                    self, batch, load, warm_start=warm_start))
+                    self, batch, load, warm_start=warm_start,
+                    min_rung=min_rung))
         y = self.min_devices(batch, load)
+        if self._iso_bounds is not None:
+            # every tenant's quota floor must fit inside the rung's quota
+            # budget (Σ floors <= Σ quota <= y) — a certified bound
+            floors = self._iso_bounds[1]
+            y = max(y, int(math.ceil(float(floors.sum()) - 1e-9)))
+        if min_rung is not None:
+            y = max(y, min(int(min_rung), self.n_devices))
         vec = self.sa.mode != "scalar"
         if vec:
             y = max(y, self._min_rung_bound(batch, load))
@@ -1151,31 +1240,42 @@ class MultiTenantAllocator(CamelotAllocator):
         self._qos_exit_groups = [
             (exits, t.qos_target)
             for exits, t in zip(tenants.exit_groups, tenants.tenants)]
+        # lifecycle constraints lowered from the tenant set (both None
+        # for plain tenants — the pre-lifecycle bit-parity gate)
+        self._iso_bounds = tenants.iso_bounds()
+        self._util_codes = tenants.utility_codes()
 
     def solve_min_resource(self, batch: int, loads,
                            warm_start: Optional[Allocation] = None,
-                           device_mask=None) -> SolveResult:
+                           device_mask=None,
+                           min_rung: Optional[int] = None) -> SolveResult:
         """Joint Eq. 2 + Eq. 3: ``loads`` is one required qps per tenant
         (a scalar applies to every tenant).  The solve normalises each
         node's throughput by its tenant's load, so the shared ladder and
         annealer run with required_load=1.0.  ``device_mask`` restricts
-        the solve to the surviving pool (fault recovery)."""
+        the solve to the surviving pool (fault recovery); ``min_rung``
+        floors the Eq. 2 ladder start (lifecycle admission).  Utility
+        curves only shape the max-peak objective — feasibility at fixed
+        loads is load-threshold semantics, so they are suspended here."""
         avail = self._mask_avail(device_mask)
         if avail is not None:
             return self._solve_masked(
                 avail, lambda: self.solve_min_resource(
-                    batch, loads, warm_start=warm_start))
+                    batch, loads, warm_start=warm_start, min_rung=min_rung))
         if np.isscalar(loads):
             loads = [float(loads)] * len(self.tenants)
         assert len(loads) == len(self.tenants), \
             "need one required load per tenant"
         self._node_norm = self.tenants.node_values(
             [max(float(l), 1e-9) for l in loads])
+        util_saved, self._util_codes = self._util_codes, None
         try:
             res = super().solve_min_resource(batch, 1.0,
-                                             warm_start=warm_start)
+                                             warm_start=warm_start,
+                                             min_rung=min_rung)
         finally:
             self._node_norm = self._weight_nodes
+            self._util_codes = util_saved
         if res.feasible:
             # the λ at which every tenant is offered at most its required
             # load (tenant t gets λ·weight_t ≤ loads[t]) — the sure-side

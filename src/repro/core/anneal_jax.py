@@ -169,6 +169,14 @@ def run_anneal(alloc, batch: int, n_devices: int, objective: str,
     vectorized path."""
     if not HAVE_JAX:
         return None
+    if getattr(alloc, "_util_codes", None) is not None:
+        # non-linear utility curves reshape the max-load objective; the
+        # float32 kernel would rank incumbents by the UNtransformed min
+        # and keep the wrong pool — the numpy path applies them exactly.
+        # (Isolation floor/cap bounds are different: the kernel searches
+        # optimistically without them, and the exact `_eval_many` re-eval
+        # below enforces them on every surviving incumbent.)
+        return None
     from repro.core.allocator import SolveResult           # avoid cycle
 
     t_start = time.perf_counter()

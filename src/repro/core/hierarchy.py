@@ -131,6 +131,21 @@ class HierarchicalSolver:
         for p in np.argsort(-rem, kind="stable")[:spare - int(base.sum())]:
             base[p] += 1
         counts = base + 1
+        # isolation floors (lifecycle): a pod must hold at least the sum
+        # of its tenants' quota floors in whole devices, or every per-pod
+        # solve under it is infeasible by construction — top up deficit
+        # pods from the pods with the largest surplus over their own need
+        need = np.array([max(1, int(math.ceil(sum(
+            self.tenants.tenants[ti].quota_floor for ti in groups[p])
+            - 1e-9))) for p in range(n_pods)])
+        if (counts < need).any() and need.sum() <= self.n_devices:
+            for p in np.flatnonzero(counts < need):
+                while counts[p] < need[p]:
+                    donor = int(np.argmax(counts - need))
+                    if counts[donor] - need[donor] <= 0:
+                        break
+                    counts[donor] -= 1
+                    counts[p] += 1
         starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
         return [PodAssignment(pod_id=p, device_start=int(starts[p]),
                               device_stop=int(starts[p] + counts[p]),
@@ -318,8 +333,10 @@ class HierarchicalSolver:
         if masked is not None:
             return masked
         res = self._solve(batch, "max_load", None)
-        if res.feasible:
-            res.load = res.objective     # predicted λ: the bracket seed
+        if res.feasible and self.tenants.utility_codes() is None:
+            # predicted λ: the bracket seed (utility-shaped objectives are
+            # in utility units, not qps — leave the seed unset then)
+            res.load = res.objective
         return res
 
     def solve_min_resource(self, batch: int, loads,

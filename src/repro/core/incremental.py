@@ -47,6 +47,8 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.core.types import apply_utility
+
 #: per-group entry→exit path ceiling: beyond this the padded membership
 #: tensors stop being small and the dense topo pass is the better trade
 GROUP_PATH_CAP = 64
@@ -78,6 +80,18 @@ class IncrementalEvaluator:
         norm = alloc._node_norm
         self._norm = np.ones(n) if norm is None else np.asarray(norm,
                                                                 np.float64)
+        # lifecycle hooks, mirrored from the allocator so the incremental
+        # verdicts stay identical to ``_eval_many``'s: per-tenant quota
+        # [floor, cap] bounds (delta-updated per walker) and per-node
+        # utility codes (folded into the tracked normalized throughputs —
+        # the curves are monotone, so min-tracking over transformed values
+        # is exactly the dense transformed min)
+        self._iso = alloc._iso_bounds
+        if self._iso is not None:
+            starts = self._iso[0]
+            self._tenant_of = np.searchsorted(
+                starts, np.arange(n), side="right") - 1
+        self._codes = alloc._util_codes
         # cache depth for the two "extremum over untouched" tricks: deep
         # enough that at least one cached entry survives any compound
         # mutation (or the whole set, which makes the cached value exact)
@@ -189,7 +203,11 @@ class IncrementalEvaluator:
         self._si = NS.sum(axis=1)
         self._sb = (NS * tab.bw[ar, QI]).sum(axis=1)
         self._sm = (NS * tab.foots).sum(axis=1)
+        if self._iso is not None:
+            self._tq = np.add.reduceat(NS * PS, self._iso[0], axis=1)
         self._tn = NS * tab.thpt[ar, QI] / self._norm
+        if self._codes is not None:
+            self._tn = apply_utility(self._tn, self._codes)
         S = self.S
         if S < n:
             idx = np.argpartition(self._tn, S - 1, axis=1)[:, :S]
@@ -247,9 +265,20 @@ class IncrementalEvaluator:
         mem = self._sm[base] + np.bincount(rows, di * tab.foots[cols],
                                            minlength=K)
 
+        if self._iso is not None:
+            starts, floors, caps = self._iso
+            T = len(floors)
+            dtq = np.bincount(rows * T + self._tenant_of[cols], dq,
+                              minlength=K * T).reshape(K, T)
+            tq = self._tq[base] + dtq
+        else:
+            tq = None
+
         # objective: min normalized throughput = min(cached min over
         # untouched nodes, fresh values at the touched nodes)
         tn_new = nsn * tab.thpt[cols, qin] / self._norm[cols]
+        if self._codes is not None:
+            tn_new = apply_utility(tn_new, self._codes[cols])
         sm_i = self._sm_idx[base]
         sm_v = self._sm_val[base]
         if nnz:
@@ -298,6 +327,9 @@ class IncrementalEvaluator:
             viol = self._viol[base].copy()
 
         feas = quota <= self._cap_quota
+        if tq is not None:
+            feas &= (tq >= floors - 1e-9).all(axis=1)
+            feas &= (tq <= caps + 1e-9).all(axis=1)
         feas &= inst <= self._cap_inst
         if self._bw_on:
             feas &= bwsum <= self._cap_bw
@@ -318,7 +350,7 @@ class IncrementalEvaluator:
                 feas[j] = self._alloc._ffd_cached(counts, self.n_devices)
 
         self._pending = (NS, QI, quota, inst, bwsum, mem, rows, cols,
-                         tn_new, rows_a, gs_a, newlat, viol, dh)
+                         tn_new, rows_a, gs_a, newlat, viol, dh, tq)
         return thpt_min, quota, lat, feas
 
     # ------------------------------------------------------------------
@@ -327,7 +359,7 @@ class IncrementalEvaluator:
         """Fold accepted candidate rows (from the last ``eval``) into the
         walker caches: ``walkers[i]`` takes candidate row ``picked[i]``."""
         (NS, QI, quota, inst, bwsum, mem, rows, cols, tn_new,
-         rows_a, gs_a, newlat, viol, dh) = self._pending
+         rows_a, gs_a, newlat, viol, dh, tq) = self._pending
         n = self.n
         for wi, r in zip(np.asarray(walkers).tolist(),
                          np.asarray(picked).tolist()):
@@ -337,6 +369,8 @@ class IncrementalEvaluator:
             self._si[wi] = inst[r]
             self._sb[wi] = bwsum[r]
             self._sm[wi] = mem[r]
+            if tq is not None:
+                self._tq[wi] = tq[r]
             m = rows == r
             if m.any():
                 self._tn[wi, cols[m]] = tn_new[m]

@@ -11,8 +11,9 @@ Used by benchmarks/bench_diurnal.py and tests/test_runtime.py.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Deque, List, Optional, Tuple
 
 import numpy as np
 
@@ -33,6 +34,9 @@ class RuntimeConfig:
                                        # the max-load allocation outright
     warm_start: bool = True            # seed re-solves from the previous
                                        # allocation (vectorized walkers)
+    history_limit: int = 4096          # ReallocationEvent ring size — a
+                                       # long-lived runtime must not grow
+                                       # its event log without bound
 
 
 @dataclass
@@ -45,9 +49,11 @@ class ReallocationEvent:
     objective: float = 0.0             # the solve's objective at this event
     warm_started: bool = False         # previous allocation seeded the solve
     # why this re-solve happened: "load" (periodic estimate tracking),
-    # "device_failure" (health monitor masked out a dead device), or
+    # "device_failure" (health monitor masked out a dead device),
     # "degraded" (surviving pool could not hold every QoS target — load
-    # was shed in priority-weight order; ``shed`` names the victims)
+    # was shed in priority-weight order; ``shed`` names the victims), or
+    # "preempted" (a load spike forced low-priority tenants down to the
+    # floor so higher tiers keep their targets; ``shed`` names them)
     reason: str = "load"
     shed: Tuple[str, ...] = ()
 
@@ -180,7 +186,8 @@ class CamelotRuntime:
         self._load_est = 0.0
         self.current: Allocation = peak.allocation
         self.last_result: SolveResult = peak
-        self.history: List[ReallocationEvent] = []
+        self.history: Deque[ReallocationEvent] = \
+            deque(maxlen=self.rt.history_limit)
         self._engine = None
 
     # ------------------------------------------------------------------
@@ -291,7 +298,7 @@ class CamelotRuntime:
                 self.reallocate(t)
                 next_realloc = t + self.rt.reallocate_every
             t += sample_every
-        return self.history
+        return list(self.history)
 
 
 class MultiTenantRuntime:
@@ -337,7 +344,8 @@ class MultiTenantRuntime:
         self._load_est = [0.0] * len(tenants.tenants)
         self.current: Allocation = peak.allocation
         self.last_result: SolveResult = peak
-        self.history: List[ReallocationEvent] = []
+        self.history: Deque[ReallocationEvent] = \
+            deque(maxlen=self.rt.history_limit)
         self._engine = None
 
     # ------------------------------------------------------------------
@@ -397,6 +405,15 @@ class MultiTenantRuntime:
             objective=res.objective, warm_started=res.warm_started))
         return alloc
 
+    def _shed_order(self) -> List[int]:
+        """Tenant indices in shed order: ascending priority tier first,
+        ascending weight within a tier (stable — ties keep TenantSet
+        order).  Priority 0 is the lowest tier and sheds first."""
+        ts = self.tenants.tenants
+        return sorted(range(len(ts)),
+                      key=lambda ti: (getattr(ts[ti], "priority", 0),
+                                      ts[ti].weight))
+
     def on_device_failure(self, now: float, dead) -> Allocation:
         """Out-of-band joint recovery: mask the dead device(s) out of the
         pool, refresh the peak capability for the survivors, and re-solve
@@ -431,8 +448,7 @@ class MultiTenantRuntime:
         reason: str = "device_failure"
         shed: Tuple[str, ...] = ()
         if not res.feasible:
-            order = sorted(range(len(self.tenants.tenants)),
-                           key=lambda ti: self.tenants.tenants[ti].weight)
+            order = self._shed_order()
             degraded = list(targets)
             names: List[str] = []
             for ti in order:
@@ -469,6 +485,68 @@ class MultiTenantRuntime:
             warm_started=res.warm_started, reason=reason, shed=shed))
         return alloc
 
+    def preempt(self, now: float, targets: Optional[List[float]] = None
+                ) -> Allocation:
+        """Load-spike response: keep high-priority tenants at their
+        targets by preempting low tiers.
+
+        Tries the full target vector first; while infeasible, sheds one
+        tenant at a time in strict ascending ``(priority, weight)`` order
+        (dropping its target to the 1 qps floor) and re-solves, warm-
+        started from the incumbent.  ``targets`` defaults to the current
+        per-tenant EWMA estimates × headroom.  Feasible shed solves are
+        recorded with ``reason="preempted"``; if even the all-shed vector
+        cannot be served the pool's peak allocation is kept (recorded
+        infeasible) so serving never stops."""
+        if targets is None:
+            targets = [max(est * self.rt.headroom, 1.0)
+                       for est in self._load_est]
+        targets = [max(float(t), 1.0) for t in targets]
+        assert len(targets) == len(self.tenants.tenants)
+        norm_target = max(
+            t / max(ten.weight, 1e-9)
+            for t, ten in zip(targets, self.tenants.tenants))
+        warm = self.current if self.rt.warm_start else None
+        res = self.allocator.solve_min_resource(self.batch, targets,
+                                                warm_start=warm)
+        reason: str = "load"
+        shed: Tuple[str, ...] = ()
+        if not res.feasible:
+            degraded = list(targets)
+            names: List[str] = []
+            for ti in self._shed_order():
+                if degraded[ti] <= 1.0:
+                    continue             # already at the floor: no shed
+                degraded[ti] = 1.0
+                names.append(self.tenants.tenants[ti].name)
+                res = self.allocator.solve_min_resource(
+                    self.batch, degraded, warm_start=warm)
+                if res.feasible:
+                    break
+            if res.feasible:
+                reason, shed = "preempted", tuple(names)
+        if res.feasible:
+            alloc, provisioned, feasible = res.allocation, norm_target, True
+        elif self.peak_result.feasible:
+            reason = "preempted"
+            shed = tuple(t.name for t in self.tenants.tenants)
+            res = self.peak_result
+            alloc, provisioned, feasible = (res.allocation,
+                                            self.peak_lambda, False)
+        else:
+            alloc, provisioned, feasible = self.current, 0.0, False
+        self.last_result = res
+        self.current = alloc
+        if self._engine is not None and alloc.placement is not None:
+            self._engine.apply_allocations(
+                self.tenants.split_allocation(alloc))
+        self.history.append(ReallocationEvent(
+            time=now, load_estimate=norm_target,
+            provisioned_for=provisioned, total_quota=alloc.total_quota(),
+            feasible=feasible, objective=res.objective,
+            warm_started=res.warm_started, reason=reason, shed=shed))
+        return alloc
+
     # ------------------------------------------------------------------
 
     def run_trace(self, load_fns, duration: float,
@@ -484,7 +562,7 @@ class MultiTenantRuntime:
                 self.reallocate(t)
                 next_realloc = t + self.rt.reallocate_every
             t += sample_every
-        return self.history
+        return list(self.history)
 
 
 def diurnal_load(peak_qps: float, period: float = 86_400.0,

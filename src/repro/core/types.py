@@ -474,6 +474,28 @@ class Allocation:
 # Multi-tenant layer: N services sharing ONE device pool
 # --------------------------------------------------------------------------
 
+#: Per-tenant utility curves for the joint max-peak objective.  Each maps
+#: a normalized load x >= 0 to a utility; all are monotone increasing, so
+#: the within-tenant min over nodes commutes with the transform and the
+#: joint objective becomes ``min_t u_t(load_t / weight_t)``.
+UTILITY_FNS = ("linear", "log", "sqrt")
+
+
+def apply_utility(values: np.ndarray, codes: np.ndarray) -> np.ndarray:
+    """Apply per-node utility transforms to ``values`` (last axis = union
+    node axis; ``codes[i]`` indexes ``UTILITY_FNS``).  Every curve is
+    monotone increasing on x >= 0, so min-reductions over transformed
+    values select the same argmin within a tenant."""
+    out = np.array(values, np.float64, copy=True)
+    log_m = codes == 1
+    if log_m.any():
+        out[..., log_m] = np.log1p(np.maximum(out[..., log_m], 0.0))
+    sqrt_m = codes == 2
+    if sqrt_m.any():
+        out[..., sqrt_m] = np.sqrt(np.maximum(out[..., sqrt_m], 0.0))
+    return out
+
+
 @dataclass(frozen=True)
 class Tenant:
     """One service sharing the cluster with others.
@@ -484,15 +506,68 @@ class Tenant:
     with the default 1.0 every tenant's absolute supported load counts
     equally, weights express that one tenant needs proportionally more);
     ``required_load`` is the tenant's demand for joint min-resource solves.
+
+    Lifecycle / isolation knobs (all default to the pre-lifecycle
+    behaviour):
+
+    - ``priority``: tier for preemption — under overload or device loss,
+      load is shed in ASCENDING ``(priority, weight)`` order, so priority 0
+      tenants are sacrificed before priority 1, and so on.
+    - ``quota_floor``: dedicated-capacity floor in device-fraction units —
+      the solver only accepts states where this tenant's total quota
+      (sum over its stages of instances x quota) is at least the floor.
+    - ``quota_cap``: hard cap on the same total quota (``None`` = no cap),
+      bounding how much of the shared pool one tenant may occupy.
+    - ``utility``: objective curve for joint max-peak solves — ``linear``
+      (the default weight normalisation), ``log`` (diminishing returns:
+      ``log1p``) or ``sqrt``; see ``UTILITY_FNS``.
     """
     name: str
     graph: ServiceGraph
     weight: float = 1.0
     required_load: Optional[float] = None
+    priority: int = 0
+    quota_floor: float = 0.0
+    quota_cap: Optional[float] = None
+    utility: str = "linear"
+
+    def __post_init__(self):
+        if not (self.weight > 0.0):
+            raise ValueError(
+                f"tenant {self.name!r}: weight must be > 0 (the joint "
+                f"objective divides by it), got {self.weight}")
+        if not (self.graph.qos_target > 0.0):
+            raise ValueError(
+                f"tenant {self.name!r}: QoS latency target must be > 0, "
+                f"got {self.graph.qos_target}")
+        if self.required_load is not None and not (self.required_load > 0.0):
+            raise ValueError(
+                f"tenant {self.name!r}: required_load must be > 0 when "
+                f"set, got {self.required_load}")
+        if self.quota_floor < 0.0:
+            raise ValueError(
+                f"tenant {self.name!r}: quota_floor must be >= 0, got "
+                f"{self.quota_floor}")
+        if self.quota_cap is not None and \
+                self.quota_cap < max(self.quota_floor, QUOTA_STEP):
+            raise ValueError(
+                f"tenant {self.name!r}: quota_cap={self.quota_cap} is below "
+                f"max(quota_floor={self.quota_floor}, one lattice step "
+                f"{QUOTA_STEP}) — no allocation can satisfy it")
+        if self.utility not in UTILITY_FNS:
+            raise ValueError(
+                f"tenant {self.name!r}: unknown utility {self.utility!r}; "
+                f"available: {', '.join(UTILITY_FNS)}")
 
     @property
     def qos_target(self) -> float:
         return self.graph.qos_target
+
+    @property
+    def isolated(self) -> bool:
+        """True when this tenant carries an isolation constraint the
+        solver must enforce (a floor above 0 or any cap)."""
+        return self.quota_floor > 0.0 or self.quota_cap is not None
 
 
 class TenantSet:
@@ -566,6 +641,30 @@ class TenantSet:
     @property
     def weights(self) -> List[float]:
         return [t.weight for t in self.tenants]
+
+    def iso_bounds(self):
+        """Isolation constraints lowered to the solver's array form:
+        ``(starts, floors, caps)`` where ``starts`` are the tenant node
+        offsets (the ``np.add.reduceat`` segment starts over the union
+        node axis), ``floors[t]``/``caps[t]`` bound tenant t's total quota.
+        Returns ``None`` when no tenant is isolated — the gate that keeps
+        the non-isolated solve bit-identical to the pre-lifecycle path."""
+        if not any(t.isolated for t in self.tenants):
+            return None
+        starts = np.asarray(self.offsets, np.int64)
+        floors = np.asarray([t.quota_floor for t in self.tenants],
+                            np.float64)
+        caps = np.asarray([t.quota_cap if t.quota_cap is not None
+                           else np.inf for t in self.tenants], np.float64)
+        return starts, floors, caps
+
+    def utility_codes(self) -> Optional[np.ndarray]:
+        """Per-node utility codes (indices into ``UTILITY_FNS``), or
+        ``None`` when every tenant is linear (the bit-parity gate)."""
+        if all(t.utility == "linear" for t in self.tenants):
+            return None
+        per_tenant = [UTILITY_FNS.index(t.utility) for t in self.tenants]
+        return np.asarray(per_tenant, np.int64)[self.node_tenant]
 
     # ---- allocation namespacing ---------------------------------------
 

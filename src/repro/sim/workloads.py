@@ -281,6 +281,98 @@ def synthetic_predictor(tenants, device: DeviceSpec = RTX_2080TI,
     return PipelinePredictor(stages)
 
 
+# --------------------------------------------------------------------------
+# Tenant churn (lifecycle control plane scenarios)
+# --------------------------------------------------------------------------
+
+def churn_suite(device: DeviceSpec = RTX_2080TI) -> List[Tenant]:
+    """Deterministic incumbents for lifecycle scenarios: three artifact
+    chains with tiered priorities, one of them isolated (a quota floor) —
+    the starting population every churn trace mutates."""
+    def chain(name, kinds, qos, **kw):
+        return Tenant(name, Pipeline(
+            name, [artifact_stage(k, l, device) for k, l in kinds],
+            qos_target=qos), **kw)
+    return [
+        chain("base-lo", [("p", 1), ("c", 1)], 0.25, weight=1.0,
+              required_load=40.0, priority=0),
+        chain("base-mid", [("c", 2), ("m", 1)], 0.30, weight=1.0,
+              required_load=30.0, priority=1),
+        chain("base-hi", [("p", 2), ("m", 2)], 0.35, weight=1.5,
+              required_load=30.0, priority=2, quota_floor=0.5),
+    ]
+
+
+def churn_tenant(i: int, rng: np.random.Generator,
+                 device: DeviceSpec = RTX_2080TI) -> Tenant:
+    """One seeded arrival: a 2-stage artifact chain with jittered QoS,
+    demand, priority tier and (sometimes) an isolation floor or cap.
+    Artifact stages are drawn from the fixed 9-profile pool, so churned
+    populations share profiles and predictor fits are reused."""
+    kinds = ("c", "m", "p")
+    s1 = artifact_stage(kinds[int(rng.integers(3))],
+                        int(rng.integers(1, 4)), device)
+    s2 = artifact_stage(kinds[int(rng.integers(3))],
+                        int(rng.integers(1, 4)), device)
+    name = f"churn-{i:03d}"
+    graph = Pipeline(name, [s1, s2],
+                     qos_target=float(rng.uniform(0.2, 0.4)))
+    floor = 0.0
+    cap = None
+    style = rng.uniform()
+    if style < 0.2:
+        floor = float(rng.choice([0.25, 0.5]))
+    elif style < 0.35:
+        cap = float(rng.choice([1.0, 1.5, 2.0]))
+    return Tenant(name, graph,
+                  weight=float(np.round(rng.uniform(0.5, 1.5), 3)),
+                  required_load=float(np.round(rng.uniform(15.0, 60.0), 1)),
+                  priority=int(rng.integers(0, 3)),
+                  quota_floor=floor, quota_cap=cap)
+
+
+def churn_trace(n_events: int = 12, seed: int = 0,
+                device: DeviceSpec = RTX_2080TI,
+                arrival_frac: float = 0.5) -> List[Dict]:
+    """A seeded tenant-churn script for the lifecycle control plane.
+
+    Returns a list of event dicts, one per control interval ``t = k``:
+
+      {"t", "op": "admit",  "tenant": Tenant}        — arrival
+      {"t", "op": "remove", "name": str}             — departure
+      {"t", "op": "scale",  "name": str, "factor": float}
+      {"t", "op": "spike",  "factor": float}         — pool-wide load
+                                                       spike (preemption)
+
+    ``remove``/``scale`` only name tenants the trace itself admitted (the
+    ``churn_suite`` incumbents persist), so any replayer that starts from
+    the suite can apply the script verbatim.  Same seed => same script."""
+    rng = np.random.default_rng(seed)
+    events: List[Dict] = []
+    admitted: List[str] = []
+    next_id = 0
+    for k in range(n_events):
+        r = float(rng.uniform())
+        if r < arrival_frac or not admitted:
+            tenant = churn_tenant(next_id, rng, device)
+            next_id += 1
+            admitted.append(tenant.name)
+            events.append({"t": float(k), "op": "admit", "tenant": tenant})
+        elif r < arrival_frac + 0.2:
+            name = admitted.pop(int(rng.integers(len(admitted))))
+            events.append({"t": float(k), "op": "remove", "name": name})
+        elif r < arrival_frac + 0.35:
+            name = admitted[int(rng.integers(len(admitted)))]
+            events.append({"t": float(k), "op": "scale", "name": name,
+                           "factor": float(np.round(
+                               rng.uniform(0.6, 1.6), 3))})
+        else:
+            events.append({"t": float(k), "op": "spike",
+                           "factor": float(np.round(
+                               rng.uniform(2.0, 4.0), 3))})
+    return events
+
+
 def workload_specs(device: DeviceSpec = RTX_2080TI,
                    include_artifacts: bool = False) -> Dict:
     """Every suite workload as declarative data: the chain suite plus the

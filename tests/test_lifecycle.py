@@ -1,0 +1,444 @@
+"""Tenant lifecycle control plane (core.lifecycle + facade surface).
+
+Contracts pinned here:
+
+  1. **Validation at construction**: bad Tenant/TenantSpec fields (weight,
+     QoS target, floors/caps, utility) raise clear ValueErrors.
+  2. **No-lifecycle bit-parity**: tenants with the lifecycle knobs at
+     their defaults lower to ``iso_bounds() is None`` /
+     ``utility_codes() is None`` and solve bit-identically to the
+     pre-lifecycle path (priority alone never changes a solve).
+  3. **Isolation floors/caps are solver constraints in every mode**:
+     scalar / vectorized / incremental / jax (and the hierarchical
+     decomposition) all return allocations whose per-tenant total quota
+     respects the declared bounds, and incremental stays bit-identical
+     to the dense evaluator with the constraint active.
+  4. **Admission control**: accept/deny is deterministic, every denial
+     quote is certified by an independent feasible re-solve at the
+     quoted point, and admissions preserve every incumbent verdict.
+  5. **Preemption** sheds in strict ascending ``(priority, weight)``
+     order, recorded as ``reason="preempted"``.
+  6. **Mutation API** round-trips through session save/load.
+  7. **Chaos churn** (property test over the hypothesis fallback): any
+     seeded churn script replays without breaking the invariants.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.camelot import (ClusterSpec, MultiServiceSession, QoSSpec,
+                           SAConfig, ServiceSpec, SolverSpec, TenantSpec)
+from repro.core import (HierarchicalSolver, LifecycleManager,
+                        MultiTenantAllocator, PipelinePredictor, PodConfig,
+                        RTX_2080TI)
+from repro.core.runtime import MultiTenantRuntime, RuntimeConfig
+from repro.core.types import QUOTA_STEP, Pipeline, Tenant, TenantSet
+from repro.sim.workloads import (artifact_stage, camelot_suite, churn_suite,
+                                 churn_tenant, churn_trace)
+
+SA = SAConfig(iterations=500, seed=0)
+DEV = RTX_2080TI
+
+
+def _chain(name, kinds, qos=0.3, **kw):
+    return Tenant(name, Pipeline(
+        name, [artifact_stage(k, l) for k, l in kinds], qos_target=qos),
+        **kw)
+
+
+def _pred(tenants, seed=0):
+    return PipelinePredictor.from_graph(
+        TenantSet(tenants).union_graph, DEV, seed=seed)
+
+
+# --------------------------------------------------------------------------
+# 1. validation
+# --------------------------------------------------------------------------
+
+def test_tenant_validation_errors():
+    g = Pipeline("p", [artifact_stage("c", 1)], qos_target=0.3)
+    with pytest.raises(ValueError, match="weight"):
+        Tenant("t", g, weight=0.0)
+    with pytest.raises(ValueError, match="weight"):
+        Tenant("t", g, weight=-2.0)
+    bad = Pipeline("p", [artifact_stage("c", 1)], qos_target=0.0)
+    with pytest.raises(ValueError, match="QoS"):
+        Tenant("t", bad)
+    with pytest.raises(ValueError, match="required_load"):
+        Tenant("t", g, required_load=0.0)
+    with pytest.raises(ValueError, match="quota_floor"):
+        Tenant("t", g, quota_floor=-0.1)
+    with pytest.raises(ValueError, match="quota_cap"):
+        Tenant("t", g, quota_floor=1.0, quota_cap=0.5)
+    with pytest.raises(ValueError, match="quota_cap"):
+        Tenant("t", g, quota_cap=QUOTA_STEP / 2)
+    with pytest.raises(ValueError, match="utility"):
+        Tenant("t", g, utility="cubic")
+    # valid lifecycle knobs construct fine
+    t = Tenant("t", g, priority=3, quota_floor=0.5, quota_cap=2.0,
+               utility="log")
+    assert t.isolated
+
+
+def test_tenant_spec_validation_and_roundtrip():
+    svc = ServiceSpec.from_graph(camelot_suite()["img-to-img"])
+    with pytest.raises(ValueError, match="quota_floor"):
+        TenantSpec(svc, quota_floor=-1.0)
+    with pytest.raises(ValueError, match="quota_cap"):
+        TenantSpec(svc, quota_floor=2.0, quota_cap=1.0)
+    with pytest.raises(ValueError, match="utility"):
+        TenantSpec(svc, utility="exp")
+    spec = TenantSpec(svc, QoSSpec(), weight=1.5, priority=2,
+                      quota_floor=0.5, quota_cap=2.5, utility="sqrt")
+    back = TenantSpec.from_dict(spec.to_dict())
+    assert back == spec
+    t = back.build()
+    assert (t.priority, t.quota_floor, t.quota_cap, t.utility) == \
+        (2, 0.5, 2.5, "sqrt")
+
+
+# --------------------------------------------------------------------------
+# 2. no-lifecycle bit-parity
+# --------------------------------------------------------------------------
+
+def test_plain_tenants_lower_to_no_constraints():
+    ts = TenantSet(churn_suite()[:2])     # no floors/caps on these two
+    assert ts.iso_bounds() is None
+    assert ts.utility_codes() is None
+
+
+def test_priority_alone_is_solve_invariant():
+    base = [_chain("a", [("c", 1), ("m", 1)]),
+            _chain("b", [("p", 1), ("c", 2)])]
+    tiered = [dataclasses.replace(base[0], priority=2),
+              dataclasses.replace(base[1], priority=1)]
+    pred = _pred(base)
+    r0 = MultiTenantAllocator(TenantSet(base), pred, DEV, 4,
+                              sa=SA).solve_max_load(8)
+    r1 = MultiTenantAllocator(TenantSet(tiered), pred, DEV, 4,
+                              sa=SA).solve_max_load(8)
+    assert r0.objective == r1.objective
+    assert [(s.n_instances, s.quota) for s in r0.allocation.stages] == \
+        [(s.n_instances, s.quota) for s in r1.allocation.stages]
+
+
+# --------------------------------------------------------------------------
+# 3. isolation floors/caps across every solver mode
+# --------------------------------------------------------------------------
+
+def _iso_tenants():
+    return [_chain("floor", [("c", 1), ("m", 1)], qos=0.35,
+                   quota_floor=1.0),
+            _chain("cap", [("p", 1), ("c", 1)], qos=0.35,
+                   quota_cap=0.8),
+            _chain("free", [("m", 1), ("p", 1)], qos=0.35)]
+
+
+def _tenant_quotas(ts, alloc):
+    out = []
+    for t, off in zip(ts.tenants, ts.offsets):
+        n = t.graph.n_nodes
+        out.append(sum(s.n_instances * s.quota
+                       for s in alloc.stages[off:off + n]))
+    return out
+
+
+@pytest.mark.parametrize("mode", ["scalar", "vectorized", "incremental",
+                                  "jax"])
+def test_iso_bounds_enforced_every_mode(mode):
+    tenants = _iso_tenants()
+    ts = TenantSet(tenants)
+    pred = _pred(tenants)
+    sa = dataclasses.replace(SA, mode=mode)
+    res = MultiTenantAllocator(ts, pred, DEV, 4, sa=sa).solve_max_load(8)
+    assert res.feasible
+    tq = _tenant_quotas(ts, res.allocation)
+    assert tq[0] >= 1.0 - 1e-9, tq
+    assert tq[1] <= 0.8 + 1e-9, tq
+
+
+def test_iso_bounds_incremental_bit_identical_to_dense():
+    tenants = _iso_tenants()
+    ts = TenantSet(tenants)
+    pred = _pred(tenants)
+    r_vec = MultiTenantAllocator(
+        ts, pred, DEV, 4,
+        sa=dataclasses.replace(SA, mode="vectorized")).solve_max_load(8)
+    r_inc = MultiTenantAllocator(
+        ts, pred, DEV, 4,
+        sa=dataclasses.replace(SA, mode="incremental")).solve_max_load(8)
+    assert r_vec.objective == r_inc.objective
+    assert [(s.n_instances, s.quota) for s in r_vec.allocation.stages] == \
+        [(s.n_instances, s.quota) for s in r_inc.allocation.stages]
+
+
+def test_iso_bounds_enforced_hierarchical():
+    tenants = _iso_tenants()
+    ts = TenantSet(tenants)
+    pred = _pred(tenants)
+    res = HierarchicalSolver(ts, pred, DEV, 4, sa=SA,
+                             pods=PodConfig(pod_size=2)).solve_max_load(8)
+    assert res.feasible
+    tq = _tenant_quotas(ts, res.allocation)
+    assert tq[0] >= 1.0 - 1e-9, tq
+    assert tq[1] <= 0.8 + 1e-9, tq
+
+
+def test_min_resource_ladder_respects_floor_sum():
+    # floors sum to 3 => no rung below 3 devices can be feasible
+    tenants = [_chain("f1", [("c", 1)], quota_floor=1.5),
+               _chain("f2", [("m", 1)], quota_floor=1.5)]
+    ts = TenantSet(tenants)
+    pred = _pred(tenants)
+    res = MultiTenantAllocator(ts, pred, DEV, 6, sa=SA)\
+        .solve_min_resource(8, [5.0, 5.0])
+    assert res.feasible
+    used = res.allocation.placement.devices_used()
+    assert len(used) >= 3
+    tq = _tenant_quotas(ts, res.allocation)
+    assert all(q >= 1.5 - 1e-9 for q in tq), tq
+
+
+def test_infeasible_iso_bounds_reported_infeasible():
+    # cap below what the QoS target needs => infeasible, not violated
+    tenants = [_chain("starved", [("c", 3), ("c", 3)], qos=0.05,
+                      quota_cap=QUOTA_STEP)]
+    pred = _pred(tenants)
+    res = MultiTenantAllocator(TenantSet(tenants), pred, DEV, 2,
+                               sa=SA).solve_max_load(8)
+    assert not res.feasible
+
+
+# --------------------------------------------------------------------------
+# utility curves
+# --------------------------------------------------------------------------
+
+def test_utility_curves_shape_objective():
+    base = [_chain("a", [("c", 1), ("m", 1)]),
+            _chain("b", [("p", 1), ("c", 2)])]
+    pred = _pred(base)
+    lin = MultiTenantAllocator(TenantSet(base), pred, DEV, 4,
+                               sa=SA).solve_max_load(8)
+    logs = [dataclasses.replace(t, utility="log") for t in base]
+    res = MultiTenantAllocator(TenantSet(logs), pred, DEV, 4,
+                               sa=SA).solve_max_load(8)
+    assert lin.feasible and res.feasible
+    # objective is now in utility units (log1p of the linear value)
+    assert res.objective == pytest.approx(math.log1p(lin.objective),
+                                          rel=0.05)
+    assert res.load is None             # utility units are not qps
+    assert lin.load == lin.objective
+
+
+def test_utility_suspended_for_min_resource():
+    base = [_chain("a", [("c", 1), ("m", 1)], utility="sqrt"),
+            _chain("b", [("p", 1), ("c", 2)])]
+    pred = _pred(base)
+    res = MultiTenantAllocator(TenantSet(base), pred, DEV, 4, sa=SA)\
+        .solve_min_resource(8, [20.0, 20.0])
+    assert res.feasible
+    # min-resource objective stays in quota units (negative total quota)
+    assert res.objective == pytest.approx(
+        -res.allocation.total_quota(), abs=1e-9)
+
+
+# --------------------------------------------------------------------------
+# 4. admission control
+# --------------------------------------------------------------------------
+
+def _manager(n_devices=6, sa=SA, tenants=None):
+    tenants = tenants if tenants is not None else churn_suite()
+    ts = TenantSet(tenants)
+    pred = PipelinePredictor.from_graph(ts.union_graph, DEV, seed=0)
+    return LifecycleManager(ts, pred, DEV, n_devices, 8, sa=sa)
+
+
+def test_admission_accept_preserves_incumbent_verdicts():
+    mgr = _manager()
+    before = set(mgr.tenant_names)
+    t = churn_tenant(0, np.random.default_rng(1))
+    dec = mgr.admit(1.0, t)
+    assert dec.admitted and dec.result.feasible
+    verdicts = mgr.qos_verdicts()
+    assert set(verdicts) == before | {t.name}
+    assert all(verdicts.values()), verdicts
+
+
+def test_admission_is_deterministic():
+    t = churn_tenant(0, np.random.default_rng(1))
+    d1 = _manager().admit(1.0, t)
+    d2 = _manager().admit(1.0, t)
+    assert d1.admitted == d2.admitted
+    assert d1.result.objective == d2.result.objective
+    assert [(s.n_instances, s.quota) for s in d1.result.allocation.stages] \
+        == [(s.n_instances, s.quota) for s in d2.result.allocation.stages]
+
+
+def test_denial_quotes_are_certified():
+    mgr = _manager(n_devices=4)
+    big = dataclasses.replace(churn_tenant(0, np.random.default_rng(2)),
+                              required_load=5000.0, quota_floor=0.0,
+                              quota_cap=None)
+    dec = mgr.admit(1.0, big)
+    assert not dec.admitted
+    assert dec.quotes, "denial must carry at least one quote"
+    # re-certify each quote with an INDEPENDENT cold solve at the
+    # quoted operating point
+    for q in dec.quotes:
+        assert q.certified
+        cand = list(mgr.tenants.tenants)
+        loads = mgr._required_loads(cand) + [big.required_load]
+        n_dev = mgr.n_devices
+        newcomer = big
+        if q.kind == "reduce_load":
+            loads[-1] = q.load
+        elif q.kind == "relax_qos":
+            g = big.graph
+            newcomer = dataclasses.replace(big, graph=Pipeline(
+                g.name, g.nodes, qos_target=q.qos_target))
+        else:
+            n_dev += q.extra_devices
+        cand = cand + [newcomer]
+        res = MultiTenantAllocator(
+            TenantSet(cand),
+            PipelinePredictor.from_graph(TenantSet(cand).union_graph, DEV,
+                                         seed=0),
+            DEV, n_dev, sa=SA).solve_min_resource(8, loads)
+        assert res.feasible, q
+
+
+def test_admission_warm_not_worse_than_cold():
+    t = churn_tenant(0, np.random.default_rng(1))
+    warm = _manager().admit(1.0, t, warm=True)
+    cold = _manager().admit(1.0, t, warm=False)
+    assert warm.admitted and cold.admitted
+    assert warm.result.objective >= cold.result.objective - 1e-9
+
+
+def test_duplicate_admission_rejected():
+    mgr = _manager()
+    with pytest.raises(ValueError, match="already admitted"):
+        mgr.admit(0.0, churn_suite()[0])
+
+
+# --------------------------------------------------------------------------
+# 5. preemption
+# --------------------------------------------------------------------------
+
+def test_preemption_sheds_in_strict_priority_order():
+    tenants = [_chain("gold", [("c", 1), ("m", 1)], priority=2,
+                      required_load=20.0),
+               _chain("bronze", [("p", 1), ("c", 1)], priority=0,
+                      required_load=20.0),
+               _chain("silver", [("m", 1), ("p", 1)], priority=1,
+                      required_load=20.0)]
+    mgr = _manager(n_devices=3, tenants=tenants)
+    # a spike no 3-device pool can hold for everyone
+    mgr.preempt(1.0, targets=[4000.0, 4000.0, 4000.0])
+    ev = mgr.runtime.history[-1]
+    assert ev.reason == "preempted"
+    assert list(ev.shed)[:2] == ["bronze", "silver"] or \
+        list(ev.shed) == ["bronze"], ev.shed
+    # lifecycle log mirrors the runtime event
+    assert mgr.events[-1].op == "preempt"
+    assert mgr.events[-1].detail["shed"] == list(ev.shed)
+
+
+def test_preempt_feasible_spike_sheds_nothing():
+    mgr = _manager()
+    mgr.preempt(1.0, targets=[10.0, 10.0, 10.0])
+    ev = mgr.runtime.history[-1]
+    assert ev.reason == "load" and ev.shed == ()
+
+
+def test_runtime_history_is_bounded():
+    tenants = churn_suite()[:1]
+    ts = TenantSet(tenants)
+    pred = PipelinePredictor.from_graph(ts.union_graph, DEV, seed=0)
+    rt = MultiTenantRuntime(ts, pred, DEV, 2, 8,
+                            rt=RuntimeConfig(history_limit=5), sa=SA)
+    for k in range(9):
+        rt.observe([10.0])
+        rt.reallocate(float(k))
+    assert len(rt.history) == 5
+    assert rt.history[0].time == 4.0    # oldest events evicted
+
+
+# --------------------------------------------------------------------------
+# 6. mutation API + persistence
+# --------------------------------------------------------------------------
+
+def test_mutations_roundtrip_through_save_load(tmp_path):
+    sess = MultiServiceSession(churn_suite(), ClusterSpec(devices=6),
+                               solver=SolverSpec(iterations=500, seed=0))
+    sess.profile()
+    t = churn_tenant(0, np.random.default_rng(1))
+    dec = sess.admit(t, now=1.0)
+    assert dec.admitted
+    assert sess.scale_tenant("base-lo", required_load=25.0,
+                             now=2.0).feasible
+    assert sess.retarget_qos("base-mid", 0.5, now=3.0).feasible
+    path = tmp_path / "sess.json"
+    sess.save(str(path))
+    back = MultiServiceSession.load(str(path))
+    assert [s.name for s in back.spec.tenants] == \
+        [s.name for s in sess.spec.tenants]
+    assert back.spec.tenants[0].qos.load.qps == 25.0
+    assert back.spec.tenants[1].qos.latency_target == 0.5
+    # admitted tenant's lifecycle knobs survive the round-trip
+    mine = back.spec.tenants[-1]
+    assert (mine.priority, mine.quota_floor, mine.quota_cap,
+            mine.utility) == (t.priority, t.quota_floor, t.quota_cap,
+                              t.utility)
+    # the lifecycle event log is restored verbatim
+    back.profile()
+    ops = [(e.op, e.tenant) for e in back.lifecycle().events]
+    assert ops == [("admit", t.name), ("scale", "base-lo"),
+                   ("retarget", "base-mid")]
+    # eviction shrinks the spec and the predictor namespace together
+    assert sess.evict(t.name, now=4.0).feasible
+    assert t.name not in [s.name for s in sess.spec.tenants]
+    assert len(sess.predictor.stages) == sess.tenant_set.n_nodes
+
+
+# --------------------------------------------------------------------------
+# 7. chaos churn (property test)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 6))
+def test_churn_replay_invariants(seed):
+    fast = dataclasses.replace(SA, iterations=300)
+    mgr = _manager(n_devices=6, sa=fast)
+    for ev in churn_trace(n_events=6, seed=seed):
+        if ev["op"] == "admit":
+            dec = mgr.admit(ev["t"], ev["tenant"],
+                            quote_kinds=("reduce_load",))
+            if dec.admitted:
+                assert all(mgr.qos_verdicts().values())
+            else:
+                assert all(q.certified for q in dec.quotes)
+        elif ev["op"] == "remove":
+            if ev["name"] in mgr.tenant_names:
+                mgr.remove(ev["t"], ev["name"])
+        elif ev["op"] == "scale":
+            if ev["name"] in mgr.tenant_names:
+                mgr.scale_tenant(ev["t"], ev["name"],
+                                 required_load=max(
+                                     1.0, 30.0 * ev["factor"]))
+        else:
+            spike = [ev["factor"] * 30.0] * len(mgr.tenant_names)
+            mgr.preempt(ev["t"], targets=spike)
+        # invariants after every step
+        names = mgr.tenant_names
+        assert len(set(names)) == len(names)
+        assert len(mgr.predictor.stages) == mgr.tenants.n_nodes
+        assert mgr.runtime.current is not None
+    assert len(mgr.events) > 0
