@@ -1,8 +1,16 @@
-"""Paper Fig. 11: host-staged vs global-memory communication time vs size,
-both modelled (GPU-scale) and measured live on real arrays (CPU-scale)."""
+"""Paper Fig. 11: host-staged vs global-memory communication time vs size —
+modelled (GPU-scale), measured live on real arrays (CPU-scale), and
+measured on the PROCESS transports (shared-memory hand-off vs pickle-queue,
+``repro.serving.transport``).
+
+The process sweep emits a measured crossover (``fig11/measured_crossover``)
+and writes it to ``BENCH_comm.json`` — feed it back into the comm model as
+``ClusterSpec(crossover_bytes=...)`` so mechanism selection runs on the
+observed curve instead of the modelled constant.
+"""
 from __future__ import annotations
 
-import numpy as np
+import json
 
 from benchmarks.common import Row, timeit
 from repro.core import (CommModel, DeviceHandoff, HostStagedChannel,
@@ -37,4 +45,24 @@ def run(quick: bool = False) -> list[Row]:
         rows.append((f"fig11/live/host/{n}B", t_host, "D2H+H2D copies"))
         rows.append((f"fig11/live/globalmem/{n}B", t_dev,
                      f"speedup={t_host / max(t_dev, 1e-9):.0f}x"))
+
+    # measured: the PROCESS transports the serving plane actually runs —
+    # shared-memory slot hand-off (global memory) vs pickle round trip
+    # (the queue/host-staged lower bound)
+    from repro.serving.transport import measure_transport
+    proc_sizes = [1 << s for s in (range(8, 25, 4) if quick
+                                   else range(6, 25, 2))]
+    tr = measure_transport(sizes_bytes=proc_sizes,
+                           repeats=5 if quick else 9)
+    for size, s_shm, s_q in zip(tr["sizes"], tr["shm_s"], tr["queue_s"]):
+        rows.append((f"fig11/procs/shm/{size}B", s_shm * 1e6,
+                     f"queue_us={s_q * 1e6:.1f};shm_wins={s_shm <= s_q}"))
+    rows.append(("fig11/measured_crossover", tr["crossover_bytes"],
+                 "bytes; ingest as ClusterSpec(crossover_bytes=...)"))
+    with open("BENCH_comm.json", "w") as f:
+        json.dump(tr, f, indent=2)
+    run.last_report = tr
     return rows
+
+
+run.last_report = None

@@ -19,6 +19,9 @@ sweep; default runs everything (matches the paper's evaluation section).
   multitenant — joint cross-service allocation vs static partitions
   fault  — seeded device death: no-recovery baseline vs health-monitored
            masked re-solve (time-to-recover, restored QoS verdicts)
+  serving — live backends: process workers + shm transport vs thread
+           pool (throughput ratio, QoS verdict parity, measured
+           shm-vs-queue crossover)
   lifecycle — tenant churn control plane: admission safety, certified
            denials, warm-vs-cold admission, priority-ordered preemption
   sim    — measurement plane: tabulated physics + O(1) dispatch +
@@ -37,7 +40,8 @@ from benchmarks import (bench_alloc, bench_artifact, bench_comm, bench_dag,
                         bench_kernels, bench_lifecycle, bench_min_resource,
                         bench_multitenant, bench_overhead, bench_pcie,
                         bench_peak_load, bench_predictor, bench_roofline,
-                        bench_sim_scale, bench_solver_scale, bench_specs)
+                        bench_serving, bench_sim_scale,
+                        bench_solver_scale, bench_specs)
 from benchmarks.common import emit
 
 MODULES = {
@@ -54,6 +58,7 @@ MODULES = {
     "alloc": bench_alloc,
     "multitenant": bench_multitenant,
     "fault": bench_fault,
+    "serving": bench_serving,
     "lifecycle": bench_lifecycle,
     "sim": bench_sim_scale,
     "scale": bench_solver_scale,

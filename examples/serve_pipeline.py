@@ -7,6 +7,11 @@ stage 0, built without the allocator for a self-contained demo) and runs the
 instances concurrently; each inter-stage edge routes its payload by the
 Fig. 11 crossover ("auto"), or is pinned to one mechanism for the A/B rows.
 
+``--backend processes`` runs the stages in the worker-process pool with
+shared-memory payload transport (``repro.serving.workers``) instead of
+the thread pool — the model params re-initialise inside each worker, so
+first-batch latency includes the per-process jit warmup.
+
 ``--dag`` serves a diamond ServiceGraph instead of the chain: one extractor
 model fans out to two branch models whose outputs join (fan-in barrier) at
 a fusion model — the non-chain topology of the DAG refactor, on real
@@ -52,9 +57,10 @@ def serve_dag(args) -> None:
     alloc = build_allocation(len(stages), args.instances, args.batch)
     trace = make_trace(args.queries, qps=args.qps, seq_len=16,
                        vocab=stages[0].cfg.vocab_size, seed=7)
-    eng = PipelineEngine(stages, comm_mechanism="auto", qos_target=2.0,
-                         batch_timeout=0.05, allocation=alloc, graph=graph)
-    stats = eng.run_trace(trace)
+    with PipelineEngine(stages, comm_mechanism="auto", qos_target=2.0,
+                        batch_timeout=0.05, allocation=alloc, graph=graph,
+                        backend=args.backend) as eng:
+        stats = eng.run_trace(trace)
     s = stats.summary()
     print(f"diamond: {args.arch1} -> ({args.arch2}, {args.arch1}) -> "
           f"{args.arch2} ({args.queries} queries @ {args.qps} qps)")
@@ -73,6 +79,11 @@ def main():
                     help="concurrent instances of stage 0")
     ap.add_argument("--arch1", default="qwen3-0.6b")
     ap.add_argument("--arch2", default="qwen1.5-0.5b")
+    ap.add_argument("--backend", choices=("threads", "processes"),
+                    default="threads",
+                    help="execution backend: shared thread pool or one "
+                         "worker process per placed device with "
+                         "shared-memory transport")
     ap.add_argument("--dag", action="store_true",
                     help="serve the diamond ServiceGraph instead of a chain")
     args = ap.parse_args()
@@ -92,9 +103,10 @@ def main():
     for mech in ("host", "device", "auto"):
         trace = make_trace(args.queries, qps=args.qps, seq_len=16,
                            vocab=stages[0].cfg.vocab_size, seed=7)
-        eng = PipelineEngine(stages, comm_mechanism=mech, qos_target=1.0,
-                             batch_timeout=0.05, allocation=alloc)
-        stats = eng.run_trace(trace)
+        with PipelineEngine(stages, comm_mechanism=mech, qos_target=1.0,
+                            batch_timeout=0.05, allocation=alloc,
+                            backend=args.backend) as eng:
+            stats = eng.run_trace(trace)
         s = stats.summary()
         label = {"host": "host-staged (default, Fig. 8a)",
                  "device": "global-memory hand-off (Camelot, Fig. 8b)",

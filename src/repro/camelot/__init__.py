@@ -14,8 +14,8 @@
 # The internal layers (repro.core.*, repro.sim.*, repro.serving.*) remain
 # importable and unchanged; the facade only wires them.
 from repro.camelot.specs import (KNOWN_DEVICES, ClusterSpec, LoadSpec,
-                                 MultiServiceSpec, QoSSpec, ServiceSpec,
-                                 SolverSpec, TenantSpec)
+                                 MultiServiceSpec, QoSSpec, ServeSpec,
+                                 ServiceSpec, SolverSpec, TenantSpec)
 from repro.camelot.policies import (BaselinePolicy, MaxPeakPolicy,
                                     MinResourcePolicy, Policy,
                                     UnknownPolicyError, available_policies,
@@ -27,7 +27,7 @@ from repro.core.lifecycle import (AdmissionDecision, AdmissionQuote,
 
 __all__ = [
     "KNOWN_DEVICES", "ClusterSpec", "LoadSpec", "MultiServiceSpec",
-    "QoSSpec", "ServiceSpec", "SolverSpec", "TenantSpec", "BaselinePolicy",
+    "QoSSpec", "ServeSpec", "ServiceSpec", "SolverSpec", "TenantSpec", "BaselinePolicy",
     "MaxPeakPolicy", "MinResourcePolicy", "Policy", "UnknownPolicyError",
     "available_policies", "get_policy", "register_policy", "CamelotSession",
     "MultiServiceSession", "SAConfig", "SolveResult",

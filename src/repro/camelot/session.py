@@ -26,8 +26,8 @@ from typing import List, Mapping, Optional, Sequence, Tuple
 
 from repro.camelot.policies import get_policy
 from repro.camelot.specs import (ClusterSpec, LoadSpec, MultiServiceSpec,
-                                 QoSSpec, ServiceSpec, SolverSpec,
-                                 TenantSpec)
+                                 QoSSpec, ServeSpec, ServiceSpec,
+                                 SolverSpec, TenantSpec)
 from repro.core.allocator import (CamelotAllocator, MultiTenantAllocator,
                                   SAConfig, SolveResult)
 from repro.core.faults import FaultSpec
@@ -190,14 +190,20 @@ class CamelotSession:
 
     def serve(self, stages=None, result: Optional[SolveResult] = None,
               comm_mechanism: str = "auto", batch_timeout: float = 0.05,
-              seq_len: int = 16):
+              seq_len: int = 16, backend: str = "threads",
+              spec: Optional[ServeSpec] = None):
         """A live ``PipelineEngine`` running the solved allocation on REAL
         (reduced) models.  ``stages`` maps node i to its stage server;
-        omitted, servers are built from each node's model-zoo ``arch``."""
+        omitted, servers are built from each node's model-zoo ``arch``.
+        ``backend`` picks threads (default) or the worker-process pool; a
+        full ``ServeSpec`` overrides all backend/fault knobs at once."""
         from repro.serving import ModelStageServer, PipelineEngine
         res = self._resolve_result(result)
         assert res.feasible and res.allocation.placement is not None, \
             "cannot serve an infeasible allocation"
+        if spec is None:
+            spec = ServeSpec(backend=backend, comm_mechanism=comm_mechanism,
+                             batch_timeout=batch_timeout)
         if stages is None:
             missing = [n.name for n in self.graph.nodes if n.arch is None]
             if missing:
@@ -208,12 +214,11 @@ class CamelotSession:
                       for n in self.graph.nodes]
         self._stages = list(stages)
         return PipelineEngine(
-            self._stages, comm_mechanism=comm_mechanism,
-            qos_target=self.qos_target, batch_timeout=batch_timeout,
+            self._stages, qos_target=self.qos_target,
             allocation=res.allocation,
             comm_model=res.comm if res.comm is not None
             else self.cluster.comm_model(),
-            graph=self.graph)
+            graph=self.graph, **spec.engine_kwargs())
 
     def make_trace(self, n: int, qps: float, seed: int = 0):
         """A query trace shaped for the served entry node (vocab/seq_len
@@ -704,13 +709,19 @@ class MultiServiceSession:
     def serve(self, tenant_stages=None,
               result: Optional[SolveResult] = None,
               comm_mechanism: str = "auto", batch_timeout: float = 0.05,
-              seq_len: int = 16):
+              seq_len: int = 16, backend: str = "threads",
+              spec: Optional[ServeSpec] = None):
         """A live ``MultiTenantEngine`` running the joint allocation's
-        per-tenant slices against one shared worker pool."""
+        per-tenant slices against one shared worker pool.  ``backend``
+        picks threads (default) or the worker-process pool; a full
+        ``ServeSpec`` overrides all backend/fault knobs at once."""
         from repro.serving import ModelStageServer, MultiTenantEngine
         res = self._resolve_result(result)
         assert res.feasible and res.allocation.placement is not None, \
             "cannot serve an infeasible joint allocation"
+        if spec is None:
+            spec = ServeSpec(backend=backend, comm_mechanism=comm_mechanism,
+                             batch_timeout=batch_timeout)
         if tenant_stages is None:
             tenant_stages = []
             for graph in self.graphs:
@@ -725,9 +736,8 @@ class MultiServiceSession:
         self._stages = [list(s) for s in tenant_stages]
         return MultiTenantEngine(
             self._stages, self.graphs, self.split(result=res),
-            comm_mechanism=comm_mechanism, batch_timeout=batch_timeout,
             comm_model=res.comm if res.comm is not None
-            else self.cluster.comm_model())
+            else self.cluster.comm_model(), **spec.engine_kwargs())
 
     def make_traces(self, n: int, qps_per_tenant, seed: int = 0):
         """One query trace per tenant, each shaped for that tenant's entry

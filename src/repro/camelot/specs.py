@@ -144,6 +144,10 @@ class ClusterSpec:
     ici_bandwidth: float = 50e9            # NVLink/ICI B/s
     ici_latency: float = 2e-6
     global_memory: bool = True             # §VI-B hand-off available
+    # measured Fig. 11 crossover (bytes) — e.g. the ``crossover_bytes``
+    # field of ``benchmarks/bench_comm.py --live`` output / BENCH_comm.json;
+    # None keeps the modelled constant
+    crossover_bytes: Optional[float] = None
 
     def __post_init__(self):
         if self.devices < 1:
@@ -178,7 +182,8 @@ class ClusterSpec:
         return CommModel(self.device_spec,
                          global_memory_enabled=self.global_memory,
                          ici_bandwidth=self.ici_bandwidth,
-                         ici_latency=self.ici_latency)
+                         ici_latency=self.ici_latency,
+                         crossover_override=self.crossover_bytes)
 
     # ---- dict round-trip ----------------------------------------------
 
@@ -194,6 +199,7 @@ class ClusterSpec:
             "ici_bandwidth": self.ici_bandwidth,
             "ici_latency": self.ici_latency,
             "global_memory": self.global_memory,
+            "crossover_bytes": self.crossover_bytes,
         }
 
     @classmethod
@@ -208,6 +214,59 @@ class ClusterSpec:
         elif isinstance(dev, Mapping):
             dev = DeviceSpec(**dev)
         d["device"] = dev
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class ServeSpec:
+    """Execution-backend knobs for the live serving plane as data.
+
+    ``session.serve(spec=ServeSpec(backend="processes"))`` threads these
+    into ``PipelineEngine``/``MultiTenantEngine``: ``backend`` picks the
+    thread pool (default, the bit-pinned baseline) or the worker-process
+    pool with shared-memory transport (``repro.serving.workers``);
+    ``comm_mechanism`` pins the per-edge hand-off for A/B runs ("auto"
+    routes by the comm crossover); the fault knobs (``max_retries``,
+    ``retry_backoff``, ``deadline``) are PR-8 semantics on both backends.
+    """
+    backend: str = "threads"               # "threads" | "processes"
+    comm_mechanism: str = "auto"           # "auto" | "device" | "host"
+    batch_timeout: float = 0.05
+    start_method: str = "spawn"            # jax-safe; "fork" starts faster
+    shm_slots: int = 32                    # per-worker arena ring slots
+    shm_slot_bytes: int = 1 << 20          # per-slot payload capacity
+    supervise_timeout: float = 5.0         # hung-worker heartbeat silence
+    max_retries: int = 0
+    retry_backoff: float = 0.0
+    deadline: Optional[float] = None
+
+    def __post_init__(self):
+        if self.backend not in ("threads", "processes"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.comm_mechanism not in ("auto", "device", "host"):
+            raise ValueError(
+                f"unknown comm_mechanism {self.comm_mechanism!r}")
+
+    def engine_kwargs(self) -> dict:
+        """The knobs in engine-constructor keyword form."""
+        return {
+            "backend": self.backend,
+            "comm_mechanism": self.comm_mechanism,
+            "batch_timeout": self.batch_timeout,
+            "start_method": self.start_method,
+            "shm_slots": self.shm_slots,
+            "shm_slot_bytes": self.shm_slot_bytes,
+            "supervise_timeout": self.supervise_timeout,
+            "max_retries": self.max_retries,
+            "retry_backoff": self.retry_backoff,
+            "deadline": self.deadline,
+        }
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "ServeSpec":
         return cls(**d)
 
 

@@ -38,6 +38,10 @@ class CommModel:
     global_memory_enabled: bool = True
     ici_bandwidth: float = 50e9        # cross-slice (TPU) B/s
     ici_latency: float = 2e-6
+    # measured Fig. 11 crossover (benchmarks/bench_comm.py live sweep /
+    # repro.serving.transport.measure_transport); None keeps the modelled
+    # constant below.  ClusterSpec(crossover_bytes=...) lands here.
+    crossover_override: Optional[float] = None
 
     def host_staged_time(self, nbytes: float, concurrent: int = 1) -> float:
         """Two PCIe copies (D2H + H2D) with ``concurrent`` streams sharing
@@ -66,7 +70,12 @@ class CommModel:
                    self.host_staged_time(nbytes, concurrent))
 
     def crossover_bytes(self) -> float:
-        """Data size above which global-memory wins (paper: ~0.02 MB)."""
+        """Data size above which global-memory wins (paper: ~0.02 MB).
+        A measured ``crossover_override`` takes precedence over the
+        modelled constant, so mechanism selection can be driven by
+        observed hand-off timings."""
+        if self.crossover_override is not None:
+            return float(self.crossover_override)
         dev = self.device
         return max(0.0, (dev.ipc_latency - 2 * dev.host_link_latency)
                    * dev.host_link_stream / 2)
@@ -184,6 +193,18 @@ class EdgeChannel:
         if mech == GLOBAL_MEMORY:
             return self.device_handoff.send(array)
         return self.host_staged.send(array)
+
+    def record(self, mechanism: str, nbytes: int) -> None:
+        """Stats-only accounting for a transfer executed ELSEWHERE — the
+        process serving backend moves payloads in worker processes (shm
+        hand-off / pickle queue) and reports the pick here, so per-edge
+        mechanism counters read identically across backends."""
+        self.picks[mechanism] += 1
+        if mechanism == GLOBAL_MEMORY:
+            self.device_handoff.transfers += 1
+        else:
+            self.host_staged.transfers += 1
+            self.host_staged.bytes_moved += int(nbytes) * 2
 
     @property
     def transfers(self) -> int:

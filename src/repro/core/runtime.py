@@ -119,6 +119,15 @@ class HealthMonitor:
     def mark_dead(self, device: int) -> None:
         self._dead.add(int(device))
 
+    def reset_device(self, device: int) -> None:
+        """Forget a device's liveness record — a restarted worker/device
+        must not inherit its predecessor's silence (the process serving
+        plane re-tracks a replacement worker from its spawn time)."""
+        device = int(device)
+        self._dead.discard(device)
+        self._last.pop(device, None)
+        self._gap.pop(device, None)
+
     def dead_devices(self, now: float) -> List[int]:
         """Devices declared dead: marked explicitly, or seen alive once
         and then silent past the heartbeat timeout.  A device that never

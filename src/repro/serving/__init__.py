@@ -1,6 +1,13 @@
 from repro.serving.engine import (ModelStageServer, MultiTenantEngine,
                                   PipelineEngine, Query, ServeStats,
                                   make_trace)
+from repro.serving.transport import (ArenaMap, PayloadRef, ShmArena,
+                                     measure_transport, measured_crossover,
+                                     select_transport)
+from repro.serving.workers import CpuStageServer, WorkerPool, WorkerSupervisor
 
 __all__ = ["ModelStageServer", "MultiTenantEngine", "PipelineEngine",
-           "Query", "ServeStats", "make_trace"]
+           "Query", "ServeStats", "make_trace",
+           "ArenaMap", "PayloadRef", "ShmArena", "measure_transport",
+           "measured_crossover", "select_transport",
+           "CpuStageServer", "WorkerPool", "WorkerSupervisor"]

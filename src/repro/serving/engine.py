@@ -18,6 +18,28 @@ barrier and feeds the consumer a deterministic, branch-order-independent
 combination of the predecessor outputs; with several exit nodes a query
 completes only when every exit has produced it.
 
+Two execution backends share this driver (``backend=`` knob):
+
+  * ``"threads"`` (default, the pre-process-plane behaviour, bit-pinned):
+    stage instances dispatch onto one shared ``ThreadPoolExecutor`` —
+    fine for jitted calls that release the GIL;
+  * ``"processes"``: stage instances run in a persistent worker-process
+    pool (``repro.serving.workers``, one worker pinned per placed
+    device, spawned once and reused across traces), and inter-stage
+    payloads travel over ``repro.serving.transport`` — shared-memory
+    hand-off above the ``CommModel`` crossover (the paper's
+    global-memory mechanism, written once and mapped zero-copy), pickle
+    queue below it (host-staged).  The scheduling state machine stays
+    here in the driver; only ``process()`` execution and payload
+    transport cross the process boundary, and a crashed worker process
+    is detected, restarted, and its in-flight batches replayed within
+    the retry budget (``WorkerSupervisor``).
+
+Retry backoff is driver-scheduled on BOTH backends: a failing batch is
+requeued with a timed wake (``retry_backoff × 2^attempt``) instead of
+sleeping inside a worker slot, so a backing-off batch never idles an
+otherwise-free instance.
+
 It validates Camelot's mechanisms end-to-end and produces the real step
 timings that calibrate the simulator's profiles (``profile_stage_timings``
 → ``repro.core.predictor.profile_from_engine``).  ``apply_allocation``
@@ -30,20 +52,25 @@ import queue
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from dataclasses import dataclass, field
+from heapq import heappop, heappush
+from itertools import count
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ModelConfig, get_config
-from repro.core.comm import CommModel, EdgeChannel
+from repro.core.comm import (GLOBAL_MEMORY, HOST_STAGED, CommModel,
+                             EdgeChannel)
 from repro.core.exec import (BatchingPolicy, ExecCore, ReadyBatch,
                              StageInstance, default_allocation)
 from repro.core.qos import QoSTracker
 from repro.core.types import RTX_2080TI, Allocation, ServiceGraph
 from repro.models import init_params, serve_prefill
+from repro.serving.transport import SHM, PayloadRef
+from repro.serving.workers import WorkerPool, WorkerSupervisor, stage_blob
 
 
 @dataclass
@@ -66,6 +93,8 @@ class ModelStageServer:
 
     def __init__(self, name: str, arch: str, seq_len: int = 32, seed: int = 0):
         self.name = name
+        self._arch = arch
+        self._seed = seed
         self.cfg: ModelConfig = get_config(arch, reduced=True)
         self.seq_len = seq_len
         self.params = init_params(jax.random.PRNGKey(seed), self.cfg)
@@ -87,6 +116,14 @@ class ModelStageServer:
         self._stats_lock = threading.Lock()
         self.calls = 0
         self.busy_time = 0.0
+
+    def __reduce__(self):
+        """Rebuild from construction arguments across process boundaries:
+        params re-init deterministically from the seed, so a worker-side
+        replica computes exactly what the driver-side original would —
+        jitted callables and locks never cross the boundary."""
+        return (ModelStageServer,
+                (self.name, self._arch, self.seq_len, self._seed))
 
     def warmup(self, batch: int):
         t = jnp.zeros((batch, self.seq_len), jnp.int32)
@@ -183,8 +220,10 @@ class PipelineEngine:
     omitted, a trivial 1-instance-per-node allocation is built.
     ``comm_mechanism``: "auto" routes each edge payload via the crossover
     rule; "device"/"host" pin the mechanism for A/B comparisons.
-    ``max_retries``/``retry_backoff``/``deadline`` are the fault knobs —
-    see ``MultiTenantEngine``.
+    ``max_retries``/``retry_backoff``/``deadline`` are the fault knobs,
+    ``backend``/``start_method``/``shm_slots``/``shm_slot_bytes``/
+    ``supervise_timeout`` the execution-backend knobs — see
+    ``MultiTenantEngine``.
     """
 
     def __init__(self, stages: Sequence, comm_mechanism: str = "auto",
@@ -194,7 +233,10 @@ class PipelineEngine:
                  comm_model: Optional[CommModel] = None,
                  graph: Optional[ServiceGraph] = None,
                  max_retries: int = 0, retry_backoff: float = 0.0,
-                 deadline: Optional[float] = None):
+                 deadline: Optional[float] = None,
+                 backend: str = "threads", start_method: str = "spawn",
+                 shm_slots: int = 32, shm_slot_bytes: int = 1 << 20,
+                 supervise_timeout: float = 5.0):
         assert comm_mechanism in ("auto", "device", "host")
         self.stages = list(stages)
         if graph is None:
@@ -216,8 +258,29 @@ class PipelineEngine:
             comm_mechanism=comm_mechanism, batch_timeout=batch_timeout,
             comm_model=self.comm_model, qos_targets=[qos_target],
             max_retries=max_retries, retry_backoff=retry_backoff,
-            deadline=deadline)
+            deadline=deadline, backend=backend, start_method=start_method,
+            shm_slots=shm_slots, shm_slot_bytes=shm_slot_bytes,
+            supervise_timeout=supervise_timeout)
         self.channels = self._inner.tenants[0].channels
+
+    @property
+    def backend(self) -> str:
+        return self._inner.backend
+
+    @property
+    def worker_restarts(self) -> int:
+        return self._inner.worker_restarts
+
+    def close(self) -> None:
+        """Release the worker-process pool (processes backend); no-op for
+        threads."""
+        self._inner.close()
+
+    def __enter__(self) -> "PipelineEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # read-through views over the inner engine's single tenant, so the
     # historical attribute surface (tests, benchmarks, runtimes) survives
@@ -264,15 +327,22 @@ def make_trace(n: int, qps: float, seq_len: int, vocab: int,
             for i in range(n)]
 
 
-def _stack_tokens(tokens_list: List[np.ndarray], batch_size: int) -> jax.Array:
+def _stack_tokens_np(tokens_list: List[np.ndarray],
+                     batch_size: int) -> np.ndarray:
     """Pad a partial batch to the stage's fixed batch size (one compiled
-    shape per stage) — shared by both engines."""
+    shape per stage), staying in host memory."""
     stacked = np.stack(tokens_list)
     if len(tokens_list) < batch_size:
         pad = np.zeros((batch_size - len(tokens_list),) + stacked.shape[1:],
                        stacked.dtype)
         stacked = np.concatenate([stacked, pad])
-    return jnp.asarray(stacked)
+    return stacked
+
+
+def _stack_tokens(tokens_list: List[np.ndarray], batch_size: int) -> jax.Array:
+    """Device-resident variant of ``_stack_tokens_np`` — the threads
+    backend hands stages jax arrays directly."""
+    return jnp.asarray(_stack_tokens_np(tokens_list, batch_size))
 
 
 def _fanin_combine(stages: Sequence, node: int,
@@ -287,8 +357,10 @@ def _fanin_combine(stages: Sequence, node: int,
     handed = arrs[0]
     for a in arrs[1:]:
         handed = handed + a
-    return jnp.tile(handed[:, None] % nxt.cfg.vocab_size,
-                    (1, nxt.seq_len))
+    vocab = getattr(nxt, "vocab_size", None)
+    if vocab is None:
+        vocab = nxt.cfg.vocab_size
+    return jnp.tile(handed[:, None] % vocab, (1, nxt.seq_len))
 
 
 # --------------------------------------------------------------------------
@@ -303,6 +375,56 @@ class _TenantServe:
     alloc: Allocation
     channels: _EdgeChannels
     batch_size: int
+
+
+class _RetryQueue:
+    """Driver-side timed retry requeue (the non-blocking backoff fix).
+
+    A failing batch no longer sleeps out its backoff inside a worker slot
+    — the slot is released immediately and the batch re-enters its ready
+    queue once ``retry_backoff × 2^attempt`` has elapsed, so an
+    otherwise-free instance keeps serving other batches meanwhile."""
+
+    def __init__(self):
+        self.heap: List[Tuple[float, int, int, ReadyBatch, int]] = []
+        self._seq = count()
+        self._attempts: Dict[Tuple[int, int], int] = {}
+
+    def schedule(self, wake: float, ti: int, rb: ReadyBatch,
+                 attempt: int) -> None:
+        heappush(self.heap, (wake, next(self._seq), ti, rb, attempt))
+
+    def due(self, now: float) -> List[Tuple[int, ReadyBatch, int]]:
+        out = []
+        while self.heap and self.heap[0][0] <= now:
+            _, _, ti, rb, attempt = heappop(self.heap)
+            out.append((ti, rb, attempt))
+        return out
+
+    def next_wake(self) -> Optional[float]:
+        return self.heap[0][0] if self.heap else None
+
+    def __bool__(self) -> bool:
+        return bool(self.heap)
+
+    # a requeued batch re-enters core.ready; its attempt count rides here
+    # until the dispatch that re-submits it
+    def mark(self, ti: int, rb: ReadyBatch, attempt: int) -> None:
+        self._attempts[(ti, id(rb))] = attempt
+
+    def take(self, ti: int, rb: ReadyBatch) -> int:
+        return self._attempts.pop((ti, id(rb)), 0)
+
+
+@dataclass
+class _InFlight:
+    """Driver-side record of one batch executing in a worker process."""
+    ti: int
+    inst: StageInstance
+    rb: ReadyBatch
+    attempt: int
+    device: int
+    input_refs: List = field(default_factory=list)
 
 
 class MultiTenantEngine:
@@ -332,6 +454,19 @@ class MultiTenantEngine:
       arrival are abandoned at admission (per-query deadline, counted
       failed), so a degraded pool sheds backlog instead of serving
       un-meetable requests.
+
+    Backend knobs:
+
+    * ``backend`` — ``"threads"`` (default; bit-pinned pre-process-plane
+      behaviour) or ``"processes"`` (worker-process pool + shared-memory
+      transport; requires picklable stage servers);
+    * ``start_method`` — multiprocessing start method (``"spawn"`` is
+      jax-safe; ``"fork"`` starts faster for numpy-only stages);
+    * ``shm_slots``/``shm_slot_bytes`` — per-worker shared-memory ring
+      geometry (a full ring backpressures onto the queue mechanism);
+    * ``supervise_timeout`` — heartbeat silence after which a worker
+      process that still holds tasks is declared hung and restarted
+      (a process that DIED is restarted as soon as it is seen).
     """
 
     def __init__(self, tenant_stages: Sequence[Sequence],
@@ -341,8 +476,13 @@ class MultiTenantEngine:
                  comm_model: Optional[CommModel] = None,
                  qos_targets: Optional[Sequence[float]] = None,
                  max_retries: int = 0, retry_backoff: float = 0.0,
-                 deadline: Optional[float] = None):
+                 deadline: Optional[float] = None,
+                 backend: str = "threads", start_method: str = "spawn",
+                 shm_slots: int = 32, shm_slot_bytes: int = 1 << 20,
+                 supervise_timeout: float = 5.0):
         assert comm_mechanism in ("auto", "device", "host")
+        assert backend in ("threads", "processes"), \
+            f"unknown backend {backend!r}"
         assert len(tenant_stages) == len(graphs) == len(allocations), \
             "need stages, graph and allocation per tenant"
         self.comm_model = comm_model or CommModel(RTX_2080TI)
@@ -367,6 +507,31 @@ class MultiTenantEngine:
         self._pending_allocs: Optional[List[Allocation]] = None
         self._alloc_lock = threading.Lock()
         self.swaps = 0
+        # process-backend state: the pool is spawned lazily on the first
+        # trace (workers warm up at spawn) and reused across traces
+        self.backend = backend
+        self.comm_mechanism = comm_mechanism
+        self.start_method = start_method
+        self.shm_slots = int(shm_slots)
+        self.shm_slot_bytes = int(shm_slot_bytes)
+        self.supervise_timeout = float(supervise_timeout)
+        self.worker_restarts = 0
+        self._pool = None
+        self._supervisor = None
+
+    def close(self) -> None:
+        """Shut down the worker-process pool (processes backend); no-op
+        for threads.  The engine stays usable — the next trace respawns."""
+        if self._pool is not None:
+            self._pool.close()
+            self._pool = None
+            self._supervisor = None
+
+    def __enter__(self) -> "MultiTenantEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ---- live joint re-allocation -------------------------------------
 
@@ -404,6 +569,8 @@ class MultiTenantEngine:
         """Replay one query trace per tenant on the shared pool; returns
         one ``ServeStats`` per tenant (each against its own QoS target)."""
         assert len(traces) == len(self.tenants)
+        if self.backend == "processes":
+            return self._run_traces_processes(traces)
         stats = [ServeStats(qos=QoSTracker(qt)) for qt in self.qos_targets]
         for t in self.tenants:
             for st in t.stages:
@@ -413,6 +580,7 @@ class MultiTenantEngine:
                           comm=self.comm_model)
                  for t in self.tenants]
         completions: queue.Queue = queue.Queue()
+        retry = _RetryQueue()
         in_flight = 0
         idx = [0] * len(self.tenants)
         lens = [len(tr) for tr in traces]
@@ -420,9 +588,10 @@ class MultiTenantEngine:
         total_inst = sum(len(c.instances) for c in cores)
         with ThreadPoolExecutor(max_workers=max(total_inst, 1)) as ex:
             while any(i < n for i, n in zip(idx, lens)) or in_flight \
-                    or any(c.has_work() for c in cores):
+                    or retry or any(c.has_work() for c in cores):
                 now = time.perf_counter() - start
                 self._apply_pending(cores, ex)
+                self._requeue_due(retry, cores, now)
                 for ti, (t, core, tr) in enumerate(
                         zip(self.tenants, cores, traces)):
                     while idx[ti] < lens[ti] and \
@@ -443,13 +612,17 @@ class MultiTenantEngine:
                             [q.tokens for q in rb.items], t.batch_size)
                     for inst, rb in core.dispatch(now):
                         in_flight += 1
-                        ex.submit(self._worker, ti, inst, rb, completions)
+                        ex.submit(self._worker, ti, inst, rb, completions,
+                                  retry.take(ti, rb))
                 # sleep until the next event across ALL tenants
                 wake = [traces[ti][idx[ti]].arrival
                         for ti in range(len(self.tenants))
                         if idx[ti] < lens[ti]]
                 wake += [d for d in (c.batch_deadline() for c in cores)
                          if d is not None]
+                rw = retry.next_wake()
+                if rw is not None:
+                    wake.append(rw)
                 timeout = (min(wake) - now) if wake else 0.05
                 timeout = min(max(timeout, 0.0005), 0.05)
                 try:
@@ -458,54 +631,280 @@ class MultiTenantEngine:
                     continue
                 while True:
                     in_flight -= 1
-                    self._complete(ev, cores, stats, start)
+                    self._complete(ev, cores, stats, start, retry)
                     try:
                         ev = completions.get_nowait()
                     except queue.Empty:
                         break
         return stats
 
+    # ---- process backend ----------------------------------------------
+
+    def _ensure_pool(self, cores: List[ExecCore], now: float) -> None:
+        """Spawn the worker pool on first use (workers warm up in their
+        own processes) and add workers for any newly placed device."""
+        if self._pool is None:
+            force = (None if self.comm_mechanism == "auto"
+                     else self.comm_mechanism)
+            self._pool = WorkerPool(
+                stage_blob([t.stages for t in self.tenants]),
+                [t.batch_size for t in self.tenants],
+                self.comm_model.crossover_bytes(), force=force,
+                shm_ok=self.comm_model.global_memory_enabled,
+                start_method=self.start_method, slots=self.shm_slots,
+                slot_bytes=self.shm_slot_bytes)
+            self._supervisor = WorkerSupervisor(
+                self._pool, heartbeat_timeout=self.supervise_timeout)
+        devices = sorted({inst.device for core in cores
+                          for inst in core.instances})
+        for d in self._pool.ensure(devices):
+            self._supervisor.track(d, now)
+
+    def _run_traces_processes(self,
+                              traces: Sequence[List[Query]]) \
+            -> List[ServeStats]:
+        """The multi-process twin of the threads driver loop.
+
+        Scheduling (admission, deadlines, batching, dispatch, joins, QoS)
+        is the SAME ``ExecCore`` flow; what differs is execution — batches
+        run in worker processes keyed by placed device — and transport:
+        stage outputs stay put in the producer's shared-memory arena and
+        only a ``PayloadRef`` travels through the driver when the payload
+        is above the comm crossover (queue pickling below it).  The driver
+        is the single freer of arena slots: a producer's output slot is
+        pinned once per consumer edge and freed when the last consuming
+        batch reaches a terminal state, so retries and out-of-order joins
+        can always re-map their inputs."""
+        stats = [ServeStats(qos=QoSTracker(qt)) for qt in self.qos_targets]
+        cores = [ExecCore(t.graph, t.alloc.placement,
+                          BatchingPolicy(t.batch_size, self.batch_timeout),
+                          comm=self.comm_model)
+                 for t in self.tenants]
+        self._ensure_pool(cores, 0.0)
+        pool, sup = self._pool, self._supervisor
+        retry = _RetryQueue()
+        fid_gen = count()
+        inflight: Dict[int, _InFlight] = {}
+        # slot refcounts: ref.key() -> [consumers_left, ref]; a bid's live
+        # refs are also indexed by (ti, bid) so abandonment can reclaim
+        # slots whose consumers will never run
+        pins: Dict[Tuple[str, int], List] = {}
+        bid_refs: Dict[Tuple[int, int], Set[Tuple[str, int]]] = {}
+
+        def unpin(refs: List[PayloadRef]) -> None:
+            for ref in refs:
+                ent = pins.get(ref.key())
+                if ent is None:            # already reclaimed via its bid
+                    continue
+                ent[0] -= 1
+                if ent[0] <= 0:
+                    del pins[ref.key()]
+                    pool.free(ref)
+
+        def drop_bid(ti: int, bid: int) -> None:
+            for key in bid_refs.pop((ti, bid), ()):
+                ent = pins.pop(key, None)
+                if ent is not None:
+                    pool.free(ent[1])
+
+        def fail_or_retry(fl: _InFlight, now: float) -> None:
+            core = cores[fl.ti]
+            if fl.rb.bid in core._abandoned:
+                return
+            if self._fail_or_retry(fl.ti, fl.rb, fl.attempt, core,
+                                   stats[fl.ti], retry, now):
+                return                     # replay re-maps the input refs
+            unpin(fl.input_refs)
+            drop_bid(fl.ti, fl.rb.bid)
+
+        idx = [0] * len(self.tenants)
+        lens = [len(tr) for tr in traces]
+        # workers (re-)tracked per run: supervisor heartbeats are
+        # trace-relative times
+        for d in pool.devices():
+            sup.track(d, 0.0)
+        start = time.perf_counter()
+        while any(i < n for i, n in zip(idx, lens)) or inflight \
+                or retry or any(c.has_work() for c in cores):
+            now = time.perf_counter() - start
+            self._apply_pending(cores, None)
+            self._ensure_pool(cores, now)
+            # worker supervision: a dead/hung worker process is replaced
+            # and its in-flight batches replayed within the retry budget
+            for d in sup.dead_workers(now):
+                self.worker_restarts += 1
+                for fid in sorted(sup.restart(d, now)):
+                    fl = inflight.pop(fid, None)
+                    if fl is None:
+                        continue
+                    cores[fl.ti].release(fl.inst, busy_for=0.0)
+                    fail_or_retry(fl, now)
+            self._requeue_due(retry, cores, now)
+            for ti, (t, core, tr) in enumerate(
+                    zip(self.tenants, cores, traces)):
+                while idx[ti] < lens[ti] and tr[idx[ti]].arrival <= now:
+                    core.admit(tr[idx[ti]], tr[idx[ti]].arrival)
+                    idx[ti] += 1
+                if self.deadline is not None and core.pending:
+                    keep = [(a, q) for a, q in core.pending
+                            if now - a <= self.deadline]
+                    n_drop = len(core.pending) - len(keep)
+                    if n_drop:
+                        core.pending = keep
+                        stats[ti].failed += n_drop
+                for rb in core.form_batches(now):
+                    # host-resident stacking: workers are jax-free
+                    rb.data = _stack_tokens_np(
+                        [q.tokens for q in rb.items], t.batch_size)
+                for inst, rb in core.dispatch(now):
+                    fid = next(fid_gen)
+                    refs = [v for v in (rb.inputs or {}).values()
+                            if isinstance(v, PayloadRef)]
+                    inflight[fid] = _InFlight(ti, inst, rb,
+                                              retry.take(ti, rb),
+                                              inst.device, refs)
+                    if rb.inputs is not None:
+                        task = (fid, ti, rb.stage, None, dict(rb.inputs),
+                                inflight[fid].attempt)
+                    else:
+                        task = (fid, ti, rb.stage, rb.data, None,
+                                inflight[fid].attempt)
+                    pool.submit(inst.device, task)
+            wake = [traces[ti][idx[ti]].arrival
+                    for ti in range(len(self.tenants))
+                    if idx[ti] < lens[ti]]
+            wake += [d for d in (c.batch_deadline() for c in cores)
+                     if d is not None]
+            rw = retry.next_wake()
+            if rw is not None:
+                wake.append(rw)
+            timeout = (min(wake) - now) if wake else 0.05
+            timeout = min(max(timeout, 0.0005), 0.05)
+            for ev in pool.poll(timeout):
+                self._complete_proc(ev, cores, stats, start, retry,
+                                    inflight, pins, bid_refs, unpin,
+                                    drop_bid, fail_or_retry)
+        return stats
+
+    def _complete_proc(self, ev, cores: List[ExecCore],
+                       stats: List[ServeStats], start: float,
+                       retry: "_RetryQueue",
+                       inflight: Dict[int, _InFlight],
+                       pins: Dict, bid_refs: Dict,
+                       unpin, drop_bid, fail_or_retry) -> None:
+        """Fold one worker completion into the scheduling state — the
+        process-backend mirror of ``_complete`` plus slot-lifecycle and
+        mechanism accounting (each hand-off is recorded on its edge's
+        ``EdgeChannel`` so per-edge stats read identically across
+        backends)."""
+        pool, sup = self._pool, self._supervisor
+        wid, fid, payload, dt, err, mech, nbytes, t_comm = ev
+        now = time.perf_counter() - start
+        sup.beat(wid, now)
+        fl = inflight.pop(fid, None)
+        if fl is None:
+            # completion from a replaced worker generation — the batch was
+            # already replayed or failed; reclaim an orphan shm payload
+            if isinstance(payload, PayloadRef):
+                pool.free(payload)
+            return
+        ti, rb = fl.ti, fl.rb
+        t = self.tenants[ti]
+        core = cores[ti]
+        core.release(fl.inst, busy_for=dt)
+        if err is not None:
+            fail_or_retry(fl, now)
+            return
+        if rb.bid in core._abandoned:      # a sibling branch failed
+            if isinstance(payload, PayloadRef):
+                pool.free(payload)
+            return
+        stats[ti].compute_time += dt
+        stats[ti].comm_time += t_comm
+        # this batch is terminal for its inputs: release their slot pins
+        unpin(fl.input_refs)
+        u = rb.stage
+        succs = core.succs[u]
+        if succs:
+            if isinstance(payload, PayloadRef):
+                pins[payload.key()] = [len(succs), payload]
+                bid_refs.setdefault((ti, rb.bid), set()).add(payload.key())
+            mech_name = GLOBAL_MEMORY if mech == SHM else HOST_STAGED
+            for v in succs:
+                t.channels[(u, v)].record(mech_name, nbytes)
+                # joined batches keep raw inputs: the CONSUMER's worker
+                # resolves refs and runs the fan-in combine process-side
+                core.deliver(u, v, rb.bid, rb.items, now, data=payload)
+        else:
+            if isinstance(payload, PayloadRef):
+                pool.free(payload)
+            if core.complete_exit(rb.bid, u):
+                for q in rb.items:
+                    q.done = now
+                    stats[ti].qos.record(now - q.arrival)
+                stats[ti].batches += 1
+                drop_bid(ti, rb.bid)
+
     # ---- internals -----------------------------------------------------
 
     def _worker(self, ti: int, inst: StageInstance, rb: ReadyBatch,
-                completions: queue.Queue) -> None:
-        """One stage execution with bounded in-place retry.  The worker
-        owns its thread, so backoff sleeps here never stall the driver;
-        every outcome — success or exhausted retries — is reported through
-        the completions queue so the driver can always drain."""
+                completions: queue.Queue, attempt: int = 0) -> None:
+        """ONE stage execution attempt.  Retries are scheduled by the
+        driver as timed requeues (``_RetryQueue``) — the pre-fix behaviour
+        slept the backoff out right here, pinning the worker slot (and the
+        stage instance holding it) idle for the whole backoff window."""
         t0 = time.perf_counter()
-        out = err = None
-        attempts = 0
-        for attempt in range(self.max_retries + 1):
-            attempts = attempt + 1
-            try:
-                out, err = \
-                    self.tenants[ti].stages[inst.stage].process(rb.data), \
-                    None
-                break
-            except BaseException as e:
-                out, err = None, e
-                if attempt < self.max_retries and self.retry_backoff > 0.0:
-                    time.sleep(self.retry_backoff * (2 ** attempt))
+        try:
+            out, err = \
+                self.tenants[ti].stages[inst.stage].process(rb.data), None
+        except BaseException as e:
+            out, err = None, e
         completions.put((ti, inst, rb, out, time.perf_counter() - t0, err,
-                         attempts))
+                         attempt))
+
+    def _fail_or_retry(self, ti: int, rb: ReadyBatch, attempt: int,
+                       core: ExecCore, stats: ServeStats,
+                       retry: "_RetryQueue", now: float) -> bool:
+        """Shared failure policy for both backends: schedule a timed
+        requeue while the retry budget lasts, else fail + abandon the
+        batch.  Returns True when a retry was scheduled."""
+        if rb.bid in core._abandoned:
+            return False
+        if attempt < self.max_retries:
+            stats.retries += 1
+            retry.schedule(now + self.retry_backoff * (2 ** attempt),
+                           ti, rb, attempt + 1)
+            return True
+        # the retry budget is spent: record the batch as failed and
+        # abandon it so its join/exit bookkeeping cannot strand
+        # ``has_work`` — the pre-fix behaviour re-raised in the worker,
+        # leaking the batch and deadlocking the driver loop on in_flight
+        # work that no longer existed
+        stats.failed += len(rb.items)
+        core.abandon(rb.bid)
+        return False
+
+    def _requeue_due(self, retry: "_RetryQueue", cores: List[ExecCore],
+                     now: float) -> None:
+        """Re-enter backed-off batches whose wake time has passed into
+        their stage's ready queue (their attempt count rides in the retry
+        queue until dispatch re-submits them)."""
+        for ti, rb, attempt in retry.due(now):
+            if rb.bid in cores[ti]._abandoned:
+                continue
+            retry.mark(ti, rb, attempt)
+            cores[ti].ready[rb.stage].append(rb)
 
     def _complete(self, ev, cores: List[ExecCore],
-                  stats: List[ServeStats], start: float) -> None:
-        ti, inst, rb, out, dt, err, attempts = ev
+                  stats: List[ServeStats], start: float,
+                  retry: "_RetryQueue") -> None:
+        ti, inst, rb, out, dt, err, attempt = ev
         t = self.tenants[ti]
         core = cores[ti]
         core.release(inst, busy_for=dt)
-        stats[ti].retries += attempts - 1
         if err is not None:
-            # the retry budget is spent: record the batch as failed and
-            # abandon it so its join/exit bookkeeping cannot strand
-            # ``has_work`` — the pre-fix behaviour re-raised here, leaking
-            # the batch and deadlocking the driver loop on in_flight work
-            # that no longer existed
-            if rb.bid not in core._abandoned:
-                stats[ti].failed += len(rb.items)
-                core.abandon(rb.bid)
+            self._fail_or_retry(ti, rb, attempt, core, stats[ti], retry,
+                                time.perf_counter() - start)
             return
         stats[ti].compute_time += dt
         u = rb.stage

@@ -425,6 +425,25 @@ def test_worker_retry_recovers():
     assert stats.qos.count() == 4
 
 
+def test_retry_backoff_does_not_idle_the_instance():
+    """Regression for the non-blocking retry queue: a batch waiting out its
+    backoff used to SLEEP inside the worker slot, idling the instance.  With
+    the driver-side timed requeue, the three healthy single-query batches
+    must complete while the failed batch is still backing off."""
+    stage = FailingStage(fail_first=1, service_time=0.005)
+    eng = PipelineEngine([stage], allocation=default_allocation(1, batch=1),
+                         qos_target=5.0, batch_timeout=0.0,
+                         max_retries=1, retry_backoff=0.3)
+    stats = _run_with_watchdog(lambda: eng.run_trace(_burst(4)))
+    assert stats.failed == 0 and stats.retries == 1
+    assert stats.qos.count() == 4
+    lat = sorted(stats.qos.latencies)      # arrival 0.0: latency == done time
+    # healthy queries finished on the free instance DURING the backoff...
+    assert all(t < 0.25 for t in lat[:3]), lat
+    # ...and the retried one completed only after the 0.3 s backoff elapsed
+    assert lat[3] >= 0.3, lat
+
+
 def test_deadline_abandons_stale_queries():
     eng = PipelineEngine([SleepStage()],
                          allocation=default_allocation(1, batch=4),

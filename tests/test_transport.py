@@ -1,0 +1,306 @@
+"""Process serving plane: shared-memory transport, worker pool, backend
+parity, supervised crash recovery, and the ServeSpec/ClusterSpec wiring."""
+import copy
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.comm import GLOBAL_MEMORY, HOST_STAGED, CommModel
+from repro.core.types import (RTX_2080TI, Allocation, MicroserviceProfile,
+                              Placement, ServiceEdge, ServiceGraph,
+                              StageAlloc)
+from repro.serving import (CpuStageServer, PipelineEngine, ShmArena,
+                           make_trace, measured_crossover, select_transport)
+from repro.serving.transport import QUEUE, SHM, ArenaMap, measure_transport
+from repro.camelot import ClusterSpec, ServeSpec
+
+
+# --------------------------------------------------------------------------
+# ShmArena slot ring
+# --------------------------------------------------------------------------
+
+def test_arena_roundtrip_bit_identity():
+    arena = ShmArena(slots=4, slot_bytes=1 << 16, create=True)
+    try:
+        for dtype in (np.int32, np.float64, np.uint8, np.int64):
+            arr = (np.arange(96, dtype=np.float64) * 3.7).astype(dtype)
+            arr = arr.reshape(8, 12)
+            ref = arena.try_put(arr)
+            assert ref is not None
+            assert ref.dtype == str(arr.dtype)
+            assert ref.shape == (8, 12)
+            view = arena.get(ref)
+            assert view.dtype == arr.dtype and view.shape == arr.shape
+            np.testing.assert_array_equal(view, arr)
+            arena.free(ref)
+    finally:
+        arena.close()
+        arena.unlink()
+
+
+def test_arena_accepts_non_contiguous():
+    arena = ShmArena(slots=2, slot_bytes=1 << 12, create=True)
+    try:
+        base = np.arange(64, dtype=np.int32).reshape(8, 8)
+        sliced = base[:, ::2]                    # strided view
+        ref = arena.try_put(sliced)
+        np.testing.assert_array_equal(arena.get(ref), sliced)
+        arena.free(ref)
+    finally:
+        arena.close()
+        arena.unlink()
+
+
+def test_arena_wraparound_and_backpressure():
+    arena = ShmArena(slots=3, slot_bytes=256, create=True)
+    try:
+        # fill the ring
+        refs = [arena.try_put(np.full((4,), i, np.int64)) for i in range(3)]
+        assert all(r is not None for r in refs)
+        assert arena.in_use() == 3
+        # full ring: backpressure, not blocking
+        assert arena.try_put(np.zeros((4,), np.int64)) is None
+        # free one slot -> the NEXT put lands in it (cursor wraps)
+        arena.free(refs[1])
+        r = arena.try_put(np.full((4,), 9, np.int64))
+        assert r is not None and r.slot == refs[1].slot
+        np.testing.assert_array_equal(arena.get(r),
+                                      np.full((4,), 9, np.int64))
+        # payloads in the other slots survived the reuse
+        np.testing.assert_array_equal(arena.get(refs[0]),
+                                      np.zeros((4,), np.int64))
+        # many wrap cycles keep working
+        for i in range(20):
+            arena.free(r)
+            r = arena.try_put(np.full((4,), i, np.int64))
+            assert r is not None
+    finally:
+        arena.close()
+        arena.unlink()
+
+
+def test_arena_rejects_oversized_payload():
+    arena = ShmArena(slots=2, slot_bytes=64, create=True)
+    try:
+        assert arena.try_put(np.zeros((100,), np.float64)) is None
+    finally:
+        arena.close()
+        arena.unlink()
+
+
+def test_arena_cross_attach_by_name():
+    owner = ShmArena(slots=2, slot_bytes=512, create=True)
+    try:
+        arr = np.arange(10, dtype=np.float32)
+        ref = owner.try_put(arr)
+        amap = ArenaMap()
+        amap.attach(owner.name, slots=2, slot_bytes=512)
+        np.testing.assert_array_equal(amap.get(ref), arr)
+        amap.free(ref)
+        assert owner.in_use() == 0
+        amap.close()
+    finally:
+        owner.close()
+        owner.unlink()
+
+
+# --------------------------------------------------------------------------
+# Mechanism selection + measured crossover
+# --------------------------------------------------------------------------
+
+def test_select_transport_matches_crossover_rule():
+    cm = CommModel(RTX_2080TI)
+    x = cm.crossover_bytes()
+    assert select_transport(cm, x / 2) == QUEUE
+    assert select_transport(cm, x * 2) == SHM
+    assert select_transport(cm, x * 2, shm_ok=False) == QUEUE
+    assert select_transport(cm, x / 2, force="device") == SHM
+    assert select_transport(cm, x * 2, force="host") == QUEUE
+
+
+def test_measured_crossover_interpolates():
+    sizes = [100, 1000, 10_000]
+    # queue wins at 100, shm from 1000 up
+    x = measured_crossover(sizes, [2.0, 1.0, 1.0], [1.0, 1.5, 10.0])
+    assert 100 < x <= 1000
+    # shm always wins -> crossover at the smallest measured size
+    assert measured_crossover(sizes, [1, 1, 1], [2, 2, 2]) == 100.0
+    # queue always wins -> "never pick shm"
+    assert measured_crossover(sizes, [3, 3, 3], [1, 1, 1]) > 10_000
+
+
+def test_measure_transport_feeds_cluster_override():
+    tr = measure_transport(sizes_bytes=[1 << 8, 1 << 14, 1 << 20],
+                           repeats=3)
+    assert len(tr["shm_s"]) == len(tr["queue_s"]) == 3
+    cluster = ClusterSpec(devices=1, crossover_bytes=tr["crossover_bytes"])
+    cm = cluster.comm_model()
+    assert cm.crossover_bytes() == pytest.approx(tr["crossover_bytes"])
+    d = ClusterSpec.from_dict(cluster.to_dict())
+    assert d.crossover_bytes == cluster.crossover_bytes
+
+
+# --------------------------------------------------------------------------
+# Backend parity: threads == processes ServeStats contract
+# --------------------------------------------------------------------------
+
+def _cpu_stages(n, spin=80):
+    return [CpuStageServer(f"s{i}", seq_len=8, vocab=64, spin=spin)
+            for i in range(n)]
+
+
+def _spread(n_stages, batch):
+    return Allocation(
+        stages=[StageAlloc(n_instances=1, quota=1.0, batch=batch)
+                for _ in range(n_stages)],
+        placement=Placement(per_stage=[[(i, 1.0)]
+                                       for i in range(n_stages)]))
+
+
+def _run(backend, stages, trace, **kw):
+    with PipelineEngine(stages, batch_size=4, batch_timeout=0.01,
+                        qos_target=30.0, backend=backend, **kw) as eng:
+        return eng.run_trace(copy.deepcopy(trace))
+
+
+def test_backend_default_is_threads():
+    eng = PipelineEngine(_cpu_stages(1))
+    assert eng.backend == "threads"
+    assert eng._inner._pool is None      # no process machinery spawned
+
+
+def test_backend_parity_chain():
+    trace = make_trace(16, qps=400.0, seq_len=8, vocab=64, seed=3)
+    a = _run("threads", _cpu_stages(3), trace).summary()
+    b = _run("processes", _cpu_stages(3), trace,
+             allocation=_spread(3, 4)).summary()
+    assert a["completed"] == b["completed"] == 16
+    assert a["failed"] == b["failed"] == 0
+    assert (a["p99"] <= 30.0) == (b["p99"] <= 30.0)
+
+
+def test_backend_parity_dag():
+    prof = MicroserviceProfile(
+        name="n", flops_per_query=1e9, mem_bytes_per_query=1e6,
+        host_bytes_per_query=1e5, weights_bytes=1e8,
+        act_bytes_per_query=1e6, overhead=1e-3, serial_frac=0.05)
+    g = ServiceGraph("diamond", [prof] * 4,
+                     [ServiceEdge(0, 1), ServiceEdge(0, 2),
+                      ServiceEdge(1, 3), ServiceEdge(2, 3)],
+                     qos_target=30.0)
+    trace = make_trace(12, qps=400.0, seq_len=8, vocab=64, seed=4)
+    a = _run("threads", _cpu_stages(4), trace, graph=g).summary()
+    b = _run("processes", _cpu_stages(4), trace, graph=g,
+             allocation=_spread(4, 4)).summary()
+    assert a["completed"] == b["completed"] == 12
+    assert a["failed"] == b["failed"] == 0
+
+
+def test_processes_respect_forced_mechanism():
+    trace = make_trace(8, qps=400.0, seq_len=8, vocab=64, seed=5)
+    stages = _cpu_stages(2)
+    with PipelineEngine(stages, batch_size=4, batch_timeout=0.01,
+                        qos_target=30.0, backend="processes",
+                        comm_mechanism="device",
+                        allocation=_spread(2, 4)) as eng:
+        stats = eng.run_trace(copy.deepcopy(trace))
+        ch = eng.channels[(0, 1)]
+        assert stats.failed == 0
+        # every edge hand-off went through the shm (global-memory) path
+        assert ch.picks[GLOBAL_MEMORY] > 0
+        assert ch.picks[HOST_STAGED] == 0
+    with PipelineEngine(_cpu_stages(2), batch_size=4, batch_timeout=0.01,
+                        qos_target=30.0, backend="processes",
+                        comm_mechanism="host",
+                        allocation=_spread(2, 4)) as eng:
+        stats = eng.run_trace(copy.deepcopy(trace))
+        ch = eng.channels[(0, 1)]
+        assert stats.failed == 0
+        assert ch.picks[GLOBAL_MEMORY] == 0
+        assert ch.picks[HOST_STAGED] > 0
+
+
+def test_unpicklable_stage_raises_actionable_error():
+    class Local:                        # closures/locals never pickle
+        def warmup(self, b):
+            pass
+
+        def process(self, t):
+            return t
+
+    trace = make_trace(4, qps=100.0, seq_len=8, vocab=64, seed=0)
+    with PipelineEngine([Local()], batch_size=4, batch_timeout=0.01,
+                        qos_target=30.0, backend="processes") as eng:
+        with pytest.raises((TypeError, AttributeError),
+                           match="pickl|Local"):
+            eng.run_trace(copy.deepcopy(trace))
+
+
+# --------------------------------------------------------------------------
+# Worker-crash supervision
+# --------------------------------------------------------------------------
+
+class CrashOnceStage:
+    """Hard-kills its worker PROCESS on the first call; a sentinel file
+    marks the crash so the replayed attempt (fresh process) proceeds."""
+
+    def __init__(self, name, sentinel, seq_len=8):
+        self.name = name
+        self.sentinel = sentinel
+        self.seq_len = seq_len
+        self.vocab_size = 64
+
+    def warmup(self, batch):
+        pass
+
+    def process(self, tokens):
+        if not os.path.exists(self.sentinel):
+            open(self.sentinel, "w").close()
+            os._exit(17)               # simulated segfault, not an exception
+        t = np.asarray(tokens)
+        return (t.reshape(t.shape[0], -1)[:, 0] % self.vocab_size).astype(
+            np.int32)
+
+
+def test_worker_crash_restarts_and_replays(tmp_path):
+    sentinel = str(tmp_path / "crashed")
+    stages = [CpuStageServer("s0", seq_len=8, vocab=64, spin=40),
+              CrashOnceStage("boom", sentinel)]
+    trace = make_trace(8, qps=500.0, seq_len=8, vocab=64, seed=6)
+    with PipelineEngine(stages, batch_size=4, batch_timeout=0.01,
+                        qos_target=60.0, backend="processes",
+                        allocation=_spread(2, 4),
+                        max_retries=2, retry_backoff=0.01,
+                        supervise_timeout=2.0) as eng:
+        stats = eng.run_trace(copy.deepcopy(trace))
+        assert eng.worker_restarts >= 1       # the process died and came back
+        assert stats.failed == 0              # no verdict lost
+        assert stats.qos.count() == 8
+        assert stats.retries >= 1             # replay rode the retry budget
+
+
+# --------------------------------------------------------------------------
+# ServeSpec facade wiring
+# --------------------------------------------------------------------------
+
+def test_servespec_roundtrip_and_validation():
+    spec = ServeSpec(backend="processes", comm_mechanism="device",
+                     max_retries=2, retry_backoff=0.1, shm_slots=8)
+    assert ServeSpec.from_dict(spec.to_dict()) == spec
+    kw = spec.engine_kwargs()
+    assert kw["backend"] == "processes" and kw["shm_slots"] == 8
+    with pytest.raises(ValueError):
+        ServeSpec(backend="fibers")
+    with pytest.raises(ValueError):
+        ServeSpec(comm_mechanism="carrier-pigeon")
+
+
+def test_servespec_drives_engine_knobs():
+    spec = ServeSpec(backend="processes", supervise_timeout=7.5,
+                     max_retries=3)
+    eng = PipelineEngine(_cpu_stages(1), **spec.engine_kwargs())
+    assert eng.backend == "processes"
+    assert eng._inner.supervise_timeout == 7.5
+    assert eng._inner.max_retries == 3
+    eng.close()
